@@ -1,0 +1,56 @@
+"""Shared benchmark plumbing: timing, CSV emission, device-count subprocesses.
+
+The scaling benches reproduce the paper's 1→32-machine experiments by
+re-launching themselves in a subprocess with
+``--xla_force_host_platform_device_count=N`` (the device count must be fixed
+before jax initializes, so it cannot change inside one process).  On this
+CPU container the 'machines' share cores — the *shape* of the scaling curve
+(weak-scaling flatness, strong-scaling slope) is the reproduced claim, not
+absolute walltime; see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Any, Callable, Dict, List
+
+
+def timeit(fn: Callable[[], Any], warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn() (blocks on jax arrays)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run_with_devices(module: str, devices: int, payload: Dict[str, Any],
+                     timeout: int = 560) -> Dict[str, Any]:
+    """Re-exec ``python -m <module> --_worker`` with N host devices; the
+    worker reads the JSON payload on stdin and prints a JSON result."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-m", module, "--_worker"],
+        input=json.dumps(payload), capture_output=True, text=True,
+        env=env, timeout=timeout, cwd=os.path.dirname(os.path.dirname(__file__)) or ".",
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"{module} worker failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def emit(name: str, rows: List[Dict[str, Any]]) -> None:
+    """Print a small CSV block: name,key=value,... one row per line."""
+    for r in rows:
+        fields = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{fields}")

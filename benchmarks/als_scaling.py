@@ -1,0 +1,91 @@
+"""Paper Figs. 3b/3c (weak) and A7/A8 (strong) for ALS matrix factorization
+on tiled synthetic-Netflix data, paper hyperparameters (rank 10, λ=.01,
+10 iterations).
+
+    PYTHONPATH=src python -m benchmarks.als_scaling --mode weak
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks._util import emit, run_with_devices
+
+ITERS = 10
+RANK = 10
+LAM = 0.01
+
+
+def _worker() -> None:
+    import jax
+    import numpy as np
+
+    from repro.core.algorithms.als import (ALSParameters, BroadcastALS,
+                                           pack_csr_table)
+    from repro.data import synth_netflix_tiled
+    from benchmarks._util import timeit
+
+    cfgj = json.loads(sys.stdin.read())
+    tiles = cfgj["tiles"]
+    devices = len(jax.devices())
+    mesh = jax.make_mesh((devices,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    # tile to a device-divisible user/item count
+    users = 64 * devices if cfgj["mode"] == "strong_base" else 64
+    M = synth_netflix_tiled(users=64, items=48, rank=4, tiles=tiles, density=0.2)
+    # pad rows to divide the mesh
+    m, n = M.shape
+    pad_m = (-m) % devices
+    pad_n = (-n) % devices
+    M = np.pad(M, ((0, pad_m), (0, pad_n)))
+    m, n = M.shape
+    r, c = np.nonzero(M)
+    v = M[r, c]
+    max_nnz = int(max((M != 0).sum(1).max(), (M != 0).sum(0).max()))
+    data = pack_csr_table(r, c, v, m, max_nnz, mesh=mesh)
+    data_t = pack_csr_table(c, r, v, n, max_nnz, mesh=mesh)
+    p = ALSParameters(rank=RANK, lam=LAM, max_iter=ITERS)
+
+    def run():
+        return BroadcastALS.train(data, p, data_transposed=data_t).U
+
+    t = timeit(run, warmup=1, iters=3)
+    model = BroadcastALS.train(data, p, data_transposed=data_t)
+    rmse = float(model.rmse(r, c, v))
+    print(json.dumps({"devices": devices, "seconds": t, "rmse": rmse,
+                      "nnz": int(len(v))}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["weak", "strong", "both"], default="both")
+    ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args()
+    if args._worker:
+        _worker()
+        return
+
+    dev_counts = [int(x) for x in args.devices.split(",")]
+    modes = ["weak", "strong"] if args.mode == "both" else [args.mode]
+    for mode in modes:
+        rows = []
+        base = None
+        for nd in dev_counts:
+            tiles = nd if mode == "weak" else 4     # paper: 9x fixed for strong
+            res = run_with_devices("benchmarks.als_scaling", nd,
+                                   {"tiles": tiles, "mode": mode})
+            if base is None:
+                base = res["seconds"]
+            rows.append({"devices": nd, "tiles": tiles, "nnz": res["nnz"],
+                         "seconds": round(res["seconds"], 3),
+                         "relative": round(res["seconds"] / base, 3),
+                         "speedup": round(base / res["seconds"], 3),
+                         "rmse": round(res["rmse"], 4)})
+        emit(f"als_{mode}_scaling", rows)
+
+
+if __name__ == "__main__":
+    main()

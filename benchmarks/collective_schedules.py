@@ -1,0 +1,97 @@
+"""The paper's §IV-A communication comparison: MLI's gather-to-master +
+broadcast vs VW's tree AllReduce (plus our beyond-paper reduce-scatter).
+
+Two views:
+  1. *Correctness/time on emulated devices* — run the same local-SGD round
+     under each schedule and time it (the schedules are algebraically equal;
+     walltime on CPU mostly shows dispatch overhead).
+  2. *Wire bytes on the production mesh* — lower one combine per schedule on
+     the 16×16 mesh (in a 512-device subprocess) and count collective bytes
+     in the HLO: this is the property the paper actually reasons about
+     (O(N·d) in for gather vs O(d) for allreduce).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks._util import emit, run_with_devices
+
+D = 4096
+
+
+def _worker() -> None:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.collectives import CollectiveSchedule, combine_mean
+    from repro.launch.dryrun import collective_bytes  # parser only (no mesh use)
+
+    json.loads(sys.stdin.read())
+    mesh = jax.make_mesh((16, 16), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = {}
+    for sched in CollectiveSchedule:
+        def spmd(w):
+            return combine_mean(w, ("data",), sched)
+
+        f = jax.jit(jax.shard_map(spmd, mesh=mesh,
+                                  in_specs=P("data"), out_specs=P(),
+                                  check_vma=False))
+        lowered = f.lower(jax.ShapeDtypeStruct((16 * D,), jnp.float32))
+        hlo = lowered.compile().as_text()
+        out[sched.value] = collective_bytes(hlo)
+    print(json.dumps(out))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args()
+    if args._worker:
+        _worker()
+        return
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.algorithms.logistic_regression import (
+        LogisticRegressionAlgorithm, LogisticRegressionParameters)
+    from repro.core.collectives import CollectiveSchedule
+    from repro.core.numeric_table import MLNumericTable
+    from repro.data import synth_classification
+    from benchmarks._util import timeit
+
+    # view 1: emulated-device walltime + agreement
+    X, y, _ = synth_classification(2048, 128, seed=0)
+    data = np.concatenate([y[:, None], X], 1).astype(np.float32)
+    table = MLNumericTable.from_numpy(data, num_shards=8)
+    rows, weights = [], {}
+    for sched in CollectiveSchedule:
+        p = LogisticRegressionParameters(learning_rate=0.5, max_iter=5,
+                                         local_batch_size=32, schedule=sched)
+        t = timeit(lambda: LogisticRegressionAlgorithm.train(table, p).weights,
+                   warmup=1, iters=3)
+        weights[sched] = np.asarray(LogisticRegressionAlgorithm.train(table, p).weights)
+        rows.append({"schedule": sched.value, "seconds": round(t, 3)})
+    ref = weights[CollectiveSchedule.ALLREDUCE]
+    for sched, w in weights.items():
+        drift = float(np.abs(w - ref).max())
+        assert drift < 1e-4, f"{sched}: schedules disagree by {drift}"
+    emit("collective_schedules_walltime", rows)
+
+    # view 2: wire bytes on the production mesh
+    res = run_with_devices("benchmarks.collective_schedules", 512, {})
+    rows = [{"schedule": k, "collective_bytes": v["total_bytes"],
+             **{f"n_{op}": n for op, n in v["count_by_op"].items() if n}}
+            for k, v in res.items()]
+    emit("collective_schedules_wire_bytes", rows)
+
+
+if __name__ == "__main__":
+    main()

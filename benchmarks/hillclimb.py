@@ -1,0 +1,153 @@
+"""§Perf hillclimb driver: measure one named variant of a target
+(arch × shape) pair through the same dry-run machinery as the baseline
+(lower + compile + probe-extrapolated roofline terms) and save JSON.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --list
+    PYTHONPATH=src python -m benchmarks.hillclimb --run h1a_granite_decode_serve_rules
+
+Each entry is one hypothesis→change→measure cycle; the log narrative lives
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+
+def _experiments():
+    # imported lazily — repro.launch.dryrun sets XLA_FLAGS on import
+    from repro.configs import get_config
+    from repro.sharding.rules import DEFAULT_RULES, SERVE_RULES
+
+    g = get_config
+
+    def cfg(arch, **kw):
+        return dataclasses.replace(g(arch), **kw)
+
+    return {
+        # --- H1: granite-3-8b decode_32k (most collective-bound pair) ----
+        "h1a_granite_decode_serve_rules": dict(
+            arch="granite-3-8b", shape="decode_32k", rules=SERVE_RULES),
+        "h1b_granite_decode_serve_rules_multipod": dict(
+            arch="granite-3-8b", shape="decode_32k", rules=SERVE_RULES,
+            multi_pod=True),
+        "h1c_granite_decode_seqpar_cache": dict(
+            arch="granite-3-8b", shape="decode_32k",
+            rules=DEFAULT_RULES.replace(kv_seq=("data", "model"))),
+        # H1d: serving-tuned mesh factorization — kv_heads(8) must divide the
+        # model axis for the cache IO layout to match GSPMD's head-parallel
+        # attention; (32, 8) removes the per-step cache all-gather entirely.
+        "h1d_granite_decode_mesh32x8": dict(
+            arch="granite-3-8b", shape="decode_32k", mesh_shape=(32, 8)),
+        "h1e_granite_decode_mesh32x8_serve_rules": dict(
+            arch="granite-3-8b", shape="decode_32k", mesh_shape=(32, 8),
+            rules=SERVE_RULES),
+        # --- H2: gemma3-1b train_4k (worst memory-bound; V=262144) -------
+        "h2a_gemma3_train_chunked_xent": dict(
+            arch="gemma3-1b", shape="train_4k",
+            cfg=cfg("gemma3-1b", loss_vocab_chunk=16384)),
+        "h2b_gemma3_train_chunked_xent_8k": dict(
+            arch="gemma3-1b", shape="train_4k",
+            cfg=cfg("gemma3-1b", loss_vocab_chunk=8192)),
+        "h2c_gemma3_train_no_remat": dict(
+            arch="gemma3-1b", shape="train_4k",
+            cfg=cfg("gemma3-1b", remat=False)),
+        # H2e: local-attention window waste — q_chunk 1024 pads the key span
+        # to C + roundup(W, C) = 2048 for a 512 window; q_chunk 512 halves
+        # the true score traffic (probe metric sees one chunk body).
+        "h2e_gemma3_train_qchunk512": dict(
+            arch="gemma3-1b", shape="train_4k",
+            cfg=cfg("gemma3-1b", q_chunk=512)),
+        "h2f_gemma3_train_qchunk512_chunked_xent": dict(
+            arch="gemma3-1b", shape="train_4k",
+            cfg=cfg("gemma3-1b", q_chunk=512, loss_vocab_chunk=16384)),
+        # H2g: gemma3 has 4 q heads -> replicated attention on any model
+        # axis > 4; (64, 4) factorization shards all 4 heads.
+        "h2g_gemma3_train_mesh64x4_qchunk512": dict(
+            arch="gemma3-1b", shape="train_4k", mesh_shape=(64, 4),
+            cfg=cfg("gemma3-1b", q_chunk=512)),
+        "h2d_gemma3_train_chunked_xent_no_remat": dict(
+            arch="gemma3-1b", shape="train_4k",
+            cfg=cfg("gemma3-1b", loss_vocab_chunk=16384, remat=False)),
+        # --- H3: llama4-scout train_4k (paper-technique representative:
+        #         expert-parallel MoE + data-parallel gradient combine) ----
+        "h3a_llama4_train_gather_dispatch": dict(
+            arch="llama4-scout-17b-16e", shape="train_4k",
+            cfg=cfg("llama4-scout-17b-16e", moe_dispatch="gather")),
+        # H3b': 40 heads % 16 != 0 -> attention replicated over the model
+        # axis (16x redundant).  (32, 8) factorization: 40 % 8 == 0.
+        "h3d_llama4_train_mesh32x8": dict(
+            arch="llama4-scout-17b-16e", shape="train_4k", mesh_shape=(32, 8)),
+        "h3e_llama4_train_mesh32x8_chunked_xent": dict(
+            arch="llama4-scout-17b-16e", shape="train_4k", mesh_shape=(32, 8),
+            cfg=cfg("llama4-scout-17b-16e", loss_vocab_chunk=12628)),
+        "h3f_llama4_train_mesh32x8_gather": dict(
+            arch="llama4-scout-17b-16e", shape="train_4k", mesh_shape=(32, 8),
+            cfg=cfg("llama4-scout-17b-16e", moe_dispatch="gather")),
+        # H1f: int8 KV cache on the serving mesh (memory term is now the
+        # decode bottleneck; the cache read dominates it).
+        "h1f_granite_decode_mesh32x8_int8": dict(
+            arch="granite-3-8b", shape="decode_32k", mesh_shape=(32, 8),
+            cfg=cfg("granite-3-8b", cache_dtype="int8")),
+        # H5: prefill collectives are FSDP weight all-gathers amortized
+        # over only 32 sequences; SERVE_RULES (weights on "model") converts
+        # them to activation-sized TP reductions.
+        "h5a_mixtral_prefill_serve_rules": dict(
+            arch="mixtral-8x22b", shape="prefill_32k", rules=SERVE_RULES),
+        "h4b_llava_train_mesh32x8": dict(
+            arch="llava-next-34b", shape="train_4k", mesh_shape=(32, 8)),
+        "h4c_qwen2_train_mesh64x4": dict(
+            arch="qwen2-1.5b", shape="train_4k", mesh_shape=(64, 4)),
+        "h4a_qwen15_train_mesh32x8": dict(
+            arch="qwen1.5-32b", shape="train_4k", mesh_shape=(32, 8)),
+        "h3b_llama4_train_gather_plus_chunked_xent": dict(
+            arch="llama4-scout-17b-16e", shape="train_4k",
+            cfg=cfg("llama4-scout-17b-16e", moe_dispatch="gather",
+                    loss_vocab_chunk=12628)),
+        "h3c_llama4_train_chunked_xent_only": dict(
+            arch="llama4-scout-17b-16e", shape="train_4k",
+            cfg=cfg("llama4-scout-17b-16e", loss_vocab_chunk=12628)),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run", default=None)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_pair  # sets XLA_FLAGS first
+    from repro.sharding.rules import DEFAULT_RULES
+
+    exps = _experiments()
+    if args.list or not args.run:
+        for name, spec in exps.items():
+            print(f"{name}: {spec['arch']} x {spec['shape']}")
+        return
+    spec = exps[args.run]
+    mesh = None
+    if "mesh_shape" in spec:
+        import jax
+        shp = spec["mesh_shape"]
+        names = ("pod", "data", "model")[-len(shp):]
+        mesh = jax.make_mesh(shp, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(shp))
+    res = run_pair(spec["arch"], spec["shape"],
+                   multi_pod=spec.get("multi_pod", False),
+                   rules=spec.get("rules", DEFAULT_RULES),
+                   cfg_override=spec.get("cfg"), mesh=mesh)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, args.run + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"{args.run}: compute={res['compute_s']:.3e}s "
+          f"memory={res['memory_s']:.3e}s collective={res['collective_s']:.3e}s "
+          f"bottleneck={res['bottleneck']} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Kernel microbenchmarks (beyond-paper; supports the §Perf log).
+
+On this CPU container we cannot time TPU kernels, so two honest views:
+  1. walltime of the *jnp oracle* vs the fused XLA path at several sizes
+     (CPU wall, sanity only);
+  2. analytic HBM-traffic model per kernel: bytes the naive HLO moves vs
+     bytes the Pallas schedule moves (the quantity the kernel exists to
+     reduce) with the v5e 819 GB/s HBM roofline → projected μs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._util import emit, timeit
+
+HBM_BW = 819e9
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # ---- logreg grad: naive traffic = X (margin pass) + sigmoid round-trip
+    # + X (grad pass); fused = 2·X + small vectors ---------------------------
+    for n, d in [(4096, 1024), (8192, 4096), (2048, 16384)]:
+        X = jnp.asarray(rng.normal(size=(n, d)), jnp.bfloat16)
+        y = jnp.asarray(rng.integers(0, 2, size=n), jnp.float32)
+        w = jnp.asarray(rng.normal(size=d) * 0.05, jnp.bfloat16)
+        t_ref = timeit(lambda: ref.logreg_grad_ref(X, y, w))
+        x_bytes = n * d * 2
+        naive = 3 * x_bytes          # unfused fp32 margin materialization
+        fused = 2 * x_bytes          # two streamed passes, epilogue fused
+        rows.append({
+            "kernel": "logreg_grad", "n": n, "d": d,
+            "cpu_ref_ms": round(t_ref * 1e3, 2),
+            "naive_hbm_mb": round(naive / 2**20, 1),
+            "fused_hbm_mb": round(fused / 2**20, 1),
+            "projected_tpu_us_naive": round(naive / HBM_BW * 1e6, 1),
+            "projected_tpu_us_fused": round(fused / HBM_BW * 1e6, 1),
+        })
+
+    # ---- flash attention: naive materializes (S,S) logits+probs in HBM ----
+    for B, H, S, hd in [(1, 8, 2048, 128), (1, 8, 8192, 128)]:
+        q = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.bfloat16)
+        t_ref = timeit(lambda: ref.flash_attention_ref(q, q, q, causal=True))
+        qkv = 3 * B * H * S * hd * 2
+        logits = B * H * S * S * 4
+        naive = qkv + 2 * logits + B * H * S * hd * 2
+        fused = qkv + B * H * S * hd * 2            # q/k/v in, o out; no (S,S)
+        rows.append({
+            "kernel": "flash_attention", "B": B, "H": H, "S": S, "hd": hd,
+            "cpu_ref_ms": round(t_ref * 1e3, 2),
+            "naive_hbm_mb": round(naive / 2**20, 1),
+            "fused_hbm_mb": round(fused / 2**20, 1),
+            "projected_tpu_us_naive": round(naive / HBM_BW * 1e6, 1),
+            "projected_tpu_us_fused": round(fused / HBM_BW * 1e6, 1),
+        })
+
+    # ---- SSD scan: unfused scan materializes per-chunk (L,L) score blocks
+    # and the (B,H,C,P,N) state trajectory in HBM; the kernel keeps state in
+    # VMEM and streams only inputs/outputs ----------------------------------
+    for B, H, S, P, N, L in [(8, 80, 4096, 64, 128, 64)]:
+        la = jnp.asarray(-np.abs(rng.normal(size=(B, H, 256))) * 0.1, jnp.float32)
+        dxs = jnp.asarray(rng.normal(size=(B, H, 256, P)), jnp.float32)
+        Bs = jnp.asarray(rng.normal(size=(B, 256, N)), jnp.float32)
+        t_ref = timeit(lambda: ref.ssd_chunk_scan_ref(la, dxs, Bs, Bs, chunk=64)[0])
+        io = (B * H * S * (1 + 2 * P) + 2 * B * S * N) * 4      # in+out streams
+        state_traj = B * H * (S // L) * P * N * 4               # unfused h per chunk
+        scores = B * H * (S // L) * L * L * 4
+        rows.append({
+            "kernel": "ssd_scan", "B": B, "H": H, "S": S, "P": P, "N": N,
+            "cpu_ref_ms_256tok": round(t_ref * 1e3, 2),
+            "naive_hbm_mb": round((io + state_traj + scores) / 2**20, 1),
+            "fused_hbm_mb": round(io / 2**20, 1),
+            "projected_tpu_us_naive": round((io + state_traj + scores) / HBM_BW * 1e6, 1),
+            "projected_tpu_us_fused": round(io / HBM_BW * 1e6, 1),
+        })
+
+    # ---- rmsnorm: 2 reads + 1 write naive vs 1 read + 1 write fused -------
+    for rows_n, d in [(8192, 4096), (32768, 1152)]:
+        x = jnp.asarray(rng.normal(size=(rows_n, d)), jnp.bfloat16)
+        wv = jnp.ones((d,), jnp.bfloat16)
+        t_ref = timeit(lambda: ref.rmsnorm_ref(x, wv))
+        xb = rows_n * d * 2
+        rows.append({
+            "kernel": "rmsnorm", "rows": rows_n, "d": d,
+            "cpu_ref_ms": round(t_ref * 1e3, 2),
+            "naive_hbm_mb": round(3 * xb / 2**20, 1),
+            "fused_hbm_mb": round(2 * xb / 2**20, 1),
+            "projected_tpu_us_naive": round(3 * xb / HBM_BW * 1e6, 1),
+            "projected_tpu_us_fused": round(2 * xb / HBM_BW * 1e6, 1),
+        })
+
+    emit("kernel_bench", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Figs. 2b/2c (weak scaling) and A5/A6 (strong scaling) for logistic
+regression via local SGD + parameter averaging.
+
+Weak scaling: data per 'machine' (device) fixed; more devices → ideally flat
+walltime.  Strong scaling: total data fixed; more devices → ideally linear
+speedup.  Each device count runs in a subprocess (see _util).
+
+    PYTHONPATH=src python -m benchmarks.logreg_scaling --mode weak
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks._util import emit, run_with_devices
+
+N_PER_DEV_WEAK = 2048
+N_TOTAL_STRONG = 4096
+D = 256
+ITERS = 5
+
+
+def _worker() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.algorithms.logistic_regression import (
+        LogisticRegressionAlgorithm, LogisticRegressionParameters)
+    from repro.core.numeric_table import MLNumericTable
+    from repro.data import synth_classification
+    from benchmarks._util import timeit
+
+    cfgj = json.loads(sys.stdin.read())
+    n, d = cfgj["n"], cfgj["d"]
+    devices = len(jax.devices())
+    mesh = jax.make_mesh((devices,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    X, y, _ = synth_classification(n, d, seed=0)
+    data = np.concatenate([y[:, None], X], 1).astype(np.float32)
+    table = MLNumericTable.from_numpy(data, mesh=mesh)
+    params = LogisticRegressionParameters(
+        learning_rate=0.5, max_iter=cfgj["iters"],
+        local_batch_size=cfgj.get("local_batch", 32),
+        schedule=cfgj.get("schedule", "gather_broadcast"))
+
+    def run():
+        return LogisticRegressionAlgorithm.train(table, params).weights
+
+    t = timeit(run, warmup=1, iters=3)
+    model = LogisticRegressionAlgorithm.train(table, params)
+    acc = float((np.asarray(model.predict(jnp.asarray(X))).ravel() == y).mean())
+    print(json.dumps({"devices": devices, "seconds": t, "acc": acc}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["weak", "strong", "both"], default="both")
+    ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args()
+    if args._worker:
+        _worker()
+        return
+
+    dev_counts = [int(x) for x in args.devices.split(",")]
+    modes = ["weak", "strong"] if args.mode == "both" else [args.mode]
+    for mode in modes:
+        rows = []
+        base = None
+        for nd in dev_counts:
+            n = N_PER_DEV_WEAK * nd if mode == "weak" else N_TOTAL_STRONG
+            res = run_with_devices("benchmarks.logreg_scaling", nd,
+                                   {"n": n, "d": D, "iters": ITERS})
+            if base is None:
+                base = res["seconds"]
+            rows.append({"devices": nd, "n": n,
+                         "seconds": round(res["seconds"], 3),
+                         "relative": round(res["seconds"] / base, 3),
+                         "speedup": round(base / res["seconds"], 3),
+                         "acc": round(res["acc"], 3)})
+        emit(f"logreg_{mode}_scaling", rows)
+
+
+if __name__ == "__main__":
+    main()

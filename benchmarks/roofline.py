@@ -1,0 +1,63 @@
+"""§Roofline table generator: reads the dry-run JSONs under
+experiments/dryrun/ and prints the per-(arch × shape × mesh) three-term
+roofline with bottleneck classification and MODEL_FLOPS ratio.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+    PYTHONPATH=src python -m benchmarks.roofline --markdown   # for EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks._util import emit
+
+
+def load(dir_: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 or 2x16x16")
+    args = ap.parse_args()
+
+    rows = load(args.dir)
+    if not rows:
+        print(f"no dry-run results under {args.dir}; run "
+              f"`python -m repro.launch.dryrun --all --both-meshes --out {args.dir}`")
+        return
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+
+    out = []
+    for r in rows:
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "bottleneck": r["bottleneck"].replace("_s", ""),
+            "model_flops_ratio": f"{r['model_flops_ratio']:.3f}",
+        })
+
+    if args.markdown:
+        cols = list(out[0].keys())
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for r in out:
+            print("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    else:
+        emit("roofline", out)
+
+
+if __name__ == "__main__":
+    main()

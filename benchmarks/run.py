@@ -1,0 +1,58 @@
+"""Run every benchmark (one per paper table/figure + beyond-paper):
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  loc_table             Fig 2a / 3a   lines of code
+  logreg_scaling        Fig 2b/2c, A5/A6  weak+strong scaling
+  als_scaling           Fig 3b/3c, A7/A8  weak+strong scaling
+  collective_schedules  §IV-A  MLI gather-broadcast vs VW allreduce
+  kernel_bench          (beyond paper)  kernel traffic models
+  roofline              (beyond paper)  per-arch dry-run roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer device counts for the scaling benches")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (als_scaling, collective_schedules, kernel_bench,
+                            loc_table, logreg_scaling, roofline)
+
+    devices = "1,2,4" if args.fast else "1,2,4,8"
+    jobs = [
+        ("loc_table", loc_table.main, []),
+        ("logreg_scaling", logreg_scaling.main, ["--devices", devices]),
+        ("als_scaling", als_scaling.main, ["--devices", devices]),
+        ("collective_schedules", collective_schedules.main, []),
+        ("kernel_bench", kernel_bench.main, []),
+        ("roofline", roofline.main, []),
+    ]
+    failures = 0
+    for name, fn, argv in jobs:
+        if args.only and args.only != name:
+            continue
+        print(f"### {name}")
+        sys.argv = [name] + argv
+        t0 = time.time()
+        try:
+            fn()
+            print(f"### {name} done in {time.time()-t0:.1f}s\n")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"### {name} FAILED\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

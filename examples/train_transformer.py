@@ -1,0 +1,74 @@
+"""End-to-end driver (deliverable b): train a ~100M-param transformer for a
+few hundred steps on the planted-bigram LM stream, with checkpointing and a
+loss-decrease assertion.  This is the beyond-paper substrate exercising the
+same Optimizer-as-first-class-citizen contract at transformer scale.
+
+Default config is a ~100M-param qwen2-family model (d=512, 8 layers, vocab
+8192).  ~300 steps on this CPU container takes tens of minutes; use
+--steps/--dim to shrink.
+
+    PYTHONPATH=src python examples/train_transformer.py --steps 300
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import BatchIterator, SyntheticLMDataset
+from repro.optim.optimizers import adamw
+from repro.train.step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2-1.5b").scaled(
+        num_layers=args.layers, d_model=args.dim, num_heads=8, num_kv_heads=2,
+        d_ff=4 * args.dim, vocab_size=args.vocab, dtype="float32",
+        remat=False, q_chunk=128, max_seq_len=2048)
+    opt = adamw(lr=1e-3, warmup=20, total_steps=args.steps, weight_decay=0.01)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state.params))
+    print(f"model: {args.layers}L d={args.dim} vocab={args.vocab} "
+          f"-> {n_params/1e6:.1f}M params")
+
+    step_fn = make_train_step(cfg, opt)
+    ds = SyntheticLMDataset(vocab_size=args.vocab, seq_len=args.seq,
+                            batch_size=args.batch, noise=0.02)
+    it = BatchIterator(ds.batch)
+    losses = []
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        for step in range(args.steps):
+            state, m = step_fn(state, next(it))
+            losses.append(float(m["loss"]))
+            if step % 20 == 0 or step == args.steps - 1:
+                toks = args.batch * args.seq * (step + 1)
+                print(f"step {step:4d} loss {losses[-1]:.4f} "
+                      f"tok/s {toks/(time.time()-t0):,.0f}")
+            if step == args.steps // 2:
+                save_checkpoint(ckpt_dir, step, state)
+        # restart-based recovery demo
+        restored, at = restore_checkpoint(ckpt_dir, state)
+        print(f"checkpoint restores at step {at}: OK")
+
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f}")
+    assert last < first * 0.8, "loss must decrease on learnable data"
+    print("train_transformer OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Assigned-architecture configs (public-literature pool) + input shapes.
+
+Each module exports ``FULL`` (the exact assigned config, exercised only via
+the ShapeDtypeStruct dry-run) and ``SMOKE`` (a reduced same-family variant —
+≤2-ish layers, d_model ≤ 512, ≤4 experts — run for real on CPU by the smoke
+tests).  ``get_config(name)`` / ``get_smoke(name)`` look both up; the train
+and serve launchers expose them as ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ArchConfig
+
+__all__ = ["ARCH_IDS", "SHAPES", "InputShape", "get_config", "get_smoke",
+           "shape_for"]
+
+ARCH_IDS = (
+    "llama4-scout-17b-16e",
+    "mixtral-8x22b",
+    "whisper-small",
+    "granite-3-8b",
+    "llava-next-34b",
+    "qwen1.5-32b",
+    "recurrentgemma-9b",
+    "gemma3-1b",
+    "mamba2-2.7b",
+    "qwen2-1.5b",
+)
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCH_IDS}
+# accept the assignment's exact spelling too
+_ALIASES = {"llama4-scout-17b-a16e": "llama4-scout-17b-16e"}
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def _module(name: str):
+    name = _ALIASES.get(name, name)
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).FULL
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _module(name).SMOKE
+
+
+def shape_for(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {tuple(SHAPES)}")
+    return SHAPES[name]

@@ -1,0 +1,40 @@
+"""Gemma-3 1B [hf:google/gemma-3-1b-pt].
+
+Dense with 5:1 local:global attention interleave and 128k context (the
+sliding window keeps the KV footprint bounded → runs long_500k).  The
+assigned depth 26 is not a multiple of the 6-layer (5L+1G) period; we encode
+the same cadence as a 13-layer period — kind(i) = ATTN if i % 6 == 5 else
+ATTN_LOCAL — giving globals at layers 6, 12, 19, 25 of 26 (Gemma 3's
+"every 6th layer global" with depth 26).  d_model 1152 · 4H (GQA kv=1,
+head_dim 256) · d_ff 6912 · vocab 262144 · window 512.
+"""
+from repro.models.config import ArchConfig, BlockKind
+
+_PERIOD = tuple(
+    BlockKind.ATTN if i % 6 == 5 else BlockKind.ATTN_LOCAL for i in range(13)
+)
+
+FULL = ArchConfig(
+    name="gemma3-1b",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=6912,
+    vocab_size=262_144,
+    head_dim=256,
+    pattern=_PERIOD,
+    probe_pattern=tuple(
+        BlockKind.ATTN if i % 6 == 5 else BlockKind.ATTN_LOCAL
+        for i in range(6)),
+    window=512,
+    rope_base=1_000_000.0,
+    source="hf:google/gemma-3-1b-pt",
+)
+
+SMOKE = FULL.scaled(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=1, d_ff=256,
+    vocab_size=512, head_dim=32, window=32, q_chunk=64, max_seq_len=512,
+    dtype="float32", remat=False,
+    pattern=(BlockKind.ATTN_LOCAL, BlockKind.ATTN),
+)

@@ -1,0 +1,33 @@
+"""Mamba-2 2.7B [arXiv:2405.21060].
+
+Attention-free SSM using SSD (state-space duality): chunked dual form for
+training/prefill, O(1) recurrent state for decode → runs long_500k
+naturally.  64L · d_model 2560 · d_ff 0 (the SSD block is self-contained,
+no MLP) · vocab 50280 · ssm_state N=128 · head_dim P=64 · expand 2
+(d_inner 5120, 80 ssd heads).
+"""
+from repro.models.config import ArchConfig, BlockKind
+
+FULL = ArchConfig(
+    name="mamba2-2.7b",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    pattern=(BlockKind.SSD,),
+    mlp_kind="none",
+    ssm_state=128,
+    ssd_head_dim=64,
+    ssd_expand=2,
+    ssd_chunk=256,
+    use_rope=False,
+    source="arXiv:2405.21060",
+)
+
+SMOKE = FULL.scaled(
+    num_layers=2, d_model=128, num_heads=0, num_kv_heads=0, d_ff=0,
+    vocab_size=512, ssm_state=16, ssd_head_dim=16, ssd_chunk=32,
+    max_seq_len=512, dtype="float32", remat=False,
+)

@@ -1,0 +1,31 @@
+"""MLI core API (the paper's contribution): MLTable, LocalMatrix,
+Optimizer/Algorithm/Model, and the collective schedules that make global
+combination explicit."""
+from repro.core.schema import EMPTY, Column, ColumnType, MLRow, Schema
+from repro.core.mltable import MLTable
+from repro.core.numeric_table import MLNumericTable
+from repro.core.local_matrix import LocalMatrix, PaddedCSR
+from repro.core.collectives import CollectiveSchedule, combine_mean, combine_sum
+from repro.core.optimizer import (
+    GradientDescent,
+    GradientDescentParameters,
+    MinibatchSGD,
+    MinibatchSGDParameters,
+    Optimizer,
+    StochasticGradientDescent,
+    StochasticGradientDescentParameters,
+    soft_threshold,
+)
+from repro.core.interfaces import Algorithm, Model, NumericAlgorithm
+
+__all__ = [
+    "EMPTY", "Column", "ColumnType", "MLRow", "Schema",
+    "MLTable", "MLNumericTable", "LocalMatrix", "PaddedCSR",
+    "CollectiveSchedule", "combine_mean", "combine_sum",
+    "Optimizer",
+    "StochasticGradientDescent", "StochasticGradientDescentParameters",
+    "GradientDescent", "GradientDescentParameters",
+    "MinibatchSGD", "MinibatchSGDParameters",
+    "soft_threshold",
+    "Algorithm", "Model", "NumericAlgorithm",
+]

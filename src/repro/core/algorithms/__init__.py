@@ -1,0 +1,35 @@
+"""Algorithm library written against the MLI API (paper §IV)."""
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm,
+    LogisticRegressionModel,
+    LogisticRegressionParameters,
+)
+from repro.core.algorithms.linear_models import (
+    LinearRegressionAlgorithm,
+    LinearRegressionParameters,
+    LinearSVMAlgorithm,
+    LinearSVMParameters,
+    GeneralizedLinearModel,
+    Regularization,
+)
+from repro.core.algorithms.als import (
+    BroadcastALS,
+    ALSParameters,
+    MatrixFactorizationModel,
+)
+from repro.core.algorithms.kmeans import KMeans, KMeansParameters, KMeansModel
+
+__all__ = [
+    "LogisticRegressionAlgorithm", "LogisticRegressionModel", "LogisticRegressionParameters",
+    "LinearRegressionAlgorithm", "LinearRegressionParameters",
+    "LinearSVMAlgorithm", "LinearSVMParameters",
+    "GeneralizedLinearModel", "Regularization",
+    "BroadcastALS", "ALSParameters", "MatrixFactorizationModel",
+    "KMeans", "KMeansParameters", "KMeansModel",
+]
+from repro.core.algorithms.pca import PCA, PCAModel, PCAParameters
+from repro.core.algorithms.naive_bayes import (
+    GaussianNaiveBayes,
+    NaiveBayesModel,
+    NaiveBayesParameters,
+)

@@ -1,0 +1,84 @@
+"""K-Means clustering (the terminal stage of the paper's Fig. A2 pipeline:
+``KMeans(featurizedTable, k=50)``).
+
+Lloyd's algorithm expressed in MLI primitives: each round, every partition
+computes its local (per-cluster sum, count) statistics against the broadcast
+centroids via ``matrixBatchMap``; the global combine is an explicit sum;
+centroids update outside the partition function.  Empty clusters keep their
+previous centroid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interfaces import Model, NumericAlgorithm
+from repro.core.local_matrix import LocalMatrix
+from repro.core.numeric_table import MLNumericTable
+
+__all__ = ["KMeansParameters", "KMeansModel", "KMeans"]
+
+
+@dataclasses.dataclass
+class KMeansParameters:
+    k: int = 8
+    max_iter: int = 20
+    seed: int = 0
+
+
+class KMeansModel(Model):
+    def __init__(self, centroids: jnp.ndarray, params: KMeansParameters):
+        self.centroids = centroids
+        self.params = params
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        d2 = jnp.sum((x[:, None, :] - self.centroids[None, :, :]) ** 2, axis=-1)
+        return jnp.argmin(d2, axis=-1)
+
+    def inertia(self, x: jnp.ndarray) -> jnp.ndarray:
+        d2 = jnp.sum((x[:, None, :] - self.centroids[None, :, :]) ** 2, axis=-1)
+        return jnp.sum(jnp.min(d2, axis=-1))
+
+
+def _local_stats(block: LocalMatrix, centroids: jnp.ndarray) -> LocalMatrix:
+    """Per-partition (k, d+1) matrix: [cluster sums | cluster counts]."""
+    x = block.data                                            # (rows, d)
+    d2 = jnp.sum((x[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=-1)                          # (rows,)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=x.dtype)  # (rows, k)
+    sums = onehot.T @ x                                       # (k, d)
+    counts = jnp.sum(onehot, axis=0)[:, None]                 # (k, 1)
+    return LocalMatrix(jnp.concatenate([sums, counts], axis=1))
+
+
+class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
+    @classmethod
+    def default_parameters(cls) -> KMeansParameters:
+        return KMeansParameters()
+
+    @classmethod
+    def train(cls, data: MLNumericTable,
+              params: Optional[KMeansParameters] = None) -> KMeansModel:
+        p = params or cls.default_parameters()
+        d = data.num_cols
+        n = data.num_rows
+        if p.k > n:
+            raise ValueError("k exceeds number of rows")
+        # init: k distinct rows sampled without replacement (host-side choice,
+        # device-side gather)
+        perm = jax.random.permutation(jax.random.PRNGKey(p.seed), n)[: p.k]
+        centroids = jnp.take(data.data, perm, axis=0)
+
+        for _ in range(p.max_iter):
+            stats = data.matrix_batch_map(_local_stats, centroids)
+            # stats table: num_shards stacked (k, d+1) blocks -> global sum
+            blocks = stats.data.reshape(data.num_shards, p.k, d + 1)
+            tot = jnp.sum(blocks, axis=0)
+            sums, counts = tot[:, :d], tot[:, d]
+            centroids = jnp.where(counts[:, None] > 0,
+                                  sums / jnp.maximum(counts[:, None], 1.0),
+                                  centroids)
+        return KMeansModel(centroids, p)

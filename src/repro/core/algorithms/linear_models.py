@@ -1,0 +1,143 @@
+"""Generalized linear models (paper §IV: '...naturally extend to a diverse
+group of ML algorithms, e.g., linear SVMs, linear regression, and (L1, L2,
+elastic net)-regularized variants therein, simply by changing the expression
+of the gradient function (and adding a proximal operator in the case of
+L1-regularization)').
+
+This module is that sentence, executed: one GLM trainer parameterized by a
+loss-gradient expression and a Regularization spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import CollectiveSchedule
+from repro.core.interfaces import Model, NumericAlgorithm
+from repro.core.numeric_table import MLNumericTable
+from repro.core.optimizer import (
+    StochasticGradientDescent,
+    StochasticGradientDescentParameters,
+    soft_threshold,
+)
+
+__all__ = [
+    "Regularization",
+    "GeneralizedLinearModel",
+    "LinearRegressionParameters",
+    "LinearRegressionAlgorithm",
+    "LinearSVMParameters",
+    "LinearSVMAlgorithm",
+]
+
+
+@dataclasses.dataclass
+class Regularization:
+    l1: float = 0.0
+    l2: float = 0.0
+
+    @classmethod
+    def elastic_net(cls, alpha: float, l1_ratio: float) -> "Regularization":
+        return cls(l1=alpha * l1_ratio, l2=alpha * (1.0 - l1_ratio))
+
+
+class GeneralizedLinearModel(Model):
+    def __init__(self, weights: jnp.ndarray,
+                 link: Callable[[jnp.ndarray], jnp.ndarray] = lambda z: z):
+        self.weights = weights
+        self.link = link
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.link(x @ self.weights)
+
+
+def _train_glm(data: MLNumericTable, loss_grad, reg: Regularization,
+               learning_rate: float, max_iter: int, local_batch_size: int,
+               schedule) -> jnp.ndarray:
+    d = data.num_cols - 1
+
+    def gradient(vec: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        x, y = vec[1:], vec[0]
+        g = loss_grad(x, y, w)
+        if reg.l2:
+            g = g + reg.l2 * w
+        return g
+
+    prox = soft_threshold(reg.l1) if reg.l1 else None
+    opt = StochasticGradientDescent(StochasticGradientDescentParameters(
+        w_init=jnp.zeros((d,), jnp.float32), grad=gradient,
+        learning_rate=learning_rate, max_iter=max_iter,
+        local_batch_size=local_batch_size, schedule=schedule, prox=prox))
+    return opt.apply(data, None)
+
+
+# --------------------------------------------------------------------------- #
+# Linear regression (squared loss)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class LinearRegressionParameters:
+    learning_rate: float = 0.1
+    max_iter: int = 20
+    reg: Regularization = dataclasses.field(default_factory=Regularization)
+    local_batch_size: int = 1
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+
+
+class LinearRegressionAlgorithm(
+    NumericAlgorithm[LinearRegressionParameters, GeneralizedLinearModel]
+):
+    @classmethod
+    def default_parameters(cls) -> LinearRegressionParameters:
+        return LinearRegressionParameters()
+
+    @classmethod
+    def train(cls, data: MLNumericTable,
+              params: Optional[LinearRegressionParameters] = None
+              ) -> GeneralizedLinearModel:
+        p = params or cls.default_parameters()
+
+        def loss_grad(x, y, w):
+            return x * (jnp.dot(x, w) - y)
+
+        w = _train_glm(data, loss_grad, p.reg, p.learning_rate, p.max_iter,
+                       p.local_batch_size, p.schedule)
+        return GeneralizedLinearModel(w)
+
+
+# --------------------------------------------------------------------------- #
+# Linear SVM (hinge loss subgradient)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class LinearSVMParameters:
+    learning_rate: float = 0.1
+    max_iter: int = 20
+    reg: Regularization = dataclasses.field(default_factory=lambda: Regularization(l2=1e-3))
+    local_batch_size: int = 1
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+
+
+class LinearSVMAlgorithm(
+    NumericAlgorithm[LinearSVMParameters, GeneralizedLinearModel]
+):
+    """Labels are expected in {-1, +1} in column 0."""
+
+    @classmethod
+    def default_parameters(cls) -> LinearSVMParameters:
+        return LinearSVMParameters()
+
+    @classmethod
+    def train(cls, data: MLNumericTable,
+              params: Optional[LinearSVMParameters] = None
+              ) -> GeneralizedLinearModel:
+        p = params or cls.default_parameters()
+
+        def loss_grad(x, y, w):
+            margin = y * jnp.dot(x, w)
+            return jnp.where(margin < 1.0, -y, 0.0) * x
+
+        w = _train_glm(data, loss_grad, p.reg, p.learning_rate, p.max_iter,
+                       p.local_batch_size, p.schedule)
+        return GeneralizedLinearModel(w, link=jnp.sign)

@@ -1,0 +1,76 @@
+"""Gaussian Naive Bayes through the MLI contract (beyond-paper, same
+purpose as pca.py: the API extends to non-gradient algorithms).
+
+Pattern: ONE ``matrixBatchMap`` pass emits per-partition sufficient
+statistics for every class (count, Σx, Σx² as a fixed-shape block), one
+explicit global sum, closed-form class-conditional Gaussians.  Labels in
+column 0 as integers 0..C−1."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interfaces import Model, NumericAlgorithm
+from repro.core.local_matrix import LocalMatrix
+from repro.core.numeric_table import MLNumericTable
+
+__all__ = ["NaiveBayesParameters", "NaiveBayesModel", "GaussianNaiveBayes"]
+
+
+@dataclasses.dataclass
+class NaiveBayesParameters:
+    num_classes: int = 2
+    var_smoothing: float = 1e-6
+
+
+class NaiveBayesModel(Model):
+    def __init__(self, priors, means, variances):
+        self.priors = priors          # (C,)
+        self.means = means            # (C, d)
+        self.variances = variances    # (C, d)
+
+    def predict_log_proba(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(n, d) -> (n, C) unnormalized log posterior."""
+        x = x[:, None, :]                                     # (n, 1, d)
+        ll = -0.5 * (jnp.log(2 * jnp.pi * self.variances)
+                     + (x - self.means) ** 2 / self.variances)
+        return jnp.sum(ll, axis=-1) + jnp.log(self.priors)
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.argmax(self.predict_log_proba(x), axis=-1)
+
+
+class GaussianNaiveBayes(NumericAlgorithm[NaiveBayesParameters, NaiveBayesModel]):
+    @classmethod
+    def default_parameters(cls) -> NaiveBayesParameters:
+        return NaiveBayesParameters()
+
+    @classmethod
+    def train(cls, data: MLNumericTable,
+              params: Optional[NaiveBayesParameters] = None) -> NaiveBayesModel:
+        p = params or cls.default_parameters()
+        C = p.num_classes
+        d = data.num_cols - 1
+        n = data.num_rows
+
+        def local_stats(m: LocalMatrix) -> LocalMatrix:
+            y = m.data[:, 0].astype(jnp.int32)
+            x = m.data[:, 1:]
+            onehot = jax.nn.one_hot(y, C, dtype=x.dtype)       # (rows, C)
+            cnt = jnp.sum(onehot, axis=0)[:, None]             # (C, 1)
+            s1 = onehot.T @ x                                  # (C, d)
+            s2 = onehot.T @ (x * x)                            # (C, d)
+            return LocalMatrix(jnp.concatenate([cnt, s1, s2], axis=1))
+
+        blocks = data.matrix_batch_map(local_stats)            # (P·C, 1+2d)
+        stacked = blocks.data.reshape(data.num_shards, C, 1 + 2 * d)
+        tot = jnp.sum(stacked, axis=0)                         # explicit sum
+        cnt = jnp.maximum(tot[:, 0], 1.0)                      # (C,)
+        mean = tot[:, 1:1 + d] / cnt[:, None]
+        var = tot[:, 1 + d:] / cnt[:, None] - mean ** 2
+        var = jnp.maximum(var, 0.0) + p.var_smoothing
+        priors = cnt / n
+        return NaiveBayesModel(priors, mean, var)

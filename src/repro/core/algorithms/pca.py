@@ -1,0 +1,75 @@
+"""Principal Component Analysis through the MLI contract (beyond-paper,
+supporting the paper's §IV claim that the API 'naturally extends to a
+diverse group of ML algorithms').
+
+Pattern: partition-local second-moment blocks via ``matrixBatchMap`` (each
+partition emits its d×d Gram matrix — one output row block per partition),
+one explicit global sum, then a LOCAL eigendecomposition of the d×d
+covariance (d ≪ n; the paper's shared-nothing rule — only O(d²) crosses
+the wire, never the data)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interfaces import Model, NumericAlgorithm
+from repro.core.local_matrix import LocalMatrix
+from repro.core.numeric_table import MLNumericTable
+
+__all__ = ["PCAParameters", "PCAModel", "PCA"]
+
+
+@dataclasses.dataclass
+class PCAParameters:
+    n_components: int = 2
+
+
+class PCAModel(Model):
+    def __init__(self, components: jnp.ndarray, mean: jnp.ndarray,
+                 explained_variance: jnp.ndarray):
+        self.components = components            # (k, d) rows = PCs
+        self.mean = mean                        # (d,)
+        self.explained_variance = explained_variance  # (k,)
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Project (n, d) -> (n, k)."""
+        return (x - self.mean) @ self.components.T
+
+    transform = predict
+
+    def inverse_transform(self, z: jnp.ndarray) -> jnp.ndarray:
+        return z @ self.components + self.mean
+
+
+class PCA(NumericAlgorithm[PCAParameters, PCAModel]):
+    @classmethod
+    def default_parameters(cls) -> PCAParameters:
+        return PCAParameters()
+
+    @classmethod
+    def train(cls, data: MLNumericTable,
+              params: Optional[PCAParameters] = None) -> PCAModel:
+        p = params or cls.default_parameters()
+        n, d = data.num_rows, data.num_cols
+
+        # partition-local [sum | Gram] blocks, concatenated row-wise:
+        # each partition contributes a (d+1, d) block [Σx ; XᵀX]
+        def local_moments(m: LocalMatrix) -> LocalMatrix:
+            s = jnp.sum(m.data, axis=0, keepdims=True)          # (1, d)
+            gram = m.data.T @ m.data                            # (d, d)
+            return LocalMatrix(jnp.concatenate([s, gram], axis=0))
+
+        blocks = data.matrix_batch_map(local_moments)            # (P·(d+1), d)
+        stacked = blocks.data.reshape(data.num_shards, d + 1, d)
+        total = jnp.sum(stacked, axis=0)                         # explicit sum
+        mean = total[0] / n
+        cov = total[1:] / n - jnp.outer(mean, mean)
+
+        # local eigendecomposition of the d×d covariance
+        evals, evecs = jnp.linalg.eigh(cov)                      # ascending
+        order = jnp.argsort(evals)[::-1][: p.n_components]
+        components = evecs[:, order].T                           # (k, d)
+        return PCAModel(components, mean, evals[order])

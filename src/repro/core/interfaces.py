@@ -1,0 +1,63 @@
+"""Algorithm / Model interfaces (paper §III-C).
+
+An Algorithm is a class with a ``train()`` method that accepts data and
+hyperparameters and produces a Model; a Model is an object that makes
+predictions.  These are deliberately thin — their value is the *uniform
+contract* across every algorithm in the library (and, in the paper, across
+the whole MLBASE system).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Generic, TypeVar
+
+import jax.numpy as jnp
+
+from repro.core.numeric_table import MLNumericTable
+
+__all__ = ["Algorithm", "NumericAlgorithm", "Model"]
+
+P_ = TypeVar("P_")  # hyperparameter dataclass
+M_ = TypeVar("M_", bound="Model")
+
+
+class Model(abc.ABC):
+    """An object which makes predictions (paper §III-C)."""
+
+    @abc.abstractmethod
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        ...
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.predict(x)
+
+
+class Algorithm(abc.ABC, Generic[P_, M_]):
+    """train(data, hyperparameters) -> Model."""
+
+    @classmethod
+    @abc.abstractmethod
+    def default_parameters(cls) -> P_:
+        ...
+
+    @classmethod
+    @abc.abstractmethod
+    def train(cls, data: Any, params: P_) -> M_:
+        ...
+
+    # paper spelling
+    @classmethod
+    def defaultParameters(cls) -> P_:
+        return cls.default_parameters()
+
+
+class NumericAlgorithm(Algorithm[P_, M_]):
+    """An Algorithm whose ``train`` expects an MLNumericTable (each row is a
+    feature vector; by library convention column 0 is the label when the
+    algorithm is supervised — matching Fig. A4's ``vec(0)``)."""
+
+    @classmethod
+    @abc.abstractmethod
+    def train(cls, data: MLNumericTable, params: P_) -> M_:
+        ...

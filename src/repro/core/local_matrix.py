@@ -1,0 +1,301 @@
+"""LocalMatrix (paper §III-B, API table Fig. A3).
+
+A MATLAB-style linear-algebra object over a *partition* of the data.  On the
+TPU runtime the "partition" is the per-device block that shard_map hands to
+the partition function, so LocalMatrix is a registered pytree wrapping a
+``jnp`` array and is fully usable inside ``jax.jit`` / ``shard_map`` traces.
+
+Design notes (hardware adaptation, see DESIGN.md §2):
+  * TPU programs need static shapes, so `nonZeroIndices` returns a fixed-width
+    padded index vector plus validity mask instead of a ragged Seq[Index]; the
+    companion `PaddedCSR` gives ALS the CSR-style row access the paper uses.
+  * `solve` uses a symmetrize-and-solve path (jnp.linalg.solve) matching the
+    normal-equation usage in the paper's ALS; `svd`/`eigen`/`rank` map to
+    lax-backed jnp.linalg routines.
+  * Arithmetic follows Fig. A3: `+ - * /` are element-wise, `times` is matrix
+    multiplication, `dot` is the scalar inner product, `on`/`then` compose
+    row-wise/column-wise.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LocalMatrix", "PaddedCSR"]
+
+ArrayLike = Union[jnp.ndarray, np.ndarray, float, int]
+
+
+def _unwrap(x: Any) -> Any:
+    return x.data if isinstance(x, LocalMatrix) else x
+
+
+@jax.tree_util.register_pytree_node_class
+class LocalMatrix:
+    """Dense partition-local matrix with a MATLAB-flavoured API."""
+
+    def __init__(self, data: ArrayLike):
+        arr = jnp.asarray(_unwrap(data))
+        if arr.ndim == 1:
+            arr = arr[:, None]
+        if arr.ndim != 2:
+            raise ValueError(f"LocalMatrix must be 2-D, got shape {arr.shape}")
+        self.data = arr
+
+    # pytree protocol ---------------------------------------------------- #
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        obj.data = children[0]
+        return obj
+
+    # constructors -------------------------------------------------------- #
+    @classmethod
+    def zeros(cls, m: int, n: int = 1, dtype=jnp.float32) -> "LocalMatrix":
+        return cls(jnp.zeros((m, n), dtype))
+
+    @classmethod
+    def ones(cls, m: int, n: int = 1, dtype=jnp.float32) -> "LocalMatrix":
+        return cls(jnp.ones((m, n), dtype))
+
+    @classmethod
+    def eye(cls, n: int, dtype=jnp.float32) -> "LocalMatrix":
+        return cls(jnp.eye(n, dtype=dtype))
+
+    @classmethod
+    def rand(cls, m: int, n: int, key: jax.Array = None, dtype=jnp.float32) -> "LocalMatrix":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return cls(jax.random.uniform(key, (m, n), dtype))
+
+    # shape (Fig. A3 "Shape" family) --------------------------------------- #
+    @property
+    def num_rows(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def num_cols(self) -> int:
+        return self.data.shape[1]
+
+    numRows, numCols = num_rows, num_cols  # paper spelling
+
+    @property
+    def dims(self) -> Tuple[int, int]:
+        return self.data.shape  # type: ignore[return-value]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.data.shape  # type: ignore[return-value]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    # composition (Fig. A3 "Composition") ---------------------------------- #
+    def on(self, other: "LocalMatrix") -> "LocalMatrix":
+        """Stack row-wise: ``matA on matB``."""
+        return LocalMatrix(jnp.concatenate([self.data, _unwrap(other)], axis=0))
+
+    def then(self, other: "LocalMatrix") -> "LocalMatrix":
+        """Concatenate column-wise: ``matA then matB``."""
+        return LocalMatrix(jnp.concatenate([self.data, _unwrap(other)], axis=1))
+
+    # indexing (Fig. A3 "Indexing"/"Updating") ------------------------------ #
+    def __getitem__(self, key) -> "LocalMatrix":
+        out = self.data[key]
+        if out.ndim == 0:
+            return out  # scalar passthrough (paper returns Scalar)
+        return LocalMatrix(out)
+
+    def row(self, i) -> "LocalMatrix":
+        return LocalMatrix(self.data[i, :][None, :])
+
+    def col(self, j) -> "LocalMatrix":
+        return LocalMatrix(self.data[:, j][:, None])
+
+    def slice_rows(self, idx) -> "LocalMatrix":
+        return LocalMatrix(jnp.take(self.data, jnp.asarray(idx), axis=0))
+
+    def updated(self, key, value: ArrayLike) -> "LocalMatrix":
+        """Functional update (JAX arrays are immutable: ``mat(1,2)=5`` becomes
+        ``mat = mat.updated((1,2), 5)``)."""
+        return LocalMatrix(self.data.at[key].set(_unwrap(value)))
+
+    def non_zero_indices(self, row: int, max_nnz: int = None):
+        """Padded analogue of Fig. A3 ``mat(0,??).nonZeroIndices``.
+
+        Returns ``(indices, mask)`` where indices has static length
+        ``max_nnz`` (default: num_cols); invalid slots hold 0 and mask=False.
+        """
+        r = self.data[row]
+        if max_nnz is None:
+            max_nnz = self.num_cols
+        nz = r != 0
+        order = jnp.argsort(~nz)  # non-zeros first, stable
+        idx = order[:max_nnz]
+        mask = nz[idx]
+        return idx, mask
+
+    nonZeroIndices = non_zero_indices  # paper spelling
+
+    # arithmetic (Fig. A3 "Arithmetic") ------------------------------------- #
+    def _binop(self, other: ArrayLike, op) -> "LocalMatrix":
+        return LocalMatrix(op(self.data, _unwrap(other)))
+
+    def __add__(self, o): return self._binop(o, jnp.add)
+    def __radd__(self, o): return self._binop(o, lambda a, b: jnp.add(b, a))
+    def __sub__(self, o): return self._binop(o, jnp.subtract)
+    def __rsub__(self, o): return self._binop(o, lambda a, b: jnp.subtract(b, a))
+    def __mul__(self, o): return self._binop(o, jnp.multiply)
+    def __rmul__(self, o): return self._binop(o, lambda a, b: jnp.multiply(b, a))
+    def __truediv__(self, o): return self._binop(o, jnp.divide)
+    def __neg__(self): return LocalMatrix(-self.data)
+
+    plus = __add__      # paper: `_ plus _` in the SGD reducer
+    minus = __sub__
+
+    # linear algebra (Fig. A3 "Linear Algebra") ------------------------------ #
+    def times(self, other: "LocalMatrix") -> "LocalMatrix":
+        """Matrix-matrix (or matrix-vector) product: ``matA times matB``."""
+        return LocalMatrix(self.data @ _unwrap(other))
+
+    __matmul__ = times
+
+    def dot(self, other: "LocalMatrix"):
+        """Scalar inner product of two vectors."""
+        a, b = self.data.reshape(-1), jnp.asarray(_unwrap(other)).reshape(-1)
+        return jnp.dot(a, b)
+
+    @property
+    def T(self) -> "LocalMatrix":
+        return LocalMatrix(self.data.T)
+
+    def transpose(self) -> "LocalMatrix":
+        return self.T
+
+    def solve(self, rhs: ArrayLike) -> "LocalMatrix":
+        """Solve ``self @ x = rhs`` (paper: ``matA.solve(v)``)."""
+        b = jnp.asarray(_unwrap(rhs))
+        squeeze = b.ndim == 1
+        if squeeze:
+            b = b[:, None]
+        x = jnp.linalg.solve(self.data, b)
+        return LocalMatrix(x)
+
+    def inverse(self) -> "LocalMatrix":
+        return LocalMatrix(jnp.linalg.inv(self.data))
+
+    def svd(self):
+        u, s, vt = jnp.linalg.svd(self.data, full_matrices=False)
+        return LocalMatrix(u), s, LocalMatrix(vt)
+
+    def eigen(self):
+        w, v = jnp.linalg.eigh(self.data)
+        return w, LocalMatrix(v)
+
+    def rank(self, tol: float = 1e-6):
+        s = jnp.linalg.svd(self.data, compute_uv=False)
+        return jnp.sum(s > tol * s[0])
+
+    def norm(self, ord=None):
+        return jnp.linalg.norm(self.data, ord=ord)
+
+    # conversion ------------------------------------------------------------ #
+    def to_vector(self) -> jnp.ndarray:
+        return self.data.reshape(-1)
+
+    toVector = to_vector  # paper spelling
+
+    def to_numpy(self) -> np.ndarray:
+        return np.asarray(self.data)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"LocalMatrix(shape={tuple(self.data.shape)}, dtype={self.data.dtype})"
+
+
+@jax.tree_util.register_pytree_node_class
+class PaddedCSR:
+    """Fixed-width CSR-style sparse rows (TPU-static analogue of the paper's
+    CSR-compressed LocalMatrix support used by ALS).
+
+    Each of the ``m`` rows stores up to ``max_nnz`` (column-index, value)
+    pairs plus a validity mask.  ``row_indices/row_values/row_mask`` give ALS
+    the `nonZeroIndices` + `nonZeroProjection` access pattern from Fig. A9.
+    """
+
+    def __init__(self, indices: jnp.ndarray, values: jnp.ndarray, mask: jnp.ndarray):
+        self.indices = jnp.asarray(indices)
+        self.values = jnp.asarray(values)
+        self.mask = jnp.asarray(mask)
+        if not (self.indices.shape == self.values.shape == self.mask.shape):
+            raise ValueError("indices/values/mask shapes must match")
+
+    def tree_flatten(self):
+        return (self.indices, self.values, self.mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        obj.indices, obj.values, obj.mask = children
+        return obj
+
+    @property
+    def num_rows(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def max_nnz(self) -> int:
+        return self.indices.shape[1]
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray, max_nnz: int = None) -> "PaddedCSR":
+        dense = np.asarray(dense)
+        m, _ = dense.shape
+        nnz_per_row = (dense != 0).sum(axis=1)
+        if max_nnz is None:
+            max_nnz = int(nnz_per_row.max()) if m else 0
+        idx = np.zeros((m, max_nnz), dtype=np.int32)
+        val = np.zeros((m, max_nnz), dtype=dense.dtype)
+        msk = np.zeros((m, max_nnz), dtype=bool)
+        for i in range(m):
+            nz = np.nonzero(dense[i])[0][:max_nnz]
+            idx[i, : len(nz)] = nz
+            val[i, : len(nz)] = dense[i, nz]
+            msk[i, : len(nz)] = True
+        return cls(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(msk))
+
+    @classmethod
+    def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 num_rows: int, max_nnz: int) -> "PaddedCSR":
+        idx = np.zeros((num_rows, max_nnz), dtype=np.int32)
+        val = np.zeros((num_rows, max_nnz), dtype=np.float32)
+        msk = np.zeros((num_rows, max_nnz), dtype=bool)
+        fill = np.zeros(num_rows, dtype=np.int64)
+        for r, c, v in zip(rows, cols, vals):
+            k = fill[r]
+            if k < max_nnz:
+                idx[r, k], val[r, k], msk[r, k] = c, v, True
+                fill[r] += 1
+        return cls(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(msk))
+
+    def to_dense(self, num_cols: int) -> LocalMatrix:
+        m = self.num_rows
+        dense = jnp.zeros((m, num_cols), self.values.dtype)
+        rows = jnp.arange(m)[:, None].repeat(self.max_nnz, axis=1)
+        dense = dense.at[rows, self.indices].add(jnp.where(self.mask, self.values, 0.0))
+        return LocalMatrix(dense)
+
+    def gather_rows_of(self, factor: jnp.ndarray, row: int):
+        """Return (Yq, ratings, mask) for one sparse row — the Fig. A9 access
+        pattern ``Y.getRows(tuple.nonZeroIndices)`` with static shapes."""
+        cols = self.indices[row]
+        yq = jnp.take(factor, cols, axis=0)           # (max_nnz, k)
+        ratings = self.values[row]                    # (max_nnz,)
+        mask = self.mask[row]
+        return yq, ratings, mask

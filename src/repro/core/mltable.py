@@ -1,0 +1,257 @@
+"""Host-tier MLTable (paper §III-A, API table Fig. A1).
+
+This is the ETL / feature-extraction tier: rows live in host memory (numpy
+object storage), partitioned into ``num_partitions`` chunks that model the
+distributed partitioning of the Spark implementation.  Once featurized, a
+table whose schema is fully numeric is committed to the device tier with
+:meth:`MLTable.to_numeric`, producing an :class:`~repro.core.numeric_table.
+MLNumericTable` sharded over the mesh ``data`` axis — from that point on all
+compute is JAX/XLA.
+
+Supported operations follow Fig. A1 of the paper:
+
+    project, union, filter, join, map, flatMap, reduce, reduceByKey,
+    matrixBatchMap (on the numeric tier), numRows, numCols
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.schema import EMPTY, ColumnType, MLRow, Schema
+
+__all__ = ["MLTable"]
+
+
+def _chunk(rows: List[MLRow], num_partitions: int) -> List[List[MLRow]]:
+    """Split rows into contiguous, nearly-equal partitions (Spark-style)."""
+    n = len(rows)
+    num_partitions = max(1, num_partitions)
+    base, extra = divmod(n, num_partitions)
+    out, start = [], 0
+    for p in range(num_partitions):
+        size = base + (1 if p < extra else 0)
+        out.append(rows[start : start + size])
+        start += size
+    return out
+
+
+class MLTable:
+    """A schema'd collection of rows, partitioned for data-local operation."""
+
+    def __init__(
+        self,
+        partitions: Sequence[Sequence[MLRow]],
+        schema: Schema,
+        validate: bool = False,
+    ) -> None:
+        self._partitions: List[List[MLRow]] = [list(p) for p in partitions]
+        self.schema = schema
+        if validate:
+            for row in self.rows():
+                schema.validate_row(row)
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_rows(
+        cls,
+        rows: Iterable[Sequence[Any]],
+        schema: Optional[Schema] = None,
+        names: Optional[Sequence[str]] = None,
+        num_partitions: int = 4,
+    ) -> "MLTable":
+        materialized = [tuple(r) for r in rows]
+        if not materialized and schema is None:
+            raise ValueError("cannot infer schema from an empty table")
+        if schema is None:
+            schema = Schema.infer_from_row(materialized[0], names=names)
+        mlrows = [MLRow(r, schema) for r in materialized]
+        return cls(_chunk(mlrows, num_partitions), schema, validate=True)
+
+    @classmethod
+    def from_numpy(cls, array: np.ndarray, num_partitions: int = 4,
+                   names: Optional[Sequence[str]] = None) -> "MLTable":
+        if array.ndim != 2:
+            raise ValueError("from_numpy expects a 2-D array")
+        schema = Schema.of(*([ColumnType.SCALAR] * array.shape[1]), names=names)
+        rows = [MLRow(tuple(float(v) for v in row), schema) for row in array]
+        return cls(_chunk(rows, num_partitions), schema)
+
+    @classmethod
+    def from_text(cls, lines: Iterable[str], num_partitions: int = 4) -> "MLTable":
+        """The paper's ``mc.textFile`` entry point: one STRING column per line."""
+        schema = Schema.of(ColumnType.STRING, names=["text"])
+        rows = [MLRow((ln.rstrip("\n"),), schema) for ln in lines]
+        return cls(_chunk(rows, num_partitions), schema)
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    @property
+    def num_partitions(self) -> int:
+        return len(self._partitions)
+
+    @property
+    def partitions(self) -> List[List[MLRow]]:
+        return self._partitions
+
+    def rows(self) -> Iterable[MLRow]:
+        return itertools.chain.from_iterable(self._partitions)
+
+    def collect(self) -> List[MLRow]:
+        return list(self.rows())
+
+    @property
+    def num_rows(self) -> int:
+        return sum(len(p) for p in self._partitions)
+
+    @property
+    def num_cols(self) -> int:
+        return len(self.schema)
+
+    # Fig A1 spells these numRows/numCols; keep aliases for API fidelity.
+    numRows = num_rows
+    numCols = num_cols
+
+    # ------------------------------------------------------------------ #
+    # relational operations (Fig. A1)
+    # ------------------------------------------------------------------ #
+    def project(self, indices: Sequence[Any]) -> "MLTable":
+        """Select a subset of columns (by index or name)."""
+        idx = [self.schema.index_of(i) if isinstance(i, str) else int(i) for i in indices]
+        schema = self.schema.project(idx)
+        parts = [[MLRow((r[i] for i in idx), schema) for r in p] for p in self._partitions]
+        return MLTable(parts, schema)
+
+    def union(self, other: "MLTable") -> "MLTable":
+        if self.schema != other.schema:
+            raise TypeError("union requires identical schemas")
+        return MLTable(self._partitions + other._partitions, self.schema)
+
+    def filter(self, pred: Callable[[MLRow], bool]) -> "MLTable":
+        parts = [[r for r in p if pred(r)] for p in self._partitions]
+        return MLTable(parts, self.schema)
+
+    def join(self, other: "MLTable", on: Sequence[Any]) -> "MLTable":
+        """Inner hash-join on shared columns (paper: join(MLTable, Seq[Index]))."""
+        left_idx = [self.schema.index_of(i) if isinstance(i, str) else int(i) for i in on]
+        right_idx = [other.schema.index_of(i) if isinstance(i, str) else int(i) for i in on]
+        right_keep = [j for j in range(len(other.schema)) if j not in right_idx]
+        schema = Schema(
+            tuple(self.schema.columns) + tuple(other.schema.columns[j] for j in right_keep)
+        )
+        table: Dict[Tuple[Any, ...], List[MLRow]] = {}
+        for r in other.rows():
+            table.setdefault(tuple(r[j] for j in right_idx), []).append(r)
+        parts: List[List[MLRow]] = []
+        for p in self._partitions:
+            out = []
+            for r in p:
+                for match in table.get(tuple(r[i] for i in left_idx), ()):  # inner join
+                    out.append(MLRow(tuple(r) + tuple(match[j] for j in right_keep), schema))
+            parts.append(out)
+        return MLTable(parts, schema)
+
+    # ------------------------------------------------------------------ #
+    # MapReduce operations (Fig. A1)
+    # ------------------------------------------------------------------ #
+    def map(self, fn: Callable[[MLRow], Sequence[Any]],
+            schema: Optional[Schema] = None) -> "MLTable":
+        parts: List[List[MLRow]] = []
+        for p in self._partitions:
+            out = []
+            for r in p:
+                v = fn(r)
+                if schema is None:
+                    schema = Schema.infer_from_row(tuple(v))
+                out.append(MLRow(tuple(v), schema))
+            parts.append(out)
+        if schema is None:  # empty table
+            schema = self.schema
+        return MLTable(parts, schema)
+
+    def flat_map(self, fn: Callable[[MLRow], Iterable[Sequence[Any]]],
+                 schema: Optional[Schema] = None) -> "MLTable":
+        parts: List[List[MLRow]] = []
+        for p in self._partitions:
+            out = []
+            for r in p:
+                for v in fn(r):
+                    if schema is None:
+                        schema = Schema.infer_from_row(tuple(v))
+                    out.append(MLRow(tuple(v), schema))
+            parts.append(out)
+        if schema is None:
+            schema = self.schema
+        return MLTable(parts, schema)
+
+    flatMap = flat_map  # paper spelling
+
+    def reduce(self, fn: Callable[[MLRow, MLRow], Sequence[Any]]) -> MLRow:
+        """Tree-combine all rows with an associative, commutative function.
+
+        Mirrors the distributed semantics: reduce within each partition first,
+        then across partition results.
+        """
+        partials = []
+        for p in self._partitions:
+            if not p:
+                continue
+            acc = p[0]
+            for r in p[1:]:
+                acc = MLRow(tuple(fn(acc, r)), self.schema)
+            partials.append(acc)
+        if not partials:
+            raise ValueError("reduce of empty table")
+        acc = partials[0]
+        for r in partials[1:]:
+            acc = MLRow(tuple(fn(acc, r)), self.schema)
+        return acc
+
+    def reduce_by_key(self, key_col: Any,
+                      fn: Callable[[MLRow, MLRow], Sequence[Any]]) -> "MLTable":
+        key_idx = self.schema.index_of(key_col) if isinstance(key_col, str) else int(key_col)
+        groups: Dict[Any, MLRow] = {}
+        for r in self.rows():
+            k = r[key_idx]
+            if k in groups:
+                groups[k] = MLRow(tuple(fn(groups[k], r)), self.schema)
+            else:
+                groups[k] = r
+        rows = list(groups.values())
+        return MLTable(_chunk(rows, self.num_partitions), self.schema)
+
+    reduceByKey = reduce_by_key  # paper spelling
+
+    # ------------------------------------------------------------------ #
+    # commit to device tier
+    # ------------------------------------------------------------------ #
+    def to_numeric(self, num_shards: Optional[int] = None, mesh=None,
+                   dtype=np.float32):
+        """Cast to MLNumericTable (paper §III-A), sharded over the data axis.
+
+        Every column must be numeric; Empty cells become NaN (algorithms are
+        expected to impute/filter first — matching the paper's convention that
+        Empty is represented by a special value).
+        """
+        if not self.schema.is_numeric:
+            bad = [c for c in self.schema.columns if not c.ctype.is_numeric]
+            raise TypeError(f"non-numeric columns present: {bad}")
+        from repro.core.numeric_table import MLNumericTable  # local import, avoids cycle
+
+        data = np.asarray([r.to_floats() for r in self.rows()], dtype=dtype)
+        if data.size == 0:
+            data = data.reshape(0, len(self.schema))
+        return MLNumericTable.from_numpy(
+            data, num_shards=num_shards, mesh=mesh, names=self.schema.names
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"MLTable(rows={self.num_rows}, cols={self.num_cols}, "
+            f"partitions={self.num_partitions}, schema={[c.ctype.value for c in self.schema.columns]})"
+        )

@@ -1,0 +1,13 @@
+from repro.data.synthetic import (
+    synth_classification,
+    synth_imagenet_features,
+    synth_netflix_tiled,
+    synth_text_corpus,
+    SyntheticLMDataset,
+)
+from repro.data.pipeline import BatchIterator
+
+__all__ = [
+    "synth_classification", "synth_imagenet_features", "synth_netflix_tiled",
+    "synth_text_corpus", "SyntheticLMDataset", "BatchIterator",
+]

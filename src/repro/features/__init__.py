@@ -1,0 +1,5 @@
+"""Feature extraction (paper Fig. A2: nGrams → tfIdf → KMeans pipeline)."""
+from repro.features.text import n_grams, tf_idf, hashing_vectorizer
+from repro.features.scaling import standardize, add_bias
+
+__all__ = ["n_grams", "tf_idf", "hashing_vectorizer", "standardize", "add_bias"]

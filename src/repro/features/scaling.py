@@ -1,0 +1,30 @@
+"""Numeric feature transforms on the device tier."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.numeric_table import MLNumericTable
+
+__all__ = ["standardize", "add_bias"]
+
+
+def standardize(table: MLNumericTable, eps: float = 1e-8) -> MLNumericTable:
+    """Column-wise (x - mean) / std.  Means/stds are computed with explicit
+    global reduces (sum, sum-of-squares), honouring the shared-nothing rule."""
+    n = table.num_rows
+    s = table.sum_rows()
+    ss = jnp.sum(table.data * table.data, axis=0)
+    mean = s / n
+    var = jnp.maximum(ss / n - mean * mean, 0.0)
+    std = jnp.sqrt(var) + eps
+    data = (table.data - mean) / std
+    return MLNumericTable(data, num_shards=table.num_shards, mesh=table.mesh,
+                          names=table.names, data_axes=table.data_axes or None)
+
+
+def add_bias(table: MLNumericTable, at: int = 1) -> MLNumericTable:
+    """Insert a constant-1 bias column at index ``at`` (after the label col)."""
+    ones = jnp.ones((table.num_rows, 1), table.data.dtype)
+    data = jnp.concatenate([table.data[:, :at], ones, table.data[:, at:]], axis=1)
+    return MLNumericTable(data, num_shards=table.num_shards, mesh=table.mesh,
+                          data_axes=table.data_axes or None)

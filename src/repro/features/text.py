@@ -1,0 +1,93 @@
+"""Text featurization transforms (paper §III-A, Fig. A2).
+
+Data transformations are functions MLTable -> MLTable (potentially of a
+different schema).  ``n_grams`` produces per-document n-gram counts for the
+``top`` most frequent grams in the corpus; ``tf_idf`` converts the count
+table to TF-IDF; ``hashing_vectorizer`` is the streaming-friendly variant
+(beyond-paper convenience, same contract).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import Counter
+from typing import List
+
+import numpy as np
+
+from repro.core.mltable import MLTable
+from repro.core.schema import ColumnType, MLRow, Schema
+
+__all__ = ["n_grams", "tf_idf", "hashing_vectorizer"]
+
+_TOKEN = re.compile(r"[a-z0-9']+")
+
+
+def _tokens(text: str) -> List[str]:
+    return _TOKEN.findall(text.lower())
+
+
+def _grams(text: str, n: int) -> List[str]:
+    toks = _tokens(text)
+    return [" ".join(toks[i : i + n]) for i in range(len(toks) - n + 1)]
+
+
+def n_grams(table: MLTable, n: int = 2, top: int = 30000, column: int = 0) -> MLTable:
+    """Per-document frequency of the corpus's ``top`` n-grams (Fig. A2
+    ``nGrams(rawTextTable, n=2, top=30000)``).
+
+    Input: a table with a STRING column.  Output schema: one SCALAR column per
+    selected gram (named by the gram), rows aligned with input rows.
+    """
+    col = table.schema.index_of(column) if isinstance(column, str) else column
+    corpus = Counter()
+    per_doc: List[Counter] = []
+    for row in table.rows():
+        g = Counter(_grams(str(row[col]), n))
+        per_doc.append(g)
+        corpus.update(g)
+    vocab = [g for g, _ in corpus.most_common(top)]
+    index = {g: i for i, g in enumerate(vocab)}
+    schema = Schema.of(*([ColumnType.SCALAR] * len(vocab)), names=vocab)
+    rows = []
+    for g in per_doc:
+        vec = [0.0] * len(vocab)
+        for gram, c in g.items():
+            j = index.get(gram)
+            if j is not None:
+                vec[j] = float(c)
+        rows.append(MLRow(vec, schema))
+    from repro.core.mltable import _chunk  # same partitioning policy
+
+    return MLTable(_chunk(rows, table.num_partitions), schema)
+
+
+def tf_idf(table: MLTable) -> MLTable:
+    """TF-IDF over a count table (Fig. A2 ``tfIdf(...)``):
+    tf = count / doc_total, smooth idf = log((1 + N) / (1 + df)) ≥ 0."""
+    counts = np.asarray([r.to_floats() for r in table.rows()], dtype=np.float64)
+    n_docs = counts.shape[0]
+    doc_tot = np.maximum(counts.sum(axis=1, keepdims=True), 1.0)
+    tf = counts / doc_tot
+    df = (counts > 0).sum(axis=0)
+    idf = np.log((1.0 + n_docs) / (1.0 + df))
+    mat = (tf * idf).astype(np.float32)
+    out = MLTable.from_numpy(mat, num_partitions=table.num_partitions,
+                             names=table.schema.names)
+    return out
+
+
+def hashing_vectorizer(table: MLTable, num_features: int = 1024, n: int = 1,
+                       column: int = 0) -> MLTable:
+    """Feature hashing: stateless n-gram → bucket counts (streaming-friendly)."""
+    col = table.schema.index_of(column) if isinstance(column, str) else column
+    rows_out = []
+    schema = Schema.of(*([ColumnType.SCALAR] * num_features))
+    for row in table.rows():
+        vec = [0.0] * num_features
+        for gram in _grams(str(row[col]), n):
+            vec[hash(gram) % num_features] += 1.0
+        rows_out.append(MLRow(vec, schema))
+    from repro.core.mltable import _chunk
+
+    return MLTable(_chunk(rows_out, table.num_partitions), schema)

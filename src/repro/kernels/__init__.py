@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (validated interpret=True).
+
+    flash_attention — online-softmax attention (causal/SWA/chunked, GQA)
+    logreg_grad     — the paper's §IV-A fused gradient  Xᵀ(σ(Xw) − y)
+    rmsnorm         — single-pass fused RMSNorm
+    ssd_scan        — Mamba-2 SSD chunked dual-form scan (state in VMEM)
+
+``ops`` holds the public wrappers; ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

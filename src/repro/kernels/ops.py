@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each wrapper validates shapes, auto-selects ``interpret=True`` off-TPU (this
+container is CPU-only; the TPU is the deployment target), and falls back to
+the pure-jnp oracle for shapes the kernels' block constraints cannot tile
+(non-divisible sequence lengths etc.) so callers never have to branch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.logreg_grad import logreg_grad_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_scan
+
+__all__ = ["flash_attention", "logreg_grad", "rmsnorm", "ssd_chunk_scan",
+           "on_tpu"]
+
+
+@functools.lru_cache(None)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, chunk: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128) -> jnp.ndarray:
+    """(B, H, Sq, hd) x (B, KV, Sk, hd)² -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    if v.shape != k.shape:
+        raise ValueError(f"k/v shape mismatch: {k.shape} vs {v.shape}")
+    if H % KV:
+        raise ValueError(f"H={H} not divisible by KV={KV}")
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       chunk=chunk, scale=scale)
+    return _flash(q, k, v, causal=causal, window=window, chunk=chunk,
+                  scale=scale, block_q=bq, block_k=bk, interpret=_interp())
+
+
+def logreg_grad(X, y, w, *, block_rows: int = 256, block_cols: int = 512) -> jnp.ndarray:
+    """∇f = Xᵀ(σ(Xw) − y) fused.  X: (n,d), y: (n,), w: (d,)."""
+    n, d = X.shape
+    if y.shape != (n,) or w.shape != (d,):
+        raise ValueError(f"shape mismatch: X{X.shape} y{y.shape} w{w.shape}")
+    br = min(block_rows, n)
+    bc = min(block_cols, d)
+    if n % br or d % bc:
+        return ref.logreg_grad_ref(X, y, w)
+    return logreg_grad_pallas(X, y, w, block_rows=br, block_cols=bc,
+                              interpret=_interp())
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 64) -> jnp.ndarray:
+    """RMSNorm over the last dim.  x: (..., d), weight: (d,)."""
+    if weight.shape != (x.shape[-1],):
+        raise ValueError(f"weight {weight.shape} vs x feature dim {x.shape[-1]}")
+    return rmsnorm_pallas(x, weight, eps=eps, block_rows=block_rows,
+                          interpret=_interp())
+
+
+def ssd_chunk_scan(log_a, dx, Bm, Cm, h0=None, *, chunk: int = 64):
+    """Mamba-2 SSD chunked scan.  log_a: (B,H,S), dx: (B,H,S,P),
+    Bm/Cm: (B,S,N) → (y (B,H,S,P), h_final (B,H,P,N))."""
+    B, H, S, P = dx.shape
+    if log_a.shape != (B, H, S) or Bm.shape[:2] != (B, S):
+        raise ValueError(f"shape mismatch: log_a{log_a.shape} dx{dx.shape} "
+                         f"Bm{Bm.shape}")
+    if S % min(chunk, S):
+        return ref.ssd_chunk_scan_ref(log_a, dx, Bm, Cm, h0, chunk=S)
+    return _ssd_scan(log_a, dx, Bm, Cm, h0, chunk=chunk, interpret=_interp())

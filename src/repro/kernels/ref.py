@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel test sweeps shapes/dtypes and
+asserts ``allclose(kernel(interpret=True), ref)``.  They are also the CPU
+fallback path used by the layers when no TPU is present.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "logreg_grad_ref", "rmsnorm_ref",
+           "ssd_chunk_scan_ref"]
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,            # (B, H, Sq, hd)
+    k: jnp.ndarray,            # (B, KV, Sk, hd)
+    v: jnp.ndarray,            # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,     # sliding-window span (None = global)
+    chunk: Optional[int] = None,      # chunked-local attention span
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive attention with fp32 softmax — the oracle for the flash kernel."""
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    groups = H // KV
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=1)
+        v = jnp.repeat(v, groups, axis=1)
+    scale = hd ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    Sk = k.shape[2]
+    # prefill convention: query i sits at absolute position (Sk - Sq + i)
+    pos_q = jnp.arange(Sq) + (Sk - Sq)
+    pos_k = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        mask &= pos_q[:, None] - pos_k[None, :] < window
+    if chunk is not None:
+        mask &= (pos_q[:, None] // chunk) == (pos_k[None, :] // chunk)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def logreg_grad_ref(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. (1): ∇f = Xᵀ(σ(Xw) − y).  X: (n, d), y: (n,), w: (d,)."""
+    margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
+    z = jax.nn.sigmoid(margin) - y.astype(jnp.float32)
+    return (X.astype(jnp.float32).T @ z).astype(w.dtype)
+
+
+def ssd_chunk_scan_ref(
+    log_a: jnp.ndarray,   # (B, H, S) per-step log decay  (≤ 0)
+    dx: jnp.ndarray,      # (B, H, S, P) Δ·x
+    Bm: jnp.ndarray,      # (B, S, N) input projections (shared across heads)
+    Cm: jnp.ndarray,      # (B, S, N) output projections
+    h0: Optional[jnp.ndarray] = None,   # (B, H, P, N) initial state
+    *,
+    chunk: int = 64,
+):
+    """Mamba-2 SSD chunked dual form (arXiv:2405.21060) — the oracle for the
+    Pallas kernel.  Returns (y (B,H,S,P), h_final (B,H,P,N))."""
+    B, H, S, P = dx.shape
+    N = Bm.shape[-1]
+    L = chunk
+    assert S % L == 0
+    C = S // L
+    la = log_a.reshape(B, H, C, L).astype(jnp.float32)
+    dxc = dx.reshape(B, H, C, L, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, C, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, C, L, N).astype(jnp.float32)
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    ys = []
+    for c in range(C):
+        cum = jnp.cumsum(la[:, :, c], axis=-1)                 # (B,H,L)
+        CB = jnp.einsum("btn,bsn->bts", Cc[:, c], Bc[:, c])    # (B,L,L)
+        decay = jnp.exp(jnp.minimum(cum[:, :, :, None] - cum[:, :, None, :], 0.0))
+        M = CB[:, None] * decay * causal[None, None]
+        y_intra = jnp.einsum("bhts,bhsp->bhtp", M, dxc[:, :, c])
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "btn,bhpn->bhtp", Cc[:, c], h)
+        w_tail = jnp.exp(cum[:, :, -1:] - cum)                 # (B,H,L)
+        h = h * jnp.exp(cum[:, :, -1])[..., None, None] + jnp.einsum(
+            "bhs,bhsp,bsn->bhpn", w_tail, dxc[:, :, c], Bc[:, c])
+        ys.append(y_intra + y_inter)
+    y = jnp.stack(ys, axis=2).reshape(B, H, S, P)
+    return y, h
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with fp32 statistics: x * rsqrt(mean(x²)+eps) * w."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)

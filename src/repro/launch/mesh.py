@@ -1,0 +1,68 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init;
+tests and benches see the plain 1-device CPU).
+
+Topology (TPU v5e target):
+    single pod   (16, 16)    axes ("data", "model")   — 256 chips
+    multi-pod    (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+The "data" axis carries the paper's partition dimension (MLI partitions ==
+data-parallel shards); "model" adds tensor/expert parallelism; "pod" is the
+cross-pod data-parallel axis whose collectives ride DCI, not ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_serving_mesh(*, multi_pod: bool = False,
+                      model: int = 8) -> jax.sharding.Mesh:
+    """Serving-tuned factorization of the same chips (§Perf H1d): decode
+    wants the model axis to DIVIDE the kv-head count so the cache IO layout
+    matches GSPMD's head-parallel attention — (32, 8) removed granite's
+    per-step 86 GB cache all-gather entirely (collective term 1.72 s →
+    2.4 ms).  Default model=8 fits every GQA arch in the pool (kv ∈
+    {1, 2, 8, 12, 40 → replicated})."""
+    data = (512 if multi_pod else 256) // model
+    if multi_pod:
+        return jax.make_mesh((2, data // 2, model), ("pod", "data", "model"),
+                             axis_types=_auto(3))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def serving_setup(cfg, *, multi_pod: bool = False):
+    """Per-arch serving profile (EXPERIMENTS.md §Perf, optimized-serving
+    table): attention-cache-dominated archs win 3–14× on the (32,8) mesh +
+    SERVE_RULES; recurrent/SSM archs (tiny per-step state, weight-read
+    bound) keep the training mesh + DEFAULT_RULES, where FSDP storage beats
+    replicated weight reads.  Returns (mesh, rules)."""
+    from repro.models.config import BlockKind
+    from repro.sharding.rules import DEFAULT_RULES, SERVE_RULES
+
+    recurrent = any(k in (BlockKind.RGLRU, BlockKind.SSD)
+                    for k in cfg.pattern)
+    if recurrent:
+        return make_production_mesh(multi_pod=multi_pod), DEFAULT_RULES
+    return make_serving_mesh(multi_pod=multi_pod), SERVE_RULES
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (host) devices exist — used by tests and
+    the CPU examples; same axis names as production so all sharding rules
+    apply unchanged."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))

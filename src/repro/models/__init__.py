@@ -1,0 +1,6 @@
+"""Transformer model zoo: the beyond-paper substrate the MLI Optimizer/
+Algorithm contracts are exercised against at pod scale."""
+from repro.models.config import ArchConfig, BlockKind
+from repro.models.transformer import TransformerLM, init_model
+
+__all__ = ["ArchConfig", "BlockKind", "TransformerLM", "init_model"]

@@ -1,0 +1,1 @@
+"""Layer library for the architecture zoo."""

@@ -1,0 +1,319 @@
+"""Attention: GQA with RoPE/NoPE, global / sliding-window / chunked-local
+variants, KV-cache decode (full and ring-buffer), optional int8 cache,
+cross-attention for encoder–decoder stacks.
+
+Memory discipline: prefill never materializes the full (S, S) logits — the
+query dimension is processed in ``q_chunk`` blocks via ``lax.scan`` and each
+block sees only the key span its mask admits:
+
+    global/NoPE   key span = all keys ≤ chunk end      O(S·S) flops, O(S·C) mem
+    sliding W     key span = C + W_pad                  O(S·W)
+    chunked C_a   key span = its own attention chunk    O(S·C_a)
+
+GQA is computed by broadcasting kv heads to q heads (``jnp.repeat``) so the
+head dimension shards cleanly on the mesh "model" axis; XLA fuses the
+broadcast into the einsum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, BlockKind
+from repro.models.layers.rope import apply_rope
+from repro.models.params import bias as bias_init
+from repro.models.params import linear, split_tree_of
+
+__all__ = ["attn_init", "attn_apply", "init_kv_cache", "NEG_INF"]
+
+NEG_INF = -2.0e38  # fp32-safe mask value
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def attn_init(key: jax.Array, cfg: ArchConfig, dtype, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    mixed: Dict[str, Any] = {
+        "wq": linear(ks[0], (d, h, hd), ("embed", "heads", "head"), fan_in=d, dtype=dtype),
+        "wk": linear(ks[1], (d, kv, hd), ("embed", "kv_heads", "head"), fan_in=d, dtype=dtype),
+        "wv": linear(ks[2], (d, kv, hd), ("embed", "kv_heads", "head"), fan_in=d, dtype=dtype),
+        "wo": linear(ks[3], (h, hd, d), ("heads", "head", "embed"), fan_in=h * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        mixed["bq"] = bias_init((h, hd), ("heads", "head"), dtype)
+        mixed["bk"] = bias_init((kv, hd), ("kv_heads", "head"), dtype)
+        mixed["bv"] = bias_init((kv, hd), ("kv_heads", "head"), dtype)
+    return split_tree_of(mixed)
+
+
+# --------------------------------------------------------------------------- #
+# kv cache
+# --------------------------------------------------------------------------- #
+def init_kv_cache(cfg: ArchConfig, kind: BlockKind, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Cache for ONE attention layer.  Local/chunked layers keep a ring of
+    ``window``/``attn_chunk`` slots; global layers keep ``max_seq``."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kind == BlockKind.ATTN_LOCAL:
+        slots = min(cfg.window, max_seq)
+    elif kind == BlockKind.ATTN_CHUNKED:
+        slots = min(cfg.attn_chunk, max_seq)
+    else:
+        slots = max_seq
+    if cfg.cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, slots, kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, slots, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, slots, kv), jnp.float32),
+            "v_scale": jnp.zeros((batch, slots, kv), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, slots, kv, hd), dtype),
+        "v": jnp.zeros((batch, slots, kv, hd), dtype),
+    }
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _cache_write(cache: Dict[str, jnp.ndarray], slot: jnp.ndarray,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write one token (B, kv, hd) at ring slot (scalar int32)."""
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        out["k"] = cache["k"].at[:, slot].set(kq)
+        out["v"] = cache["v"].at[:, slot].set(vq)
+        out["k_scale"] = cache["k_scale"].at[:, slot].set(ks)
+        out["v_scale"] = cache["v_scale"].at[:, slot].set(vs)
+    else:
+        out["k"] = cache["k"].at[:, slot].set(k_new.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, slot].set(v_new.astype(cache["v"].dtype))
+    return out
+
+
+def _cache_read(cache: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if "k_scale" in cache:
+        k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+        v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return cache["k"], cache["v"]
+
+
+# --------------------------------------------------------------------------- #
+# core attention math
+# --------------------------------------------------------------------------- #
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """q: (B, Sq, H, hd)  k/v: (B, Sk, H, hd)  mask: (B|1, 1, Sq, Sk) bool.
+    fp32 softmax, bf16 matmuls with fp32 accumulation."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    return jnp.repeat(k, groups, axis=2) if groups > 1 else k
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# --------------------------------------------------------------------------- #
+# prefill / train forward
+# --------------------------------------------------------------------------- #
+def _prefill_attend(q, k, v, kind: BlockKind, cfg: ArchConfig,
+                    positions: jnp.ndarray) -> jnp.ndarray:
+    """q/k/v: (B, S, H, hd) with kv already broadcast to H heads.
+    positions: (S,) int32 absolute positions (shared across batch)."""
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    C = min(cfg.q_chunk, S)
+    if S % C != 0:
+        C = S  # fall back to single block (configs keep shapes divisible)
+    n_chunks = S // C
+
+    pos_q_all = positions
+    pos_k_all = positions
+
+    def mask_for(pq, pk):
+        m = pk[None, :] <= pq[:, None] if cfg.causal else jnp.ones((pq.shape[0], pk.shape[0]), bool)
+        if kind == BlockKind.ATTN_LOCAL:
+            m = m & (pq[:, None] - pk[None, :] < cfg.window)
+        elif kind == BlockKind.ATTN_CHUNKED:
+            m = m & ((pq[:, None] // cfg.attn_chunk) == (pk[None, :] // cfg.attn_chunk))
+        return m[None, None]  # (1, 1, Sq, Sk)
+
+    if n_chunks == 1:
+        return _sdpa(q, k, v, mask_for(pos_q_all, pos_k_all), scale)
+
+    # key span per chunk kind
+    if kind == BlockKind.ATTN_LOCAL:
+        span = C + _round_up(cfg.window, C)
+    elif kind == BlockKind.ATTN_CHUNKED:
+        span = max(cfg.attn_chunk, C)
+    else:
+        span = S  # causal global: masked full span (flash kernel is the
+        #           optimized path; see repro.kernels.flash_attention)
+
+    q_c = q.reshape(B, n_chunks, C, H, hd)
+
+    def body(_, i):
+        qi = q_c[:, i]                                   # (B, C, H, hd)
+        q_start = i * C
+        pos_q = jax.lax.dynamic_slice_in_dim(pos_q_all, q_start, C)
+        if span >= S:
+            ki, vi, pos_k = k, v, pos_k_all
+        else:
+            if kind == BlockKind.ATTN_CHUNKED:
+                start = (q_start // cfg.attn_chunk) * cfg.attn_chunk
+            else:
+                start = q_start + C - span
+            start = jnp.clip(start, 0, S - span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            pos_k = jax.lax.dynamic_slice_in_dim(pos_k_all, start, span)
+        out = _sdpa(qi, ki, vi, mask_for(pos_q, pos_k), scale)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, C, H, hd) -> (B, S, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+# --------------------------------------------------------------------------- #
+# public apply
+# --------------------------------------------------------------------------- #
+def attn_apply(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    cfg: ArchConfig,
+    kind: BlockKind,
+    mode: str,                       # "prefill" | "decode"
+    positions: Optional[jnp.ndarray] = None,   # (S,) prefill positions
+    pos: Optional[jnp.ndarray] = None,         # scalar decode position
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    kv_src: Optional[jnp.ndarray] = None,      # cross-attention source (B,Se,D)
+    is_cross: bool = False,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (output (B,S,D), updated_cache_or_None)."""
+    B, S, D = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    groups = h // kv
+    rope_on = use_rope and kind != BlockKind.ATTN_NOPE
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+
+    cross = is_cross or kv_src is not None
+    if cross and cache is not None and mode == "decode":
+        # cross K/V were cached at prefill; nothing to project
+        k, v = _cache_read(cache)
+        new_cache = cache
+    else:
+        src = kv_src if cross else x
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+        if "bk" in params:
+            k = k + params["bk"]
+            v = v + params["bv"]
+        new_cache = None
+
+    if mode == "prefill":
+        if cross:
+            pos_q = positions if positions is not None else jnp.arange(S)
+            if rope_on:
+                q = apply_rope(q, pos_q[None, :], cfg.rope_base)
+            kf = _repeat_kv(k, groups)
+            vf = _repeat_kv(v, groups)
+            mask = jnp.ones((1, 1, S, k.shape[1]), bool)
+            out = _sdpa(q, kf, vf, mask, hd ** -0.5)
+            cross_cache = {"k": k, "v": v} if cache is not None else None
+            return _out_proj(out, params), cross_cache
+        pos_q = positions if positions is not None else jnp.arange(S)
+        if rope_on:
+            q = apply_rope(q, pos_q[None, :], cfg.rope_base)
+            k = apply_rope(k, pos_q[None, :], cfg.rope_base)
+        if cache is not None:
+            # write the (possibly windowed) tail of K/V into the cache for
+            # subsequent decode
+            cache = _prefill_fill_cache(cache, k, v)
+        out = _prefill_attend(q, _repeat_kv(k, groups), _repeat_kv(v, groups),
+                              kind, cfg, pos_q)
+        return _out_proj(out, params), cache
+
+    # ---------------- decode: S == 1, attend to cache ---------------- #
+    assert mode == "decode" and cache is not None and pos is not None
+    if rope_on:
+        q = apply_rope(q, pos[None, None], cfg.rope_base)
+    if not cross:
+        if rope_on:
+            k = apply_rope(k, pos[None, None], cfg.rope_base)
+        slots = cache["k"].shape[1]
+        slot = pos % slots
+        cache = _cache_write(cache, slot, k[:, 0], v[:, 0])
+        kc, vc = _cache_read(cache)
+        slot_ids = jnp.arange(slots)
+        # most recent position ≡ slot (mod slots) that is ≤ pos
+        slot_pos = pos - (pos - slot_ids) % slots
+        valid = slot_pos >= 0
+        if kind == BlockKind.ATTN_LOCAL:
+            valid &= slot_pos > pos - cfg.window
+        elif kind == BlockKind.ATTN_CHUNKED:
+            valid &= (slot_pos // cfg.attn_chunk) == (pos // cfg.attn_chunk)
+        else:
+            valid &= slot_pos <= pos
+        mask = valid[None, None, None, :]
+        new_cache = cache
+    else:
+        kc, vc = _cache_read(cache)
+        mask = jnp.ones((1, 1, 1, kc.shape[1]), bool)
+        new_cache = cache
+    out = _sdpa(q, _repeat_kv(kc, groups), _repeat_kv(vc, groups), mask, hd ** -0.5)
+    return _out_proj(out, params), new_cache
+
+
+def _prefill_fill_cache(cache, k, v):
+    """Copy the last ``slots`` tokens of prefill K/V into the decode cache,
+    laid out so ring addressing (slot = pos % slots) stays consistent."""
+    B, S = k.shape[0], k.shape[1]
+    slots = cache["k"].shape[1]
+    take = min(S, slots)
+    ks = k[:, S - take:]
+    vs = v[:, S - take:]
+    # position of ks[:, j] is (S - take + j); its slot is that mod slots
+    pos0 = S - take
+    dest = (pos0 + jnp.arange(take)) % slots
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = _quantize(ks)
+        vq, vsc = _quantize(vs)
+        out["k"] = cache["k"].at[:, dest].set(kq)
+        out["v"] = cache["v"].at[:, dest].set(vq)
+        out["k_scale"] = cache["k_scale"].at[:, dest].set(ksc)
+        out["v_scale"] = cache["v_scale"].at[:, dest].set(vsc)
+    else:
+        out["k"] = cache["k"].at[:, dest].set(ks.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, dest].set(vs.astype(cache["v"].dtype))
+    return out
+
+
+def _out_proj(out: jnp.ndarray, params) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])

@@ -1,0 +1,48 @@
+"""Token embedding / LM head and positional tables."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import split_tree_of, table
+
+__all__ = ["embed_init", "embed_tokens", "logits_from", "sinusoidal_positions"]
+
+
+def embed_init(key: jax.Array, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    mixed = {"tok": table(ks[0], (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dtype)}
+    if not cfg.tie_embeddings:
+        mixed["head"] = table(ks[1], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dtype)
+    if cfg.learned_pos:
+        mixed["pos"] = table(ks[2], (cfg.max_seq_len, cfg.d_model), (None, "embed"), dtype)
+    return split_tree_of(mixed)
+
+
+def embed_tokens(params: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+                 positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if "pos" in params and positions is not None:
+        x = x + jnp.take(params["pos"], positions, axis=0)[None, ...] if positions.ndim == 1 \
+            else x + jnp.take(params["pos"], positions, axis=0)
+    return x
+
+
+def logits_from(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) -> (B, S, V), fp32."""
+    if "head" in params:
+        return jnp.einsum("bsd,dv->bsv", x, params["head"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,vd->bsv", x, params["tok"],
+                      preferred_element_type=jnp.float32)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)[:, :d].astype(dtype)

@@ -1,0 +1,45 @@
+"""Dense MLPs: SwiGLU (llama-family) and GELU (whisper/original transformer)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import linear, split_tree_of
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def mlp_init(key: jax.Array, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "swiglu":
+        mixed = {
+            "w_gate": linear(ks[0], (d, f), ("embed", "ffn"), fan_in=d, dtype=dtype),
+            "w_up": linear(ks[1], (d, f), ("embed", "ffn"), fan_in=d, dtype=dtype),
+            "w_down": linear(ks[2], (f, d), ("ffn", "embed"), fan_in=f, dtype=dtype),
+        }
+    elif cfg.mlp_kind == "gelu":
+        mixed = {
+            "w_up": linear(ks[1], (d, f), ("embed", "ffn"), fan_in=d, dtype=dtype),
+            "w_down": linear(ks[2], (f, d), ("ffn", "embed"), fan_in=f, dtype=dtype),
+        }
+    else:
+        raise ValueError(cfg.mlp_kind)
+    return split_tree_of(mixed)
+
+
+def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in params:
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                                   preferred_element_type=jnp.float32))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"],
+                       preferred_element_type=jnp.float32)
+        h = (g * u).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_up"],
+                                   preferred_element_type=jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,196 @@
+"""Mixture-of-Experts with capacity-factor token dispatch (llama4 16e top-1,
+mixtral 8e top-2).
+
+Tokens are processed in *groups* so the one-hot dispatch tensor stays
+VMEM-friendly and GSPMD turns the dispatch/combine einsums into all-to-alls
+when the expert dimension is sharded (expert parallelism):
+
+    dispatch D: (g, s, E, C)   expert_in  = einsum('gsec,gsd->egcd', D, x)
+    combine  W: (g, s, E, C)   out        = einsum('gsec,egcd->gsd', W, y)
+
+Router load-balance auxiliary loss follows Switch/Mixtral:
+``aux = E * Σ_e f_e · p_e`` (fraction routed · mean gate prob).
+
+A shared expert (llama4) is a normal SwiGLU MLP applied to every token whose
+output is summed with the routed output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers.mlp import mlp_apply, mlp_init
+from repro.models.params import linear, split_tree_of
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+GROUP = 2048  # tokens per dispatch group (VMEM sizing; see DESIGN.md)
+
+
+def moe_capacity(cfg: ArchConfig, group: int) -> int:
+    cap = int(group * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, ((cap + 7) // 8) * 8)  # pad to 8 for TPU lanes
+
+
+def moe_init(key: jax.Array, cfg: ArchConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    mixed = {
+        "router": linear(ks[0], (d, e), ("embed", "experts"), fan_in=d, dtype=jnp.float32),
+        "w_gate": linear(ks[1], (e, d, f), ("experts", "embed", "ffn"), fan_in=d, dtype=dtype),
+        "w_up": linear(ks[2], (e, d, f), ("experts", "embed", "ffn"), fan_in=d, dtype=dtype),
+        "w_down": linear(ks[3], (e, f, d), ("experts", "ffn", "embed"), fan_in=f, dtype=dtype),
+    }
+    params, axes = split_tree_of(mixed)
+    if cfg.shared_expert:
+        sp, sa = mlp_init(ks[4], cfg, dtype)
+        params["shared"], axes["shared"] = sp, sa
+    return params, axes
+
+
+def _top_k_dispatch(gates: jnp.ndarray, k: int, capacity: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """gates: (g, s, E) softmax probs.  Returns (dispatch, combine, aux_loss).
+
+    dispatch/combine: (g, s, E, C).  Tokens beyond an expert's capacity are
+    dropped (standard capacity-factor semantics)."""
+    g, s, e = gates.shape
+    # top-k expert choices per token
+    top_gates, top_idx = jax.lax.top_k(gates, k)            # (g, s, k)
+    # renormalize the kept gates (mixtral convention)
+    top_gates = top_gates / jnp.maximum(jnp.sum(top_gates, -1, keepdims=True), 1e-9)
+
+    # expert mask per choice: (g, s, k, E)
+    choice_mask = jax.nn.one_hot(top_idx, e, dtype=gates.dtype)
+
+    # position of each (token, choice) in its expert's queue — cumulative
+    # count over the flattened (s, k) order, choice-major within a token
+    flat_mask = choice_mask.reshape(g, s * k, e)
+    pos_in_expert = jnp.cumsum(flat_mask, axis=1) - flat_mask  # (g, s*k, E)
+    pos_in_expert = jnp.sum(pos_in_expert * flat_mask, axis=-1)  # (g, s*k)
+    keep = pos_in_expert < capacity
+    flat_mask = flat_mask * keep[..., None]
+    cap_onehot = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), capacity,
+                                dtype=gates.dtype)  # (g, s*k, C)
+    disp_flat = flat_mask[..., None] * cap_onehot[..., None, :]  # (g, s*k, E, C)
+    disp = disp_flat.reshape(g, s, k, e, capacity)
+
+    combine = disp * top_gates[..., None, None]
+    dispatch = jnp.sum(disp, axis=2)                         # (g, s, E, C)
+    combine = jnp.sum(combine, axis=2)
+
+    # Switch aux loss: fraction of tokens per expert × mean router prob
+    frac = jnp.mean(jnp.sum(choice_mask, axis=2), axis=(0, 1))  # (E,) routed frac (per choice)
+    prob = jnp.mean(gates, axis=(0, 1))                         # (E,)
+    aux = e * jnp.sum(frac * prob) / k
+    return dispatch, combine, aux
+
+
+def _gather_dispatch_apply(params, xg, gates, k: int, capacity: int,
+                           act_dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """§Perf alternative to the one-hot dispatch: sort-based index routing.
+
+    The einsum path materializes (g, s, E, C) dispatch/combine tensors —
+    an E·C/1 blowup over the token count (2560× for llama4) that dominates
+    the memory roofline term.  Here each (token, choice) gets an integer
+    slot in the (E·C, d) expert buffer via a stable sort by expert id;
+    traffic is O(s·k·d) scatter + gather plus an O(s·k log) sort.  Drop
+    semantics match the einsum path exactly (stable sort preserves the
+    flat (s, k) arrival order within an expert).
+
+    xg: (g, s, d), gates: (g, s, E).  Returns (out (g, s, d), aux).
+    """
+    g, s, e = gates.shape
+    d = xg.shape[-1]
+    top_gates, top_idx = jax.lax.top_k(gates, k)            # (g, s, k)
+    top_gates = top_gates / jnp.maximum(jnp.sum(top_gates, -1, keepdims=True), 1e-9)
+
+    def route_one(xg1, idx1, gate1):
+        # xg1 (s, d), idx1 (s, k), gate1 (s, k)
+        sk = s * k
+        e_f = idx1.reshape(sk)
+        order = jnp.argsort(e_f, stable=True)               # (sk,)
+        e_sorted = e_f[order]
+        start = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+        pos = jnp.arange(sk) - start[e_sorted]
+        keep = pos < capacity
+        dest_sorted = jnp.where(keep, e_sorted * capacity + pos, e * capacity)
+        token_of = order // k
+        # scatter tokens into the (E·C, d) buffer; sentinel rows drop
+        buf = jnp.zeros((e * capacity, d), act_dtype).at[dest_sorted].set(
+            xg1[token_of], mode="drop")
+        # per-choice destination in original (s, k) order (sentinel = dropped)
+        dest_f = jnp.full((sk,), e * capacity, jnp.int32).at[order].set(
+            dest_sorted.astype(jnp.int32))
+        return buf.reshape(e, capacity, d), dest_f.reshape(s, k)
+
+    expert_in, dest = jax.vmap(route_one)(xg, top_idx, top_gates)
+    # expert_in: (g, E, C, d) -> run experts exactly like the einsum path
+    gate_h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"],
+                                    preferred_element_type=jnp.float32))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    h = (gate_h * up).astype(act_dtype)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"],
+                            preferred_element_type=jnp.float32).astype(act_dtype)
+
+    def combine_one(out1, dest1, gate1):
+        flat = out1.reshape(e * capacity, d)
+        picked = jnp.take(flat, dest1.reshape(-1), axis=0, mode="fill",
+                          fill_value=0)                      # (s·k, d)
+        picked = picked.reshape(s, k, d)
+        return jnp.sum(picked * gate1[..., None].astype(act_dtype), axis=1)
+
+    out = jax.vmap(combine_one)(expert_out, dest, top_gates)
+
+    # Switch aux loss (identical to the einsum path)
+    choice_mask = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(choice_mask, axis=2), axis=(0, 1))
+    prob = jnp.mean(gates.astype(jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(frac * prob) / k
+    return out, aux
+
+
+def moe_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    tokens = B * S
+    group = min(GROUP, tokens)
+    if tokens % group != 0:
+        group = tokens  # degenerate small-shape fallback
+    n_groups = tokens // group
+    cap = moe_capacity(cfg, group)
+
+    xg = x.reshape(n_groups, group, D)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    if cfg.moe_dispatch == "gather":
+        out, aux = _gather_dispatch_apply(params, xg, gates, cfg.top_k, cap,
+                                          x.dtype)
+        out = out.reshape(B, S, D)
+        if "shared" in params:
+            out = out + mlp_apply(params["shared"], x)
+        return out, aux.astype(jnp.float32)
+
+    dispatch, combine, aux = _top_k_dispatch(gates, cfg.top_k, cap)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"],
+                                  preferred_element_type=jnp.float32))
+    up = jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    h = (gate * up).astype(x.dtype)
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"],
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), expert_out,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(B, S, D)
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], x)
+    return out, aux.astype(jnp.float32)

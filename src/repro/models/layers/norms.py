@@ -1,0 +1,39 @@
+"""RMSNorm / LayerNorm.  The fused Pallas kernel lives in repro.kernels;
+this jnp implementation is the portable path (and the kernel oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ones_vec
+
+__all__ = ["rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": ones_vec((d,), ("embed",), dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16):
+    return {
+        "scale": ones_vec((d,), ("embed",), dtype),
+        "bias": (jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)

@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Griffin recurrent block is:
+
+    x ─ norm ─┬─ linear → GeLU ────────────────────────┐
+              └─ linear → conv1d(4) → RG-LRU ──────────┴─ ⊙ ─ linear → out
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)                  (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                  (input gate)
+    a_t = a^(c·r_t)        a = σ(Λ) ∈ (0,1)  (learned decay, c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Prefill/train uses an associative scan over time (log-depth on TPU);
+decode is the O(1) recurrent update.  The recurrence width shards on the
+mesh "model" axis — channels are independent, so the scan needs no
+cross-device communication (this is the TPU-native adaptation of the
+paper-family's sequential CUDA kernel).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import bias as bias_init
+from repro.models.params import linear, split_tree_of
+
+__all__ = ["rglru_init", "rglru_apply", "init_rglru_cache"]
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def rglru_init(key: jax.Array, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    r = cfg.rnn_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = σ(Λ)^c spreads decay rates in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (r,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / _C)) / (1.0 - u ** (1.0 / _C)))
+    mixed = {
+        "w_gate_branch": linear(ks[1], (d, r), ("embed", "rnn"), fan_in=d, dtype=dtype),
+        "w_rec_branch": linear(ks[2], (d, r), ("embed", "rnn"), fan_in=d, dtype=dtype),
+        "conv_w": linear(ks[3], (cfg.conv_width, r), (None, "rnn"),
+                         fan_in=cfg.conv_width, dtype=dtype),
+        "conv_b": bias_init((r,), ("rnn",), dtype),
+        "w_a": linear(ks[4], (r, r), ("rnn", None), fan_in=r, dtype=dtype),
+        "b_a": bias_init((r,), (None,), jnp.float32),
+        "w_i": linear(ks[5], (r, r), ("rnn", None), fan_in=r, dtype=dtype),
+        "b_i": bias_init((r,), (None,), jnp.float32),
+        "lam": (lam, ("rnn",)),
+        "w_out": linear(ks[6], (r, d), ("rnn", "embed"), fan_in=r, dtype=dtype),
+    }
+    return split_tree_of(mixed)
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    r = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: (B, S, r), w: (K, r).  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # (B, S+K-1, r)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    return y.astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _rglru_gates(params, xr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute (log_a, gated_input) in fp32.  xr: (..., r)."""
+    xf = xr.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i_gate = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -_C * r_gate * jax.nn.softplus(params["lam"])   # log a_t ≤ 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i_gate * xf)
+    return log_a, gated
+
+
+def rglru_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray, *,
+                cfg: ArchConfig, mode: str,
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x: (B, S, D) -> (out (B, S, D), new_cache)."""
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dr->bsr", x, params["w_gate_branch"],
+                   preferred_element_type=jnp.float32)).astype(x.dtype)
+    xr = jnp.einsum("bsd,dr->bsr", x, params["w_rec_branch"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xr, new_conv = _causal_conv(xr, params["conv_w"], params["conv_b"], conv_state)
+
+    log_a, gated = _rglru_gates(params, xr)
+
+    if mode == "decode":
+        assert cache is not None
+        h = cache["h"] * jnp.exp(log_a[:, 0]) + gated[:, 0]   # (B, r)
+        hs = h[:, None, :]
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        h0 = cache["h"] if cache is not None else jnp.zeros(
+            (x.shape[0], xr.shape[-1]), jnp.float32)
+        # associative scan over time: elements (A=exp(log_a), b=gated)
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        A = jnp.exp(log_a)                                    # (B, S, r)
+        hs_a, hs_b = jax.lax.associative_scan(combine, (A, gated), axis=1)
+        hs = hs_b + hs_a * h0[:, None, :]
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": hs[:, -1], "conv": new_conv}
+
+    out = hs.astype(x.dtype) * gate_branch
+    out = jnp.einsum("bsr,rd->bsd", out, params["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, new_cache

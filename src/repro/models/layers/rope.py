@@ -1,0 +1,29 @@
+"""Rotary position embeddings (applied per-layer; NoPE layers skip this)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["apply_rope"]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Rotates pairs (x[2i], x[2i+1]) by angle pos / base^(2i/d).  Odd head_dim
+    rotates the even prefix only (whisper head_dim=64 is even; this guard is
+    for reduced smoke variants).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = base ** (-freq / half)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]                   # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half : 2 * half].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2] + ([x[..., 2 * half:].astype(jnp.float32)] if d % 2 else []),
+                          axis=-1)
+    return out.astype(x.dtype)

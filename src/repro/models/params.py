@@ -1,0 +1,110 @@
+"""Parameter construction with logical sharding axes.
+
+Every parameter leaf is created through :func:`linear`/:func:`table`/... which
+return ``(array, axes)`` where ``axes`` is a tuple of *logical* axis names
+(or None) per dimension.  ``repro.sharding.rules`` later maps logical names to
+mesh axes with divisibility checking, so one init works for every arch and
+every mesh (see DESIGN.md §5).
+
+Logical axis vocabulary:
+    embed      — d_model dims (FSDP storage axis → "data")
+    ffn        — MLP hidden (tensor-parallel → "model")
+    heads      — q heads    (tensor-parallel → "model" when divisible)
+    kv_heads   — kv heads   ("model" when divisible, else replicated)
+    head       — per-head dim (replicated)
+    vocab      — vocabulary ("model" when divisible)
+    experts    — MoE experts ("model" when divisible)
+    rnn        — RG-LRU recurrence width ("model")
+    ssd_heads  — mamba2 heads ("model")
+    state      — SSM state dim (replicated)
+    layers     — stacked-scan leading axis (replicated)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamBundle", "linear", "bias", "table", "scalar_vec", "stack_bundles"]
+
+Axes = Tuple[Optional[str], ...]
+ParamBundle = Tuple[Dict[str, Any], Dict[str, Any]]  # (params, axes)
+
+
+def _he(key: jax.Array, shape: Sequence[int], fan_in: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, tuple(shape), jnp.float32) * scale).astype(dtype)
+
+
+def linear(key: jax.Array, shape: Sequence[int], axes: Axes,
+           fan_in: Optional[int] = None, dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Axes]:
+    """Dense weight with fan-in scaled normal init."""
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} vs axes {axes} rank mismatch")
+    if fan_in is None:
+        fan_in = shape[0]
+    return _he(key, shape, fan_in, dtype), axes
+
+
+def bias(shape: Sequence[int], axes: Axes, dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Axes]:
+    return jnp.zeros(tuple(shape), dtype), axes
+
+
+def ones_vec(shape: Sequence[int], axes: Axes, dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Axes]:
+    return jnp.ones(tuple(shape), dtype), axes
+
+
+def table(key: jax.Array, shape: Sequence[int], axes: Axes,
+          dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Axes]:
+    """Embedding table: unit-variance rows scaled by 1/sqrt(d)."""
+    d = shape[-1]
+    return (jax.random.normal(key, tuple(shape), jnp.float32) / math.sqrt(d)).astype(dtype), axes
+
+
+def scalar_vec(value: float, shape: Sequence[int], axes: Axes,
+               dtype=jnp.float32) -> Tuple[jnp.ndarray, Axes]:
+    return jnp.full(tuple(shape), value, dtype), axes
+
+
+def split_tree(bundle_fn: Callable[..., ParamBundle]):
+    """Decorator-free helper: bundle_fn builds {'name': (arr, axes), ...};
+    split into (params, axes) trees."""
+    def build(*args, **kw) -> ParamBundle:
+        mixed = bundle_fn(*args, **kw)
+        params = {k: (v[0] if isinstance(v, tuple) else split_tree_of(v)[0])
+                  for k, v in mixed.items()}
+        axes = {k: (v[1] if isinstance(v, tuple) else split_tree_of(v)[1])
+                for k, v in mixed.items()}
+        return params, axes
+    return build
+
+
+def split_tree_of(mixed: Dict[str, Any]) -> ParamBundle:
+    """Recursively split a dict whose leaves are (array, axes) pairs."""
+    params, axes = {}, {}
+    for k, v in mixed.items():
+        if isinstance(v, tuple) and len(v) == 2 and not isinstance(v[0], dict):
+            params[k], axes[k] = v
+        elif isinstance(v, dict):
+            params[k], axes[k] = split_tree_of(v)
+        else:
+            raise TypeError(f"unexpected leaf for {k}: {type(v)}")
+    return params, axes
+
+
+def stack_bundles(bundles: Sequence[ParamBundle]) -> ParamBundle:
+    """Stack per-period param trees along a leading 'layers' axis so the
+    transformer can lax.scan over periods."""
+    params_list = [b[0] for b in bundles]
+    axes0 = bundles[0][1]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params_list)
+
+    def prepend(ax):
+        return ("layers",) + tuple(ax)
+
+    axes = jax.tree.map(prepend, axes0,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+    return stacked, axes

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import adamw, sgd_momentum, lion, OptimizerDef
+
+__all__ = ["adamw", "sgd_momentum", "lion", "OptimizerDef"]

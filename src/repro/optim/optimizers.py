@@ -1,0 +1,129 @@
+"""Pytree optimizers for transformer training (beyond-paper substrate).
+
+The paper treats optimization as a first-class citizen of the API (§III-C);
+these extend the same contract from weight *vectors* (core.optimizer) to
+parameter *pytrees*.  No optax dependency — each optimizer is an
+``OptimizerDef(init, update)`` pair of pure functions.
+
+State dtype policy: moments in fp32 regardless of param dtype (bf16 params
+keep an implicit fp32 master copy via the fp32 `mu`-correction path being
+applied in fp32 and cast back — adequate for the few-hundred-step example
+runs; a full fp32 master-weight option is `master_weights=True`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerDef", "adamw", "sgd_momentum", "lion"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerDef:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: Optional[float] = 1.0,
+          warmup: int = 100, master_weights: bool = False,
+          schedule: str = "cosine", total_steps: int = 10000) -> OptimizerDef:
+    def lr_at(step):
+        step = step.astype(jnp.float32)
+        # (step+1)/warmup so step 0 has a nonzero LR and warmup=0 disables
+        warm = jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+        if schedule == "cosine":
+            frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+            base = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            base = 1.0
+        return lr * warm * base
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state = {"m": zeros,
+                 "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+        if master_weights:
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params, step):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gn = _global_norm(g32)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr_t = lr_at(step)
+
+        ref = state.get("master", params)
+
+        def leaf_update(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (upd + weight_decay * pf)
+            return pf
+
+        new_ref = jax.tree.map(leaf_update, ref, m, v)
+        new_state = {"m": m, "v": v}
+        if master_weights:
+            new_state["master"] = new_ref
+            new_params = jax.tree.map(lambda nr, p: nr.astype(p.dtype), new_ref, params)
+        else:
+            new_params = jax.tree.map(lambda nr, p: nr.astype(p.dtype), new_ref, params)
+        return new_params, new_state
+
+    return OptimizerDef(init, update)
+
+
+def sgd_momentum(lr: float = 0.1, momentum: float = 0.9,
+                 grad_clip: Optional[float] = None) -> OptimizerDef:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gn = _global_norm(g32)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g, state["m"], g32)
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - lr * m_).astype(p.dtype), params, m)
+        return new_params, {"m": m}
+
+    return OptimizerDef(init, update)
+
+
+def lion(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.99,
+         weight_decay: float = 0.1) -> OptimizerDef:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        def leaf(p, m_, g):
+            upd = jnp.sign(b1 * m_ + (1 - b1) * g)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (upd + weight_decay * pf)
+            return pf.astype(p.dtype)
+
+        new_params = jax.tree.map(leaf, params, state["m"], g32)
+        m = jax.tree.map(lambda m_, g: b2 * m_ + (1 - b2) * g, state["m"], g32)
+        return new_params, {"m": m}
+
+    return OptimizerDef(init, update)

@@ -1,0 +1,4 @@
+from repro.serve.step import make_prefill_step, make_decode_step, cache_axes
+from repro.serve.engine import ServeEngine
+
+__all__ = ["make_prefill_step", "make_decode_step", "cache_axes", "ServeEngine"]

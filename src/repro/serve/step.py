@@ -1,0 +1,80 @@
+"""Serving steps: prefill and single-token decode with sharded KV caches.
+
+Cache sharding (via the same logical-rule machinery as params):
+  * batched decode  — cache batch dim on ("pod","data"), heads on "model"
+    when divisible.
+  * long-context batch-1 decode — batch mapping drops (1 % devices), freeing
+    the "data" axis for the *sequence* dim of the cache: context-parallel
+    decode.  XLA partitions the softmax reduction over the sharded key axis
+    (the flash-decode pattern, expressed declaratively).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ATTENTION_KINDS, ArchConfig, BlockKind
+from repro.models.transformer import TransformerLM
+from repro.sharding.rules import DEFAULT_RULES, ShardingRules, logical_to_spec
+
+__all__ = ["cache_axes", "make_prefill_step", "make_decode_step"]
+
+_ATTN_KV_AXES = ("batch", "kv_seq", "kv_heads", "head")
+_ATTN_SCALE_AXES = ("batch", "kv_seq", "kv_heads")
+
+
+def _block_cache_axes(cfg: ArchConfig, kind: BlockKind, int8: bool) -> Dict[str, Any]:
+    c: Dict[str, Any] = {}
+    if kind in ATTENTION_KINDS:
+        attn = {"k": _ATTN_KV_AXES, "v": _ATTN_KV_AXES}
+        if int8:
+            attn["k_scale"] = _ATTN_SCALE_AXES
+            attn["v_scale"] = _ATTN_SCALE_AXES
+        c["attn"] = attn
+        if cfg.cross_attention:
+            c["cross"] = {"k": ("batch", None, "kv_heads", "head"),
+                          "v": ("batch", None, "kv_heads", "head")}
+    elif kind == BlockKind.RGLRU:
+        c["rglru"] = {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+    elif kind == BlockKind.SSD:
+        c["ssd"] = {"h": ("batch", "ssd_heads", None, None),
+                    "conv": ("batch", None, "rnn")}
+    return c
+
+
+def cache_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical-axis tree matching TransformerLM.init_cache structure, with
+    the leading stacked-periods axis."""
+    int8 = cfg.cache_dtype == "int8"
+    per = {f"b{i}": _block_cache_axes(cfg, kind, int8)
+           for i, kind in enumerate(cfg.pattern)}
+
+    def prepend(ax):
+        return (None,) + tuple(ax)
+
+    return jax.tree.map(prepend, per,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    model = TransformerLM(cfg)
+
+    def prefill(params, tokens, cache, vision_embeds=None, encoder_frames=None):
+        return model.prefill(params, tokens, cache,
+                             vision_embeds=vision_embeds,
+                             encoder_frames=encoder_frames)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    model = TransformerLM(cfg)
+
+    def decode(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+
+    return decode

@@ -1,0 +1,10 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    shardings_for,
+    constrain,
+)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "logical_to_spec", "shardings_for",
+           "constrain"]

@@ -1,0 +1,133 @@
+"""Logical-axis → mesh-axis mapping with divisibility fallback.
+
+Parameters are annotated with *logical* axes at init (see
+``repro.models.params``).  One rule table maps logical names to mesh axes;
+if a tensor dimension is not divisible by the mapped axis size, the mapping
+is dropped for that dimension (recorded for diagnostics) instead of failing —
+this is what makes ONE init work for head counts like 40 or 12 on a 16-way
+"model" axis (the weight then relies on its FSDP "data"-axis dim for
+storage; see DESIGN.md §5).
+
+Rule summary (training defaults):
+    tensor-parallel  → "model":  ffn, heads, kv_heads, vocab, experts, rnn,
+                                  ssd_heads
+    FSDP storage     → "data":   embed
+    replicated       →  None:    head, state, layers, conv taps, biases
+    activations      → batch: ("pod","data"), seq: None
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "logical_to_spec", "shardings_for",
+           "constrain"]
+
+AxisLeaf = Tuple[Optional[str], ...]
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical name -> mesh axis (or tuple of mesh axes)."""
+    table: Tuple[Tuple[str, Any], ...] = (
+        ("ffn", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("rnn", "model"),
+        ("ssd_heads", "model"),
+        ("embed", "data"),        # FSDP/ZeRO-3 storage axis
+        ("expert_embed", "data"),
+        ("batch", ("pod", "data")),
+        ("kv_seq", "data"),       # context-parallel long decode
+    )
+
+    def lookup(self, name: Optional[str]) -> Any:
+        if name is None:
+            return None
+        for k, v in self.table:
+            if k == name:
+                return v
+        return None
+
+    def replace(self, **updates: Any) -> "ShardingRules":
+        table = dict(self.table)
+        table.update(updates)
+        return ShardingRules(tuple(table.items()))
+
+    def without(self, *names: str) -> "ShardingRules":
+        return ShardingRules(tuple((k, v) for k, v in self.table if k not in names))
+
+
+DEFAULT_RULES = ShardingRules()
+
+# Serving rules (§Perf hillclimb H1).  Two findings from the decode HLO:
+#   (a) dropping the FSDP mapping ("embed"→data) alone does NOT remove the
+#       dominant collective — GSPMD was re-gathering the KV cache itself
+#       (f32-upcast, kv_heads-partitioned) every step (H1a, refuted);
+#   (b) the winning layout shards the cache *sequence* over the otherwise
+#       idle "model" axis: attention becomes a sharded softmax reduction
+#       (flash-decode expressed declaratively) whose collectives are
+#       (B, H, 1)-sized partials instead of cache-sized gathers.
+SERVE_RULES = (DEFAULT_RULES
+               .without("embed", "expert_embed")
+               .replace(kv_seq=("data", "model")))
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_spec(axes: AxisLeaf, shape: Tuple[int, ...], mesh: Mesh,
+                    rules: ShardingRules,
+                    dropped: Optional[List[str]] = None) -> P:
+    """Map one tensor's logical axes to a PartitionSpec, dropping any mapping
+    whose dimension is not divisible by the mesh axis size."""
+    sizes = _axis_sizes(mesh)
+    spec: List[Any] = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        target = rules.lookup(name)
+        if target is None:
+            spec.append(None)
+            continue
+        targets = target if isinstance(target, tuple) else (target,)
+        targets = tuple(t for t in targets if t in sizes and t not in used)
+        total = int(np.prod([sizes[t] for t in targets])) if targets else 0
+        if targets and dim % max(total, 1) == 0 and total > 0:
+            spec.append(targets if len(targets) > 1 else targets[0])
+            used.update(targets)
+        else:
+            if dropped is not None and targets:
+                dropped.append(f"{name}:{dim} !% {targets}")
+            spec.append(None)
+    return P(*spec)
+
+
+def shardings_for(axes_tree: Any, params_tree: Any, mesh: Mesh,
+                  rules: ShardingRules = DEFAULT_RULES,
+                  report: Optional[List[str]] = None) -> Any:
+    """NamedSharding tree matching params_tree's structure."""
+    def one(axes: AxisLeaf, leaf) -> NamedSharding:
+        shape = getattr(leaf, "shape", None)
+        if shape is None:
+            raise TypeError(f"param leaf without shape: {leaf}")
+        return NamedSharding(mesh, logical_to_spec(axes, tuple(shape), mesh,
+                                                   rules, report))
+
+    return jax.tree.map(one, axes_tree, params_tree, is_leaf=_is_axes_leaf)
+
+
+def constrain(x, mesh: Mesh, *axes: Any, rules: ShardingRules = DEFAULT_RULES):
+    """with_sharding_constraint by logical names (activations)."""
+    spec = logical_to_spec(tuple(axes), tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

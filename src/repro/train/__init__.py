@@ -1,0 +1,4 @@
+from repro.train.loss import cross_entropy_loss
+from repro.train.step import TrainState, make_train_step, init_train_state
+
+__all__ = ["cross_entropy_loss", "TrainState", "make_train_step", "init_train_state"]

@@ -1,0 +1,81 @@
+"""Losses.  Cross-entropy is written max/logsumexp-stable and reduction-
+friendly so XLA partitions it cleanly when logits are vocab-sharded.
+
+``chunked_cross_entropy_from_hidden`` is the big-vocab optimization from the
+§Perf hillclimb: the (tokens, V) logits tensor is never materialized —
+vocab chunks stream through a rematerialized scan carrying the running
+max / sum-exp / label logit.  For gemma3 (V=262144) the full fp32 logits
+are 4·B·S·V ≈ 1.1 TB global at train_4k; the chunked path keeps only a
+(tokens, chunk) block live."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cross_entropy_loss", "chunked_cross_entropy_from_hidden"]
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits: (B, S, V) fp32; labels: (B, S) int32; mask: (B, S) 0/1."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy_from_hidden(
+    hidden: jnp.ndarray,          # (N, D) final hidden states (pre-LM-head)
+    table: jnp.ndarray,           # (V, D) tied embedding table
+    labels: jnp.ndarray,          # (N,) int32
+    *,
+    chunk: int = 8192,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Streaming log-sum-exp over vocab chunks; O(N·chunk) live memory.
+
+    The chunk body is ``jax.checkpoint``ed so backward recomputes each
+    chunk's logits from (hidden, table-chunk) instead of saving them — the
+    full (N, V) tensor exists neither forward nor backward.
+    """
+    N, D = hidden.shape
+    V = table.shape[0]
+    if V % chunk != 0:
+        logits = jnp.einsum("nd,vd->nv", hidden, table,
+                            preferred_element_type=jnp.float32)
+        return cross_entropy_loss(logits[None], labels[None],
+                                  None if mask is None else mask[None])
+    n_chunks = V // chunk
+    tchunks = table.reshape(n_chunks, chunk, D)
+
+    @jax.checkpoint
+    def body(carry, tc_and_idx):
+        m, s, ll = carry
+        tc, ci = tc_and_idx
+        logits = jnp.einsum("nd,cd->nc", hidden, tc,
+                            preferred_element_type=jnp.float32)  # (N, chunk)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(logits - m_new[:, None]),
+                                             axis=-1)
+        # label logit if it falls inside this chunk
+        local = labels - ci * chunk
+        in_chunk = (local >= 0) & (local < chunk)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk - 1)[:, None], axis=-1)[:, 0]
+        ll = jnp.where(in_chunk, picked, ll)
+        return (m_new, s, ll), None
+
+    init = (jnp.full((N,), -jnp.inf, jnp.float32),
+            jnp.zeros((N,), jnp.float32),
+            jnp.zeros((N,), jnp.float32))
+    (m, s, ll), _ = jax.lax.scan(body, init, (tchunks, jnp.arange(n_chunks)))
+    nll = m + jnp.log(s) - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

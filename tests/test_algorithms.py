@@ -1,0 +1,139 @@
+"""The paper's algorithms (§IV): logistic regression (SGD + averaging),
+linear models by swapping the gradient (§IV claim), ALS, KMeans pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms.als import (ALSParameters, BroadcastALS,
+                                       pack_csr_table)
+from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+from repro.core.algorithms.linear_models import (LinearRegressionAlgorithm,
+                                                 LinearRegressionParameters,
+                                                 LinearSVMAlgorithm,
+                                                 LinearSVMParameters)
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm, LogisticRegressionParameters)
+from repro.core.mltable import MLTable
+from repro.core.numeric_table import MLNumericTable
+from repro.data import (synth_classification, synth_netflix_tiled,
+                        synth_text_corpus)
+from repro.features.text import n_grams, tf_idf
+
+
+def _cls_table(n=256, d=8, shards=4, seed=0):
+    X, y, _ = synth_classification(n, d, seed=seed)
+    data = np.concatenate([y[:, None], X], axis=1).astype(np.float32)
+    return MLNumericTable.from_numpy(data, num_shards=shards), X, y
+
+
+class TestLogisticRegression:
+    def test_train_and_predict(self):
+        table, X, y = _cls_table()
+        model = LogisticRegressionAlgorithm.train(
+            table, LogisticRegressionParameters(learning_rate=0.5, max_iter=20))
+        acc = float((np.asarray(model.predict(jnp.asarray(X))).ravel() == y).mean())
+        assert acc > 0.87
+
+    def test_shard_count_stability(self):
+        """More partitions (more 'machines') must not change the algorithm's
+        learnability — the paper's scaling premise."""
+        for shards in (1, 2, 8):
+            table, X, y = _cls_table(shards=shards)
+            model = LogisticRegressionAlgorithm.train(
+                table, LogisticRegressionParameters(learning_rate=0.5, max_iter=20))
+            acc = float((np.asarray(model.predict(jnp.asarray(X))).ravel() == y).mean())
+            assert acc > 0.82, f"shards={shards}: acc={acc}"
+
+    def test_solver_gd(self):
+        table, X, y = _cls_table()
+        model = LogisticRegressionAlgorithm.train(
+            table, LogisticRegressionParameters(learning_rate=0.005,
+                                                max_iter=30, solver="gd"))
+        acc = float((np.asarray(model.predict(jnp.asarray(X))).ravel() == y).mean())
+        assert acc > 0.87
+
+
+class TestLinearModels:
+    """'simply by changing the expression of the gradient function' (§IV)."""
+
+    def test_linear_regression(self):
+        rng = np.random.default_rng(0)
+        X = np.asarray(rng.normal(size=(256, 6)), np.float32)
+        w_true = np.asarray(rng.normal(size=6), np.float32)
+        y = X @ w_true + 0.01 * rng.normal(size=256).astype(np.float32)
+        table = MLNumericTable.from_numpy(
+            np.concatenate([y[:, None], X], 1), num_shards=4)
+        model = LinearRegressionAlgorithm.train(
+            table, LinearRegressionParameters(learning_rate=0.1, max_iter=50))
+        np.testing.assert_allclose(np.asarray(model.weights).ravel(), w_true,
+                                   rtol=0.15, atol=0.05)
+
+    def test_svm_hinge(self):
+        X, y01, _ = synth_classification(256, 8, seed=0)
+        y_pm = (2 * y01 - 1).astype(np.float32)        # SVM labels in {-1,+1}
+        table = MLNumericTable.from_numpy(
+            np.concatenate([y_pm[:, None], X], axis=1), num_shards=4)
+        model = LinearSVMAlgorithm.train(
+            table, LinearSVMParameters(learning_rate=0.1, max_iter=30))
+        acc = float((np.asarray(model.predict(jnp.asarray(X))).ravel() == y_pm).mean())
+        assert acc > 0.85
+
+    def test_l2_regularization_shrinks(self):
+        table, X, y = _cls_table()
+        w_plain = LogisticRegressionAlgorithm.train(
+            table, LogisticRegressionParameters(max_iter=15)).weights
+        w_l2 = LogisticRegressionAlgorithm.train(
+            table, LogisticRegressionParameters(max_iter=15, l2=1.0)).weights
+        assert float(jnp.linalg.norm(w_l2)) < float(jnp.linalg.norm(w_plain))
+
+
+class TestALS:
+    def _tables(self, tiles=1, max_nnz=32, shards=4):
+        M = synth_netflix_tiled(users=64, items=48, rank=4, tiles=tiles,
+                                density=0.2)
+        r, c = np.nonzero(M)
+        v = M[r, c]
+        m, n = M.shape
+        data = pack_csr_table(r, c, v, m, max_nnz, num_shards=shards)
+        data_t = pack_csr_table(c, r, v, n, max_nnz, num_shards=shards)
+        return data, data_t, (r, c, v)
+
+    def test_rmse_decreases(self):
+        data, data_t, (r, c, v) = self._tables()
+        p = ALSParameters(rank=4, lam=0.05, max_iter=1)
+        m1 = BroadcastALS.train(data, p, data_transposed=data_t)
+        p10 = ALSParameters(rank=4, lam=0.05, max_iter=10)
+        m10 = BroadcastALS.train(data, p10, data_transposed=data_t)
+        rmse1 = float(m1.rmse(r, c, v))
+        rmse10 = float(m10.rmse(r, c, v))
+        assert rmse10 < rmse1
+        assert rmse10 < 0.5, f"rmse after 10 iters: {rmse10}"
+
+    def test_paper_hyperparams_run(self):
+        """Paper §IV-B fixes rank=10, lambda=.01, 10 iterations."""
+        data, data_t, (r, c, v) = self._tables()
+        p = ALSParameters(rank=10, lam=0.01, max_iter=10)
+        model = BroadcastALS.train(data, p, data_transposed=data_t)
+        assert float(model.rmse(r, c, v)) < 0.5
+
+    def test_requires_transpose(self):
+        data, data_t, _ = self._tables()
+        with pytest.raises(ValueError):
+            BroadcastALS.train(data, ALSParameters())
+
+
+class TestKMeansPipeline:
+    """Paper Fig. A2: textFile -> nGrams -> tfIdf -> KMeans."""
+
+    def test_end_to_end(self):
+        docs = synth_text_corpus(n_docs=32)
+        table = MLTable.from_text(docs, num_partitions=4)
+        feats = tf_idf(n_grams(table, n=2, top=64))
+        nt = feats.to_numeric(num_shards=4)
+        model = KMeans.train(nt, KMeansParameters(k=4, max_iter=10))
+        labels = np.asarray(model.predict(nt.data))
+        assert labels.shape[0] == 32
+        assert len(np.unique(labels)) > 1          # found some structure
+        inertia = float(model.inertia(nt.data))
+        assert np.isfinite(inertia) and inertia >= 0

@@ -1,0 +1,66 @@
+"""End-to-end dry-run test: one cheap (arch × shape) pair per step kind runs
+lower+compile on the production 16×16 mesh in a fresh 512-device subprocess
+(the full 35×2 matrix is the sweep in EXPERIMENTS.md §Dry-run)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_pair(arch: str, shape: str, multi_pod: bool = False) -> dict:
+    code = f"""
+from repro.launch.dryrun import run_pair
+import json
+res = run_pair({arch!r}, {shape!r}, multi_pod={multi_pod})
+print("RESULT::" + json.dumps({{k: res[k] for k in
+    ('flops_per_device', 'bytes_per_device', 'collective_s', 'bottleneck',
+     'chips', 'mesh')}}))
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)   # dryrun module sets it itself
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=540, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT::")][-1]
+    return json.loads(line[len("RESULT::"):])
+
+
+@pytest.mark.slow
+def test_train_pair_single_pod():
+    res = _run_pair("qwen2-1.5b", "train_4k")
+    assert res["chips"] == 256 and res["mesh"] == "16x16"
+    assert res["flops_per_device"] > 0
+    assert res["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+
+
+@pytest.mark.slow
+def test_decode_pair_multi_pod():
+    res = _run_pair("mamba2-2.7b", "decode_32k", multi_pod=True)
+    assert res["chips"] == 512 and res["mesh"] == "2x16x16"
+    assert res["bytes_per_device"] > 0
+
+
+def test_planned_pairs_matrix():
+    """35 baseline pairs: 10 archs × 4 shapes − 5 full-attention long_500k
+    skips (granite, llava, qwen1.5, qwen2, whisper)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    code = """
+from repro.launch.dryrun import planned_pairs
+pairs = planned_pairs()
+print(len(pairs))
+skipped = {('granite-3-8b', 'long_500k'), ('llava-next-34b', 'long_500k'),
+           ('qwen1.5-32b', 'long_500k'), ('qwen2-1.5b', 'long_500k'),
+           ('whisper-small', 'long_500k')}
+assert not (skipped & set(pairs))
+for arch in ('mamba2-2.7b', 'recurrentgemma-9b', 'gemma3-1b',
+             'mixtral-8x22b', 'llama4-scout-17b-16e'):
+    assert (arch, 'long_500k') in pairs, arch
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=120, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert out.stdout.strip().splitlines()[-1] == "35"

@@ -1,0 +1,92 @@
+"""PCA and Gaussian Naive Bayes through the MLI contract — the paper's
+'naturally extends to a diverse group of ML algorithms' claim exercised
+beyond GLMs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithms.naive_bayes import (GaussianNaiveBayes,
+                                               NaiveBayesParameters)
+from repro.core.algorithms.pca import PCA, PCAParameters
+from repro.core.numeric_table import MLNumericTable
+
+
+class TestPCA:
+    def _data(self, rng, n=256, d=6):
+        # anisotropic gaussian: two dominant directions
+        scales = np.array([5.0, 3.0, 0.5, 0.3, 0.2, 0.1][:d])
+        X = rng.normal(size=(n, d)) * scales + 2.0
+        return np.asarray(X, np.float32)
+
+    def test_matches_numpy_svd(self, rng):
+        X = self._data(rng)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        model = PCA.train(t, PCAParameters(n_components=2))
+        # reference: numpy svd of the centered data
+        Xc = X - X.mean(0)
+        _, s, vt = np.linalg.svd(Xc, full_matrices=False)
+        for k in range(2):
+            cos = abs(float(np.asarray(model.components[k]) @ vt[k]))
+            assert cos > 0.99, f"PC{k} misaligned: |cos|={cos}"
+        np.testing.assert_allclose(np.asarray(model.explained_variance),
+                                   (s[:2] ** 2) / len(X), rtol=0.02)
+
+    def test_shard_invariance(self, rng):
+        X = self._data(rng, n=64)
+        outs = []
+        for shards in (1, 2, 8):
+            t = MLNumericTable.from_numpy(X, num_shards=shards)
+            m = PCA.train(t, PCAParameters(n_components=2))
+            outs.append(np.abs(np.asarray(m.components)))
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-3, atol=1e-4)
+
+    def test_reconstruction(self, rng):
+        X = self._data(rng)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        m = PCA.train(t, PCAParameters(n_components=4))
+        Xr = np.asarray(m.inverse_transform(m.transform(jnp.asarray(X))))
+        # 4 of 6 dims capture almost all the anisotropic variance
+        rel = np.linalg.norm(X - Xr) / np.linalg.norm(X - X.mean(0))
+        assert rel < 0.2
+
+
+class TestGaussianNaiveBayes:
+    def _blobs(self, rng, n_per=128, d=4, C=3):
+        centers = rng.normal(size=(C, d)) * 4
+        X = np.concatenate([rng.normal(size=(n_per, d)) + centers[c]
+                            for c in range(C)]).astype(np.float32)
+        y = np.repeat(np.arange(C), n_per).astype(np.float32)
+        perm = rng.permutation(len(y))
+        return X[perm], y[perm]
+
+    def test_separable_blobs(self, rng):
+        X, y = self._blobs(rng)
+        data = np.concatenate([y[:, None], X], 1)
+        t = MLNumericTable.from_numpy(data, num_shards=4)
+        model = GaussianNaiveBayes.train(t, NaiveBayesParameters(num_classes=3))
+        pred = np.asarray(model.predict(jnp.asarray(X)))
+        assert (pred == y).mean() > 0.95
+
+    def test_priors_sum_to_one(self, rng):
+        X, y = self._blobs(rng)
+        data = np.concatenate([y[:, None], X], 1)
+        t = MLNumericTable.from_numpy(data, num_shards=4)
+        model = GaussianNaiveBayes.train(t, NaiveBayesParameters(num_classes=3))
+        assert abs(float(jnp.sum(model.priors)) - 1.0) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(shards=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**16))
+def test_nb_shard_invariance_property(shards, seed):
+    rng = np.random.default_rng(seed)
+    X = np.asarray(rng.normal(size=(32, 3)), np.float32)
+    y = np.asarray(rng.integers(0, 2, 32), np.float32)
+    data = np.concatenate([y[:, None], X], 1)
+    t = MLNumericTable.from_numpy(data, num_shards=shards)
+    m = GaussianNaiveBayes.train(t, NaiveBayesParameters(num_classes=2))
+    t1 = MLNumericTable.from_numpy(data, num_shards=1)
+    m1 = GaussianNaiveBayes.train(t1, NaiveBayesParameters(num_classes=2))
+    np.testing.assert_allclose(np.asarray(m.means), np.asarray(m1.means),
+                               rtol=1e-4, atol=1e-5)

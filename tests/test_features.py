@@ -1,0 +1,74 @@
+"""Feature-extraction tier: device-side transforms and the hashing
+vectorizer (the streaming companion of the Fig. A2 path)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mltable import MLTable
+from repro.core.numeric_table import MLNumericTable
+from repro.features.scaling import add_bias, standardize
+from repro.features.text import hashing_vectorizer, n_grams
+
+
+class TestStandardize:
+    def test_zero_mean_unit_std(self, rng):
+        X = np.asarray(rng.normal(3.0, 2.5, size=(64, 5)), np.float32)
+        t = standardize(MLNumericTable.from_numpy(X, num_shards=4))
+        out = np.asarray(t.data)
+        np.testing.assert_allclose(out.mean(0), 0.0, atol=1e-4)
+        np.testing.assert_allclose(out.std(0), 1.0, atol=1e-2)
+
+    def test_shard_invariant(self, rng):
+        X = np.asarray(rng.normal(size=(24, 3)), np.float32)
+        a = np.asarray(standardize(MLNumericTable.from_numpy(X, num_shards=1)).data)
+        b = np.asarray(standardize(MLNumericTable.from_numpy(X, num_shards=4)).data)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+class TestAddBias:
+    def test_inserts_ones(self, rng):
+        X = np.asarray(rng.normal(size=(8, 3)), np.float32)
+        t = add_bias(MLNumericTable.from_numpy(X, num_shards=2), at=1)
+        out = np.asarray(t.data)
+        assert out.shape == (8, 4)
+        np.testing.assert_array_equal(out[:, 1], 1.0)
+        np.testing.assert_allclose(out[:, 0], X[:, 0])
+        np.testing.assert_allclose(out[:, 2:], X[:, 1:])
+
+
+class TestHashingVectorizer:
+    def test_fixed_width_output(self):
+        docs = ["a b c", "c d e f", "a a a"]
+        t = MLTable.from_text(docs, num_partitions=2)
+        out = hashing_vectorizer(t, num_features=32)
+        assert out.num_rows == 3 and out.num_cols == 32
+        X = np.asarray(out.to_numeric(num_shards=1).data)
+        # doc 2 is three copies of one token -> single bucket with count 3
+        assert X[2].max() == 3.0 and (X[2] > 0).sum() == 1
+
+    def test_deterministic(self):
+        docs = ["the quick brown fox"]
+        t = MLTable.from_text(docs, num_partitions=1)
+        a = np.asarray(hashing_vectorizer(t, num_features=64).to_numeric(1).data)
+        b = np.asarray(hashing_vectorizer(t, num_features=64).to_numeric(1).data)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestNGrams:
+    def test_bigram_extraction(self):
+        t = MLTable.from_text(["a b c", "b c d"], num_partitions=1)
+        out = n_grams(t, n=2, top=10)
+        names = [n for n in out.schema.names if n]
+        assert "b c" in names          # shared bigram survives the top-k cut
+
+    @settings(max_examples=10, deadline=None)
+    @given(parts=st.integers(1, 4))
+    def test_partition_invariance(self, parts):
+        docs = ["x y z w", "y z w v", "z w v u"]
+        base = np.asarray(
+            n_grams(MLTable.from_text(docs, num_partitions=1), n=2, top=8)
+            .to_numeric(1).data)
+        got = np.asarray(
+            n_grams(MLTable.from_text(docs, num_partitions=parts), n=2, top=8)
+            .to_numeric(1).data)
+        np.testing.assert_array_equal(base, got)

@@ -1,0 +1,111 @@
+"""LocalMatrix (paper Fig. A3): MATLAB-style partition-local linalg."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.local_matrix import LocalMatrix
+
+
+def _mat(rng, m, n):
+    return LocalMatrix(jnp.asarray(rng.normal(size=(m, n)), jnp.float32))
+
+
+class TestShapes:
+    def test_dims(self, rng):
+        a = _mat(rng, 3, 4)
+        assert a.dims == (3, 4) and a.num_rows == 3 and a.num_cols == 4
+
+    def test_1d_promotes_to_column(self):
+        a = LocalMatrix(jnp.arange(4.0))
+        assert a.shape == (4, 1)
+
+    def test_3d_rejected(self):
+        with pytest.raises(ValueError):
+            LocalMatrix(jnp.zeros((2, 2, 2)))
+
+
+class TestComposition:
+    def test_on_stacks_rows(self, rng):
+        a, b = _mat(rng, 2, 3), _mat(rng, 4, 3)
+        assert a.on(b).dims == (6, 3)
+
+    def test_then_stacks_cols(self, rng):
+        a, b = _mat(rng, 2, 3), _mat(rng, 2, 5)
+        assert a.then(b).dims == (2, 8)
+
+
+class TestArithmeticAndLinalg:
+    def test_elementwise_matches_numpy(self, rng):
+        a, b = _mat(rng, 3, 3), _mat(rng, 3, 3)
+        np.testing.assert_allclose((a + b).data, np.asarray(a.data) + np.asarray(b.data), rtol=1e-6)
+        np.testing.assert_allclose((a - 5).data, np.asarray(a.data) - 5, rtol=1e-6)
+        np.testing.assert_allclose((a * b).data, np.asarray(a.data) * np.asarray(b.data), rtol=1e-6)
+
+    def test_times_is_matmul(self, rng):
+        a, b = _mat(rng, 3, 4), _mat(rng, 4, 2)
+        np.testing.assert_allclose(a.times(b).data,
+                                   np.asarray(a.data) @ np.asarray(b.data), rtol=1e-5)
+
+    def test_dot_is_scalar_inner_product(self, rng):
+        a = LocalMatrix(jnp.asarray(rng.normal(size=(4,)), jnp.float32))
+        b = LocalMatrix(jnp.asarray(rng.normal(size=(4,)), jnp.float32))
+        expect = float(np.asarray(a.data).ravel() @ np.asarray(b.data).ravel())
+        assert abs(float(a.dot(b)) - expect) < 1e-5
+
+    def test_solve(self, rng):
+        A = np.asarray(rng.normal(size=(4, 4)), np.float32)
+        A = A @ A.T + 4 * np.eye(4, dtype=np.float32)  # SPD
+        x = np.asarray(rng.normal(size=(4, 1)), np.float32)
+        b = A @ x
+        got = LocalMatrix(jnp.asarray(A)).solve(jnp.asarray(b))
+        np.testing.assert_allclose(got.data, x, rtol=1e-3, atol=1e-4)
+
+    def test_transpose_inverse(self, rng):
+        A = _mat(rng, 3, 3)
+        np.testing.assert_allclose(A.T.data, np.asarray(A.data).T)
+        Ainv = (A.times(A.T) + LocalMatrix(jnp.eye(3))).inverse()
+        prod = Ainv.times(A.times(A.T) + LocalMatrix(jnp.eye(3)))
+        np.testing.assert_allclose(prod.data, np.eye(3), atol=1e-4)
+
+    def test_non_zero_indices(self):
+        m = LocalMatrix(jnp.asarray([[0.0, 2.0, 0.0, 3.0]]))
+        idx, mask = m.non_zero_indices(0, max_nnz=4)
+        got = sorted(int(i) for i, v in zip(np.asarray(idx), np.asarray(mask)) if v)
+        assert got == [1, 3]
+
+
+class TestPytree:
+    def test_usable_under_jit(self, rng):
+        a = _mat(rng, 4, 4)
+
+        @jax.jit
+        def f(m: LocalMatrix):
+            return m.times(m.T)
+
+        np.testing.assert_allclose(f(a).data,
+                                   np.asarray(a.data) @ np.asarray(a.data).T,
+                                   rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 8), k=st.integers(1, 8), n=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+def test_matmul_matches_numpy_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    A = np.asarray(rng.normal(size=(m, k)), np.float32)
+    B = np.asarray(rng.normal(size=(k, n)), np.float32)
+    got = LocalMatrix(jnp.asarray(A)).times(LocalMatrix(jnp.asarray(B)))
+    np.testing.assert_allclose(got.data, A @ B, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 6), n=st.integers(1, 6), seed=st.integers(0, 2**16))
+def test_on_then_roundtrip_property(m, n, seed):
+    """(a on b)[:m] == a and (a then b)[:, :n] == a."""
+    rng = np.random.default_rng(seed)
+    a = LocalMatrix(jnp.asarray(rng.normal(size=(m, n)), jnp.float32))
+    b = LocalMatrix(jnp.asarray(rng.normal(size=(m, n)), jnp.float32))
+    np.testing.assert_array_equal(a.on(b).data[:m], a.data)
+    np.testing.assert_array_equal(a.then(b).data[:, :n], a.data)

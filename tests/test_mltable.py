@@ -1,0 +1,111 @@
+"""MLTable (paper §III-A, Fig. A1): relational + MapReduce ops, schema,
+text featurization (Fig. A2 pipeline front half)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mltable import MLTable
+from repro.core.schema import EMPTY, ColumnType, MLRow, Schema
+from repro.features.text import n_grams, tf_idf
+
+
+@pytest.fixture
+def people():
+    return MLTable.from_rows(
+        [("ann", 34, True, 1.5), ("bob", 21, False, 2.5),
+         ("cat", 45, True, 3.5), ("dan", 21, True, 4.5)],
+        names=["name", "age", "member", "score"], num_partitions=2)
+
+
+class TestRelationalOps:
+    def test_project(self, people):
+        t = people.project(["name", "score"])
+        assert t.num_cols == 2 and t.collect()[0] == ("ann", 1.5)
+
+    def test_union_requires_same_schema(self, people):
+        u = people.union(people)
+        assert u.num_rows == 8
+        other = MLTable.from_rows([(1.0, 2.0)], num_partitions=1)
+        with pytest.raises(TypeError):
+            people.union(other)
+
+    def test_filter(self, people):
+        t = people.filter(lambda r: r.get("age") == 21)
+        assert {r.get("name") for r in t.rows()} == {"bob", "dan"}
+
+    def test_join(self, people):
+        scores = MLTable.from_rows([("ann", "A"), ("bob", "B")],
+                                   names=["name", "grade"], num_partitions=1)
+        j = people.join(scores, on=["name"])
+        assert j.num_rows == 2
+        assert {r.get("grade") for r in j.rows()} == {"A", "B"}
+
+    def test_num_rows_cols(self, people):
+        assert people.num_rows == 4 and people.num_cols == 4
+
+
+class TestMapReduceOps:
+    def test_map(self, people):
+        t = people.map(lambda r: (r.get("age") * 2,))
+        assert [r[0] for r in t.rows()] == [68, 42, 90, 42]
+
+    def test_flat_map(self, people):
+        t = people.flat_map(lambda r: [(r.get("name"),)] * 2)
+        assert t.num_rows == 8
+
+    def test_reduce_is_partition_invariant(self):
+        rows = [(float(i),) for i in range(10)]
+        for parts in (1, 2, 3, 10):
+            t = MLTable.from_rows(rows, num_partitions=parts)
+            total = t.reduce(lambda a, b: (a[0] + b[0],))
+            assert total[0] == 45.0
+
+    def test_reduce_by_key(self, people):
+        t = people.project(["age", "score"]).reduce_by_key(
+            "age", lambda a, b: (a[0], a[1] + b[1]))
+        by_age = {r[0]: r[1] for r in t.rows()}
+        assert by_age[21] == 7.0 and by_age[34] == 1.5
+
+    def test_empty_cells(self):
+        schema = Schema.of(ColumnType.STRING, ColumnType.SCALAR)
+        t = MLTable.from_rows([("a", 1.0), ("b", EMPTY)], schema=schema,
+                              num_partitions=1)
+        assert t.collect()[1].is_empty(1)
+
+
+class TestToNumeric:
+    def test_numeric_commit(self, people):
+        nt = people.project(["age", "score"]).to_numeric(num_shards=2)
+        assert nt.num_rows == 4 and nt.num_cols == 2
+        np.testing.assert_allclose(np.asarray(nt.data)[:, 0], [34, 21, 45, 21])
+
+    def test_non_numeric_rejected(self, people):
+        with pytest.raises((TypeError, ValueError)):
+            people.to_numeric()
+
+
+class TestTextPipeline:
+    """Fig. A2: textFile -> nGrams -> tfIdf."""
+
+    def test_ngrams_tfidf(self):
+        docs = ["the cat sat", "the dog sat", "the cat ran"]
+        t = MLTable.from_text(docs, num_partitions=2)
+        grams = n_grams(t, n=1, top=10)
+        assert grams.num_rows == 3
+        feat = tf_idf(grams)
+        X = np.asarray(feat.to_numeric(num_shards=1).data)
+        assert X.shape[0] == 3 and X.shape[1] <= 10
+        # 'the' appears in every doc -> idf 0 -> column of zeros
+        assert (X >= 0).all() and np.isfinite(X).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(min_value=-100, max_value=100, allow_nan=False),
+                min_size=1, max_size=30),
+       st.integers(1, 6))
+def test_reduce_partition_invariance_property(values, parts):
+    t1 = MLTable.from_rows([(v,) for v in values], num_partitions=1)
+    tp = MLTable.from_rows([(v,) for v in values], num_partitions=parts)
+    r1 = t1.reduce(lambda a, b: (a[0] + b[0],))[0]
+    rp = tp.reduce(lambda a, b: (a[0] + b[0],))[0]
+    assert abs(r1 - rp) < 1e-6 * max(1.0, abs(r1))

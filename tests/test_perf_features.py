@@ -1,0 +1,156 @@
+"""§Perf feature tests: chunked cross-entropy, gather MoE dispatch,
+serving rules/mesh — the beyond-paper optimizations must be exact."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models.layers.moe import moe_apply, moe_init
+from repro.sharding.rules import DEFAULT_RULES, SERVE_RULES
+from repro.train.loss import (chunked_cross_entropy_from_hidden,
+                              cross_entropy_loss)
+from repro.train.step import init_train_state, make_train_step
+
+
+class TestChunkedCrossEntropy:
+    def _setup(self, N=48, D=16, V=256, seed=0):
+        rng = np.random.default_rng(seed)
+        hidden = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+        table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, V, size=N), jnp.int32)
+        return hidden, table, labels
+
+    @pytest.mark.parametrize("chunk", [32, 64, 256])
+    def test_matches_reference(self, chunk):
+        hidden, table, labels = self._setup()
+        ref = cross_entropy_loss((hidden @ table.T)[None], labels[None])
+        got = chunked_cross_entropy_from_hidden(hidden, table, labels,
+                                                chunk=chunk)
+        np.testing.assert_allclose(float(got), float(ref), rtol=1e-6)
+
+    def test_gradients_match(self):
+        hidden, table, labels = self._setup()
+        g_ref = jax.grad(lambda h, t: cross_entropy_loss(
+            (h @ t.T)[None], labels[None]), argnums=(0, 1))(hidden, table)
+        g_chk = jax.grad(lambda h, t: chunked_cross_entropy_from_hidden(
+            h, t, labels, chunk=64), argnums=(0, 1))(hidden, table)
+        for a, b in zip(g_ref, g_chk):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-7)
+
+    def test_mask(self):
+        hidden, table, labels = self._setup()
+        mask = jnp.asarray(np.random.default_rng(1).integers(0, 2, 48),
+                           jnp.float32)
+        ref = cross_entropy_loss((hidden @ table.T)[None], labels[None],
+                                 mask[None])
+        got = chunked_cross_entropy_from_hidden(hidden, table, labels,
+                                                chunk=64, mask=mask)
+        np.testing.assert_allclose(float(got), float(ref), rtol=1e-6)
+
+    def test_indivisible_chunk_falls_back(self):
+        hidden, table, labels = self._setup(V=250)
+        ref = cross_entropy_loss((hidden @ table.T)[None], labels[None])
+        got = chunked_cross_entropy_from_hidden(hidden, table, labels,
+                                                chunk=64)
+        np.testing.assert_allclose(float(got), float(ref), rtol=1e-6)
+
+    def test_train_step_with_chunked_loss(self):
+        cfg = dataclasses.replace(get_smoke("qwen2-1.5b"),
+                                  loss_vocab_chunk=128)
+        state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+        step = make_train_step(cfg)
+        batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+                 "labels": jnp.ones((2, 32), jnp.int32)}
+        _, m = step(state, batch)
+        # must equal the unchunked step's loss exactly
+        cfg0 = get_smoke("qwen2-1.5b")
+        state0, _ = init_train_state(jax.random.PRNGKey(0), cfg0)
+        _, m0 = make_train_step(cfg0)(state0, batch)
+        np.testing.assert_allclose(float(m["loss"]), float(m0["loss"]),
+                                   rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([16, 32, 128]))
+def test_chunked_xent_property(seed, chunk):
+    rng = np.random.default_rng(seed)
+    N, D, V = 16, 8, 128
+    hidden = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=N), jnp.int32)
+    ref = cross_entropy_loss((hidden @ table.T)[None], labels[None])
+    got = chunked_cross_entropy_from_hidden(hidden, table, labels, chunk=chunk)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+class TestGatherDispatch:
+    @pytest.mark.parametrize("arch", ["mixtral-8x22b", "llama4-scout-17b-16e"])
+    def test_matches_einsum_path(self, arch):
+        cfg = get_smoke(arch)
+        params, _ = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(2, 64, cfg.d_model)), jnp.float32)
+        out_e, aux_e = moe_apply(params, x, dataclasses.replace(
+            cfg, moe_dispatch="einsum"))
+        out_g, aux_g = moe_apply(params, x, dataclasses.replace(
+            cfg, moe_dispatch="gather"))
+        np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_g),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(aux_e), float(aux_g), rtol=1e-6)
+
+    def test_gradients_flow(self):
+        cfg = dataclasses.replace(get_smoke("mixtral-8x22b"),
+                                  moe_dispatch="gather")
+        params, _ = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(1, 32, cfg.d_model)), jnp.float32)
+
+        def loss(p):
+            out, aux = moe_apply(p, x, cfg)
+            return jnp.sum(out ** 2) + aux
+
+        grads = jax.grad(loss)(params)
+        gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0
+
+    def test_train_step_with_gather_dispatch(self):
+        cfg = dataclasses.replace(get_smoke("mixtral-8x22b"),
+                                  moe_dispatch="gather")
+        state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+        _, m = make_train_step(cfg)(state, {
+            "tokens": jnp.ones((2, 64), jnp.int32),
+            "labels": jnp.ones((2, 64), jnp.int32)})
+        assert np.isfinite(float(m["loss"]))
+
+
+class TestServingRules:
+    def test_serve_rules_drop_fsdp(self):
+        assert DEFAULT_RULES.lookup("embed") == "data"
+        assert SERVE_RULES.lookup("embed") is None
+        assert SERVE_RULES.lookup("kv_seq") == ("data", "model")
+        # model-parallel mappings intact
+        assert SERVE_RULES.lookup("ffn") == "model"
+
+    def test_serving_mesh_factorization(self):
+        from repro.launch.mesh import make_serving_mesh
+        # 1 CPU device: can't build 256-chip meshes here; verify the
+        # arithmetic instead (the dry-run subprocess exercises the real one)
+        import inspect
+        src = inspect.getsource(make_serving_mesh)
+        assert "(32, 8)" in src or "model: int = 8" in src
+
+
+def test_serving_setup_per_arch():
+    """EXPERIMENTS.md §Perf adoption rule: GQA archs get the serving mesh +
+    SERVE_RULES; recurrent/SSM archs keep training defaults."""
+    from repro.configs import get_config
+    from repro.launch.mesh import serving_setup
+    import inspect
+    src = inspect.getsource(serving_setup)
+    # structural check only (1 CPU device here, mesh build runs in dry-run)
+    assert "SERVE_RULES" in src and "RGLRU" in src

@@ -1,0 +1,126 @@
+"""Sharding rules: logical-axis mapping, divisibility fallback, batch specs,
+collective-bytes HLO parser, and the dry-run's abstract-state builders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.rules import (DEFAULT_RULES, ShardingRules, logical_to_spec,
+                                  shardings_for)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(1, 1)    # 1 CPU device, both axes size 1
+
+
+class TestLogicalToSpec:
+    def test_divisible_maps(self, mesh):
+        spec = logical_to_spec(("embed", "ffn"), (64, 128), mesh, DEFAULT_RULES)
+        assert spec == P("data", "model")     # size-1 axes always divide
+
+    def test_indivisible_drops(self):
+        mesh = make_host_mesh(1, 1)
+        # fake a bigger mesh via a rules table targeting a missing axis
+        rules = ShardingRules((("ffn", "missing_axis"),))
+        spec = logical_to_spec(("ffn",), (100,), mesh, rules)
+        assert spec == P(None)
+
+    def test_axis_used_once(self, mesh):
+        """Two dims mapping to the same mesh axis: only the first binds."""
+        spec = logical_to_spec(("embed", "embed"), (64, 64), mesh, DEFAULT_RULES)
+        assert spec == P("data", None)
+
+    def test_none_passthrough(self, mesh):
+        spec = logical_to_spec((None, "heads"), (3, 4), mesh, DEFAULT_RULES)
+        assert spec[0] is None
+
+    def test_dropped_diagnostics(self):
+        mesh = make_host_mesh(1, 1)
+        rules = ShardingRules((("ffn", "model"),))
+        dropped = []
+        # dim 7 % 1 == 0 — size-1 axis always divides, so no drop on this
+        # mesh; the diagnostic list stays empty
+        logical_to_spec(("ffn",), (7,), mesh, rules, dropped)
+        assert dropped == []
+
+
+class TestShardingsFor:
+    def test_tree_structure_preserved(self, mesh):
+        params = {"a": jnp.zeros((8, 4)), "b": {"c": jnp.zeros((4,))}}
+        axes = {"a": ("embed", "ffn"), "b": {"c": ("ffn",)}}
+        sh = shardings_for(axes, params, mesh, DEFAULT_RULES)
+        assert set(sh) == {"a", "b"}
+        assert sh["a"].spec == P("data", "model")
+        assert sh["b"]["c"].spec == P("model")
+
+
+class TestCollectiveBytesParser:
+    def test_parses_known_hlo(self):
+        from repro.launch.dryrun import collective_bytes
+        hlo = """
+  %ar = f32[1024,16]{1,0} all-reduce(f32[1024,16]{1,0} %x), replica_groups={}
+  %ag = bf16[64,128]{1,0} all-gather(bf16[8,128]{1,0} %y), dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(f32[256]{0} %z), dimensions={0}
+  %cp = s32[16]{0} collective-permute(s32[16]{0} %w), source_target_pairs={{0,1}}
+  %notacoll = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+"""
+        out = collective_bytes(hlo)
+        assert out["bytes_by_op"]["all-reduce"] == 1024 * 16 * 4
+        assert out["bytes_by_op"]["all-gather"] == 64 * 128 * 2
+        assert out["bytes_by_op"]["reduce-scatter"] == 32 * 4
+        assert out["bytes_by_op"]["collective-permute"] == 16 * 4
+        assert out["count_by_op"]["all-to-all"] == 0
+        assert out["total_bytes"] == sum(out["bytes_by_op"].values())
+
+    def test_tuple_result_shapes(self):
+        from repro.launch.dryrun import collective_bytes
+        hlo = "%ar = (f32[8]{0}, f32[16]{0}) all-reduce(%a, %b), to_apply=%sum"
+        out = collective_bytes(hlo)
+        assert out["bytes_by_op"]["all-reduce"] == (8 + 16) * 4
+
+
+class TestAbstractBuilders:
+    def test_abstract_params_no_allocation(self):
+        """A 17B-param arch must be abstractable instantly (structs only)."""
+        from repro.launch.dryrun import abstract_params
+        cfg = get_config("llama4-scout-17b-16e")
+        params_s, axes = abstract_params(cfg)
+        leaves = jax.tree.leaves(params_s)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        n_params = sum(int(np.prod(l.shape)) for l in leaves)
+        assert n_params > 15e9        # 16 experts: ~100B total, 17B active
+        ax_leaves = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+        assert len(ax_leaves) > 0
+
+    def test_model_flops_estimate_sane(self):
+        from repro.configs import SHAPES
+        from repro.launch.dryrun import model_flops_estimate
+        cfg = get_config("granite-3-8b")
+        f_train = model_flops_estimate(cfg, SHAPES["train_4k"])
+        # 6 * ~8e9 params * 1M tokens ≈ 5e16
+        assert 1e16 < f_train < 1e17
+        f_dec = model_flops_estimate(cfg, SHAPES["decode_32k"])
+        assert f_dec < f_train / 1000
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       names=st.lists(st.sampled_from(["embed", "ffn", "heads", "batch", None]),
+                      min_size=1, max_size=4))
+def test_logical_to_spec_total_property(dims, names):
+    """Any (shape, axes) pair yields a valid PartitionSpec: same rank, every
+    mesh axis used at most once."""
+    mesh = make_host_mesh(1, 1)
+    n = min(len(dims), len(names))
+    spec = logical_to_spec(tuple(names[:n]), tuple(dims[:n]), mesh, DEFAULT_RULES)
+    assert len(spec) == n
+    used = [s for s in spec if s is not None]
+    flat = []
+    for u in used:
+        flat.extend(u if isinstance(u, tuple) else (u,))
+    assert len(flat) == len(set(flat))
