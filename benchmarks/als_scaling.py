@@ -29,8 +29,8 @@ def _worker() -> None:
     cfgj = json.loads(sys.stdin.read())
     tiles = cfgj["tiles"]
     devices = len(jax.devices())
-    mesh = jax.make_mesh((devices,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((devices,), ("data",))
 
     # tile to a device-divisible user/item count
     users = 64 * devices if cfgj["mode"] == "strong_base" else 64

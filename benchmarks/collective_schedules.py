@@ -1,14 +1,19 @@
 """The paper's §IV-A communication comparison: MLI's gather-to-master +
-broadcast vs VW's tree AllReduce (plus our beyond-paper reduce-scatter).
+broadcast vs VW's tree AllReduce (plus our beyond-paper reduce-scatter),
+swept through the shared :class:`DistributedRunner` (see docs/benchmarks.md).
 
-Two views:
-  1. *Correctness/time on emulated devices* — run the same local-SGD round
-     under each schedule and time it (the schedules are algebraically equal;
-     walltime on CPU mostly shows dispatch overhead).
-  2. *Wire bytes on the production mesh* — lower one combine per schedule on
-     the 16×16 mesh (in a 512-device subprocess) and count collective bytes
-     in the HLO: this is the property the paper actually reasons about
-     (O(N·d) in for gather vs O(d) for allreduce).
+Two views, both on real multi-device meshes (subprocesses, since the device
+count must be fixed before jax initializes):
+  1. *Walltime + agreement on an 8-device mesh* — train logistic regression
+     and k-means under each schedule via their ``schedule=`` knob (which
+     routes through the runner) and time them; the schedules are
+     algebraically equal (asserted), so the deltas show collective dispatch
+     cost.  On a CPU container the absolute numbers mostly reflect host
+     emulation overhead.
+  2. *Wire bytes on the production mesh* — lower one runner combine per
+     schedule on the 16×16 mesh (512-device subprocess) and count
+     collective bytes in the HLO: this is the property the paper actually
+     reasons about (O(N·d) in for gather vs O(d) for allreduce).
 """
 from __future__ import annotations
 
@@ -19,31 +24,91 @@ import sys
 from benchmarks._util import emit, run_with_devices
 
 D = 4096
+WALLTIME_DEVICES = 8
 
 
-def _worker() -> None:
+def _worker_walltime() -> None:
+    import jax
+    import numpy as np
+
+    from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+    from repro.core.algorithms.logistic_regression import (
+        LogisticRegressionAlgorithm, LogisticRegressionParameters)
+    from repro.core.collectives import CollectiveSchedule
+    from repro.core.compat import make_mesh
+    from repro.core.numeric_table import MLNumericTable
+    from repro.data import synth_classification
+    from benchmarks._util import timeit
+
+    devices = len(jax.devices())
+    mesh = make_mesh((devices,), ("data",))
+    X, y, _ = synth_classification(2048, 128, seed=0)
+    data = np.concatenate([y[:, None], X], 1).astype(np.float32)
+    table = MLNumericTable.from_numpy(data, mesh=mesh)
+    tX = MLNumericTable.from_numpy(X.astype(np.float32), mesh=mesh)
+
+    def sweep(name, train_fn):
+        """Time train_fn(schedule) per schedule and assert the results agree."""
+        rows, results = [], {}
+        for sched in CollectiveSchedule:
+            last = {}
+
+            def run():
+                last["out"] = train_fn(sched)
+                return last["out"]
+
+            t = timeit(run, warmup=1, iters=3)
+            results[sched] = np.asarray(last["out"])
+            rows.append({"schedule": sched.value, "seconds": round(t, 3)})
+        ref = results[CollectiveSchedule.ALLREDUCE]
+        for sched, out in results.items():
+            drift = float(np.abs(out - ref).max())
+            assert drift < 1e-4, f"{name} {sched}: schedules disagree by {drift}"
+        return rows
+
+    logreg_rows = sweep("logreg", lambda sched: LogisticRegressionAlgorithm.train(
+        table, LogisticRegressionParameters(learning_rate=0.5, max_iter=5,
+                                            local_batch_size=32,
+                                            schedule=sched)).weights)
+    kmeans_rows = sweep("kmeans", lambda sched: KMeans.train(
+        tX, KMeansParameters(k=8, max_iter=5, seed=0, schedule=sched)).centroids)
+    print(json.dumps({"devices": devices, "logreg": logreg_rows,
+                      "kmeans": kmeans_rows}))
+
+
+def _worker_wire_bytes() -> None:
     import jax
     import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
 
-    from repro.core.collectives import CollectiveSchedule, combine_mean
+    from repro.core.collectives import CollectiveSchedule
+    from repro.core.compat import make_mesh
+    from repro.core.runner import DistributedRunner
     from repro.launch.dryrun import collective_bytes  # parser only (no mesh use)
 
-    json.loads(sys.stdin.read())
-    mesh = jax.make_mesh((16, 16), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((16, 16), ("data", "model"))
+    n_data = 16
     out = {}
     for sched in CollectiveSchedule:
-        def spmd(w):
-            return combine_mean(w, ("data",), sched)
+        runner = DistributedRunner(mesh=mesh, data_axes=("data",),
+                                   schedule=sched)
 
-        f = jax.jit(jax.shard_map(spmd, mesh=mesh,
-                                  in_specs=P("data"), out_specs=P(),
-                                  check_vma=False))
-        lowered = f.lower(jax.ShapeDtypeStruct((16 * D,), jnp.float32))
+        def combine(w):
+            return runner.partition_apply(w, lambda block: block.mean(axis=0),
+                                          combine="mean")
+
+        f = jax.jit(combine)
+        lowered = f.lower(jax.ShapeDtypeStruct((n_data, D), jnp.float32))
         hlo = lowered.compile().as_text()
         out[sched.value] = collective_bytes(hlo)
     print(json.dumps(out))
+
+
+def _worker() -> None:
+    payload = json.loads(sys.stdin.read())
+    if payload.get("view") == "walltime":
+        _worker_walltime()
+    else:
+        _worker_wire_bytes()
 
 
 def main() -> None:
@@ -54,39 +119,15 @@ def main() -> None:
         _worker()
         return
 
-    import time
-
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-
-    from repro.core.algorithms.logistic_regression import (
-        LogisticRegressionAlgorithm, LogisticRegressionParameters)
-    from repro.core.collectives import CollectiveSchedule
-    from repro.core.numeric_table import MLNumericTable
-    from repro.data import synth_classification
-    from benchmarks._util import timeit
-
-    # view 1: emulated-device walltime + agreement
-    X, y, _ = synth_classification(2048, 128, seed=0)
-    data = np.concatenate([y[:, None], X], 1).astype(np.float32)
-    table = MLNumericTable.from_numpy(data, num_shards=8)
-    rows, weights = [], {}
-    for sched in CollectiveSchedule:
-        p = LogisticRegressionParameters(learning_rate=0.5, max_iter=5,
-                                         local_batch_size=32, schedule=sched)
-        t = timeit(lambda: LogisticRegressionAlgorithm.train(table, p).weights,
-                   warmup=1, iters=3)
-        weights[sched] = np.asarray(LogisticRegressionAlgorithm.train(table, p).weights)
-        rows.append({"schedule": sched.value, "seconds": round(t, 3)})
-    ref = weights[CollectiveSchedule.ALLREDUCE]
-    for sched, w in weights.items():
-        drift = float(np.abs(w - ref).max())
-        assert drift < 1e-4, f"{sched}: schedules disagree by {drift}"
-    emit("collective_schedules_walltime", rows)
+    # view 1: walltime + agreement on an 8-device mesh
+    res = run_with_devices("benchmarks.collective_schedules", WALLTIME_DEVICES,
+                           {"view": "walltime"})
+    emit("collective_schedules_logreg_walltime", res["logreg"])
+    emit("collective_schedules_kmeans_walltime", res["kmeans"])
 
     # view 2: wire bytes on the production mesh
-    res = run_with_devices("benchmarks.collective_schedules", 512, {})
+    res = run_with_devices("benchmarks.collective_schedules", 512,
+                           {"view": "wire_bytes"})
     rows = [{"schedule": k, "collective_bytes": v["total_bytes"],
              **{f"n_{op}": n for op, n in v["count_by_op"].items() if n}}
             for k, v in res.items()]

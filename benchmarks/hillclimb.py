@@ -131,11 +131,10 @@ def main() -> None:
     spec = exps[args.run]
     mesh = None
     if "mesh_shape" in spec:
-        import jax
         shp = spec["mesh_shape"]
         names = ("pod", "data", "model")[-len(shp):]
-        mesh = jax.make_mesh(shp, names,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shp))
+        from repro.core.compat import make_mesh
+        mesh = make_mesh(shp, names)
     res = run_pair(spec["arch"], spec["shape"],
                    multi_pod=spec.get("multi_pod", False),
                    rules=spec.get("rules", DEFAULT_RULES),

@@ -1,11 +1,17 @@
 """Paper Figs. 2b/2c (weak scaling) and A5/A6 (strong scaling) for logistic
-regression via local SGD + parameter averaging.
+regression via local SGD + parameter averaging, executed through the shared
+DistributedRunner (see docs/benchmarks.md).
 
 Weak scaling: data per 'machine' (device) fixed; more devices → ideally flat
 walltime.  Strong scaling: total data fixed; more devices → ideally linear
-speedup.  Each device count runs in a subprocess (see _util).
+speedup.  Each device count runs in a subprocess (see _util).  The runner's
+collective schedule is a sweepable knob: ``--schedules`` takes a
+comma-separated list and emits one scaling curve per schedule, which is the
+paper's §IV-A gather-vs-allreduce comparison laid over the scaling figures.
 
     PYTHONPATH=src python -m benchmarks.logreg_scaling --mode weak
+    PYTHONPATH=src python -m benchmarks.logreg_scaling \\
+        --schedules gather_broadcast,allreduce,reduce_scatter
 """
 from __future__ import annotations
 
@@ -35,8 +41,8 @@ def _worker() -> None:
     cfgj = json.loads(sys.stdin.read())
     n, d = cfgj["n"], cfgj["d"]
     devices = len(jax.devices())
-    mesh = jax.make_mesh((devices,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((devices,), ("data",))
 
     X, y, _ = synth_classification(n, d, seed=0)
     data = np.concatenate([y[:, None], X], 1).astype(np.float32)
@@ -59,6 +65,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["weak", "strong", "both"], default="both")
     ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--schedules", default="gather_broadcast",
+                    help="comma-separated CollectiveSchedule values to sweep "
+                         "through the DistributedRunner")
     ap.add_argument("--_worker", action="store_true")
     args = ap.parse_args()
     if args._worker:
@@ -66,22 +75,25 @@ def main() -> None:
         return
 
     dev_counts = [int(x) for x in args.devices.split(",")]
+    schedules = [s.strip() for s in args.schedules.split(",") if s.strip()]
     modes = ["weak", "strong"] if args.mode == "both" else [args.mode]
     for mode in modes:
-        rows = []
-        base = None
-        for nd in dev_counts:
-            n = N_PER_DEV_WEAK * nd if mode == "weak" else N_TOTAL_STRONG
-            res = run_with_devices("benchmarks.logreg_scaling", nd,
-                                   {"n": n, "d": D, "iters": ITERS})
-            if base is None:
-                base = res["seconds"]
-            rows.append({"devices": nd, "n": n,
-                         "seconds": round(res["seconds"], 3),
-                         "relative": round(res["seconds"] / base, 3),
-                         "speedup": round(base / res["seconds"], 3),
-                         "acc": round(res["acc"], 3)})
-        emit(f"logreg_{mode}_scaling", rows)
+        for schedule in schedules:
+            rows = []
+            base = None
+            for nd in dev_counts:
+                n = N_PER_DEV_WEAK * nd if mode == "weak" else N_TOTAL_STRONG
+                res = run_with_devices("benchmarks.logreg_scaling", nd,
+                                       {"n": n, "d": D, "iters": ITERS,
+                                        "schedule": schedule})
+                if base is None:
+                    base = res["seconds"]
+                rows.append({"devices": nd, "n": n, "schedule": schedule,
+                             "seconds": round(res["seconds"], 3),
+                             "relative": round(res["seconds"] / base, 3),
+                             "speedup": round(base / res["seconds"], 3),
+                             "acc": round(res["acc"], 3)})
+            emit(f"logreg_{mode}_scaling", rows)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
 """MLI core API (the paper's contribution): MLTable, LocalMatrix,
-Optimizer/Algorithm/Model, and the collective schedules that make global
-combination explicit."""
+Optimizer/Algorithm/Model, the collective schedules that make global
+combination explicit, and the DistributedRunner execution layer every
+algorithm delegates to (see docs/architecture.md)."""
 from repro.core.schema import EMPTY, Column, ColumnType, MLRow, Schema
 from repro.core.mltable import MLTable
 from repro.core.numeric_table import MLNumericTable
 from repro.core.local_matrix import LocalMatrix, PaddedCSR
-from repro.core.collectives import CollectiveSchedule, combine_mean, combine_sum
+from repro.core.collectives import (
+    CollectiveSchedule,
+    combine_concat,
+    combine_mean,
+    combine_sum,
+)
+from repro.core.runner import DistributedRunner
 from repro.core.optimizer import (
     GradientDescent,
     GradientDescentParameters,
@@ -21,7 +28,8 @@ from repro.core.interfaces import Algorithm, Model, NumericAlgorithm
 __all__ = [
     "EMPTY", "Column", "ColumnType", "MLRow", "Schema",
     "MLTable", "MLNumericTable", "LocalMatrix", "PaddedCSR",
-    "CollectiveSchedule", "combine_mean", "combine_sum",
+    "CollectiveSchedule", "combine_mean", "combine_sum", "combine_concat",
+    "DistributedRunner",
     "Optimizer",
     "StochasticGradientDescent", "StochasticGradientDescentParameters",
     "GradientDescent", "GradientDescentParameters",

@@ -10,22 +10,27 @@ Sparse representation: the paper uses CSR-compressed LocalMatrix rows with
 ``nonZeroIndices`` / ``nonZeroProjection``.  TPUs need static shapes, so each
 ratings row is packed as ``[indices | values | mask]`` of fixed width
 ``max_nnz`` (see :class:`repro.core.local_matrix.PaddedCSR`), and the packed
-rows form a normal MLNumericTable — which means the whole algorithm runs
-through ``matrixBatchMap`` exactly like Fig. A9's ``trainData.map(localALS(_,
-fixedFactor, lambI))``.
+rows form a normal MLNumericTable — which means each half-sweep is exactly
+Fig. A9's ``trainData.map(localALS(_, fixedFactor, lambI))``: the pure local
+function :func:`_local_als` solves the partition's rows, and
+:class:`repro.core.runner.DistributedRunner` re-broadcasts the completed
+factor to every partition with ``combine="concat"`` — the Fig. A9
+'broadcast' step, whose wire pattern is the configured
+:class:`CollectiveSchedule`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.collectives import CollectiveSchedule
 from repro.core.interfaces import Model, NumericAlgorithm
-from repro.core.local_matrix import LocalMatrix
 from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
 
 __all__ = ["ALSParameters", "MatrixFactorizationModel", "BroadcastALS",
            "pack_csr_table", "unpack_csr_block"]
@@ -65,6 +70,9 @@ class ALSParameters:
     lam: float = 0.01       # paper: lambda = .01
     max_iter: int = 10      # paper: 10 iterations
     seed: int = 0
+    # wire pattern of the per-sweep factor broadcast; GATHER_BROADCAST is the
+    # paper's literal schedule (gather factor rows, broadcast the whole factor)
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.GATHER_BROADCAST
 
 
 class MatrixFactorizationModel(Model):
@@ -85,10 +93,11 @@ class MatrixFactorizationModel(Model):
         return jnp.sqrt(jnp.mean((pred - jnp.asarray(vals)) ** 2))
 
 
-def _local_als(block: LocalMatrix, Y: jnp.ndarray, lam: float) -> LocalMatrix:
-    """Fig. A9 ``localALS``: for each packed CSR row, solve the regularized
-    normal equations against the fixed factor Y."""
-    idx, val, msk = unpack_csr_block(block.data)
+def _local_als(block: jnp.ndarray, Y: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """Fig. A9 ``localALS`` as a pure local function: for each packed CSR row
+    of the partition, solve the regularized normal equations against the
+    fixed factor Y."""
+    idx, val, msk = unpack_csr_block(block)
     k = Y.shape[1]
     lambI = lam * jnp.eye(k, dtype=Y.dtype)
 
@@ -98,8 +107,7 @@ def _local_als(block: LocalMatrix, Y: jnp.ndarray, lam: float) -> LocalMatrix:
         b = Yq.T @ (v_row * m_row)                           # (k,)
         return jnp.linalg.solve(A, b[:, None])[:, 0]
 
-    out = jax.vmap(solve_row)(idx, val, msk)                 # (rows, k)
-    return LocalMatrix(out)
+    return jax.vmap(solve_row)(idx, val, msk)                # (rows, k)
 
 
 class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
@@ -111,10 +119,15 @@ class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
 
     @classmethod
     def compute_factor(cls, train_data: MLNumericTable, fixed_factor: jnp.ndarray,
-                       lam: float) -> MLNumericTable:
-        """Fig. A9 ``computeFactor``: one half-sweep, returning the new factor
-        as a data-sharded table (rows aligned with train_data rows)."""
-        return train_data.matrix_batch_map(_local_als, fixed_factor, lam)
+                       lam: float,
+                       schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.GATHER_BROADCAST,
+                       ) -> jnp.ndarray:
+        """Fig. A9 ``computeFactor``: one half-sweep through the same
+        runner call ``train`` uses — solve the partition's factor rows
+        locally, broadcast the completed factor under ``schedule``."""
+        runner = DistributedRunner.for_table(train_data, schedule=schedule)
+        return runner.partition_apply(train_data.data, _local_als,
+                                      (fixed_factor, lam), combine="concat")
 
     @classmethod
     def train(cls, data: MLNumericTable,
@@ -132,22 +145,21 @@ class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
         V = jax.random.uniform(key_v, (n, p.rank), jnp.float32)
 
         # The whole alternating loop runs as ONE jitted scan so the 2·max_iter
-        # matrixBatchMap rounds compile once (eager per-round dispatch would
-        # retrace/recompile the shard_map every call).
-        mesh, shards = data.mesh, data.num_shards
-        axes = data.data_axes or None
+        # half-sweeps compile once (eager per-round dispatch would
+        # retrace/recompile the shard_map every call).  Each half-sweep is
+        # runner.partition_apply with combine="concat": solve the partition's
+        # factor rows locally, then re-broadcast the completed factor under
+        # the configured schedule (Fig. A9's broadcast).
+        runner = DistributedRunner.for_table(data, schedule=p.schedule)
 
         @jax.jit
         def run(data_arr, dataT_arr, U0, V0):
-            dt = MLNumericTable(data_arr, num_shards=shards, mesh=mesh,
-                                data_axes=axes)
-            dtt = MLNumericTable(dataT_arr, num_shards=shards, mesh=mesh,
-                                 data_axes=axes)
-
             def body(carry, _):
                 U, V = carry
-                U = dt.matrix_batch_map(_local_als, V, p.lam).data
-                V = dtt.matrix_batch_map(_local_als, U, p.lam).data
+                U = runner.partition_apply(data_arr, _local_als, (V, p.lam),
+                                           combine="concat")
+                V = runner.partition_apply(dataT_arr, _local_als, (U, p.lam),
+                                           combine="concat")
                 return (U, V), None
 
             (U1, V1), _ = jax.lax.scan(body, (U0, V0), None, length=p.max_iter)

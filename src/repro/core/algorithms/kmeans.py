@@ -1,23 +1,27 @@
 """K-Means clustering (the terminal stage of the paper's Fig. A2 pipeline:
 ``KMeans(featurizedTable, k=50)``).
 
-Lloyd's algorithm expressed in MLI primitives: each round, every partition
-computes its local (per-cluster sum, count) statistics against the broadcast
-centroids via ``matrixBatchMap``; the global combine is an explicit sum;
-centroids update outside the partition function.  Empty clusters keep their
-previous centroid.
+Lloyd's algorithm expressed in MLI primitives: the per-partition compute is
+the pure local function :func:`_local_stats` — each partition's (per-cluster
+sum, count) statistics against the current centroids — and iteration +
+global combination are delegated to
+:class:`repro.core.runner.DistributedRunner`: each round the runner sums the
+partition statistics with the configured :class:`CollectiveSchedule` and the
+``update`` step rebuilds the centroids.  Empty clusters keep their previous
+centroid.  The whole loop compiles to one jitted scan.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.collectives import CollectiveSchedule
 from repro.core.interfaces import Model, NumericAlgorithm
-from repro.core.local_matrix import LocalMatrix
 from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
 
 __all__ = ["KMeansParameters", "KMeansModel", "KMeans"]
 
@@ -27,6 +31,7 @@ class KMeansParameters:
     k: int = 8
     max_iter: int = 20
     seed: int = 0
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
 
 
 class KMeansModel(Model):
@@ -43,15 +48,14 @@ class KMeansModel(Model):
         return jnp.sum(jnp.min(d2, axis=-1))
 
 
-def _local_stats(block: LocalMatrix, centroids: jnp.ndarray) -> LocalMatrix:
-    """Per-partition (k, d+1) matrix: [cluster sums | cluster counts]."""
-    x = block.data                                            # (rows, d)
-    d2 = jnp.sum((x[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
-    assign = jnp.argmin(d2, axis=-1)                          # (rows,)
-    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=x.dtype)  # (rows, k)
-    sums = onehot.T @ x                                       # (k, d)
-    counts = jnp.sum(onehot, axis=0)[:, None]                 # (k, 1)
-    return LocalMatrix(jnp.concatenate([sums, counts], axis=1))
+def _local_stats(block: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Pure local function: per-partition (k, d+1) [cluster sums | counts]."""
+    d2 = jnp.sum((block[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=-1)                              # (rows,)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=block.dtype)
+    sums = onehot.T @ block                                       # (k, d)
+    counts = jnp.sum(onehot, axis=0)[:, None]                     # (k, 1)
+    return jnp.concatenate([sums, counts], axis=1)
 
 
 class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
@@ -72,13 +76,16 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
         perm = jax.random.permutation(jax.random.PRNGKey(p.seed), n)[: p.k]
         centroids = jnp.take(data.data, perm, axis=0)
 
-        for _ in range(p.max_iter):
-            stats = data.matrix_batch_map(_local_stats, centroids)
-            # stats table: num_shards stacked (k, d+1) blocks -> global sum
-            blocks = stats.data.reshape(data.num_shards, p.k, d + 1)
-            tot = jnp.sum(blocks, axis=0)
+        def local_step(block, centroids, r):
+            return _local_stats(block, centroids)
+
+        def update(centroids, tot, r):
             sums, counts = tot[:, :d], tot[:, d]
-            centroids = jnp.where(counts[:, None] > 0,
-                                  sums / jnp.maximum(counts[:, None], 1.0),
-                                  centroids)
+            return jnp.where(counts[:, None] > 0,
+                             sums / jnp.maximum(counts[:, None], 1.0),
+                             centroids)
+
+        runner = DistributedRunner.for_table(data, schedule=p.schedule)
+        centroids = runner.run_rounds(data, centroids, local_step, p.max_iter,
+                                      combine="sum", update=update)
         return KMeansModel(centroids, p)

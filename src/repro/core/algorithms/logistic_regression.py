@@ -8,7 +8,9 @@ literally the paper's:
         x = vec[1:]
         return x * (sigmoid(x · w) - vec[0])
 
-and training is one call into the SGD optimizer.
+and training is one call into the SGD optimizer, which iterates through
+:class:`repro.core.runner.DistributedRunner` — ``params.schedule`` selects
+the §IV-A collective schedule of the per-round weight averaging.
 """
 from __future__ import annotations
 

@@ -1,21 +1,25 @@
 """Gaussian Naive Bayes through the MLI contract (beyond-paper, same
 purpose as pca.py: the API extends to non-gradient algorithms).
 
-Pattern: ONE ``matrixBatchMap`` pass emits per-partition sufficient
-statistics for every class (count, Σx, Σx² as a fixed-shape block), one
-explicit global sum, closed-form class-conditional Gaussians.  Labels in
-column 0 as integers 0..C−1."""
+Pattern: ONE pass of the pure local function :func:`_local_stats` emits
+per-partition sufficient statistics for every class (count, Σx, Σx² as a
+fixed-shape block); :class:`repro.core.runner.DistributedRunner` performs
+the global sum under the configured :class:`CollectiveSchedule`; closed-form
+class-conditional Gaussians follow.  Labels in column 0 as integers
+0..C−1."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from functools import partial
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.collectives import CollectiveSchedule
 from repro.core.interfaces import Model, NumericAlgorithm
-from repro.core.local_matrix import LocalMatrix
 from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
 
 __all__ = ["NaiveBayesParameters", "NaiveBayesModel", "GaussianNaiveBayes"]
 
@@ -24,6 +28,18 @@ __all__ = ["NaiveBayesParameters", "NaiveBayesModel", "GaussianNaiveBayes"]
 class NaiveBayesParameters:
     num_classes: int = 2
     var_smoothing: float = 1e-6
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+
+
+def _local_stats(block: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Pure local function: a partition's (C, 1+2d) block [count | Σx | Σx²]."""
+    y = block[:, 0].astype(jnp.int32)
+    x = block[:, 1:]
+    onehot = jax.nn.one_hot(y, num_classes, dtype=x.dtype)  # (rows, C)
+    cnt = jnp.sum(onehot, axis=0)[:, None]                  # (C, 1)
+    s1 = onehot.T @ x                                       # (C, d)
+    s2 = onehot.T @ (x * x)                                 # (C, d)
+    return jnp.concatenate([cnt, s1, s2], axis=1)
 
 
 class NaiveBayesModel(Model):
@@ -56,18 +72,9 @@ class GaussianNaiveBayes(NumericAlgorithm[NaiveBayesParameters, NaiveBayesModel]
         d = data.num_cols - 1
         n = data.num_rows
 
-        def local_stats(m: LocalMatrix) -> LocalMatrix:
-            y = m.data[:, 0].astype(jnp.int32)
-            x = m.data[:, 1:]
-            onehot = jax.nn.one_hot(y, C, dtype=x.dtype)       # (rows, C)
-            cnt = jnp.sum(onehot, axis=0)[:, None]             # (C, 1)
-            s1 = onehot.T @ x                                  # (C, d)
-            s2 = onehot.T @ (x * x)                            # (C, d)
-            return LocalMatrix(jnp.concatenate([cnt, s1, s2], axis=1))
-
-        blocks = data.matrix_batch_map(local_stats)            # (P·C, 1+2d)
-        stacked = blocks.data.reshape(data.num_shards, C, 1 + 2 * d)
-        tot = jnp.sum(stacked, axis=0)                         # explicit sum
+        runner = DistributedRunner.for_table(data, schedule=p.schedule)
+        tot = runner.run_once(data, partial(_local_stats, num_classes=C),
+                              combine="sum")                   # (C, 1+2d)
         cnt = jnp.maximum(tot[:, 0], 1.0)                      # (C,)
         mean = tot[:, 1:1 + d] / cnt[:, None]
         var = tot[:, 1 + d:] / cnt[:, None] - mean ** 2

@@ -2,22 +2,24 @@
 supporting the paper's §IV claim that the API 'naturally extends to a
 diverse group of ML algorithms').
 
-Pattern: partition-local second-moment blocks via ``matrixBatchMap`` (each
-partition emits its d×d Gram matrix — one output row block per partition),
-one explicit global sum, then a LOCAL eigendecomposition of the d×d
+Pattern: the pure local function :func:`_local_moments` emits each
+partition's [Σx ; XᵀX] block; one global sum — executed by
+:class:`repro.core.runner.DistributedRunner` under the configured
+:class:`CollectiveSchedule` — then a LOCAL eigendecomposition of the d×d
 covariance (d ≪ n; the paper's shared-nothing rule — only O(d²) crosses
 the wire, never the data)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.collectives import CollectiveSchedule
 from repro.core.interfaces import Model, NumericAlgorithm
-from repro.core.local_matrix import LocalMatrix
 from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
 
 __all__ = ["PCAParameters", "PCAModel", "PCA"]
 
@@ -25,6 +27,14 @@ __all__ = ["PCAParameters", "PCAModel", "PCA"]
 @dataclasses.dataclass
 class PCAParameters:
     n_components: int = 2
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+
+
+def _local_moments(block: jnp.ndarray) -> jnp.ndarray:
+    """Pure local function: a partition's (d+1, d) block [Σx ; XᵀX]."""
+    s = jnp.sum(block, axis=0, keepdims=True)           # (1, d)
+    gram = block.T @ block                              # (d, d)
+    return jnp.concatenate([s, gram], axis=0)
 
 
 class PCAModel(Model):
@@ -55,16 +65,8 @@ class PCA(NumericAlgorithm[PCAParameters, PCAModel]):
         p = params or cls.default_parameters()
         n, d = data.num_rows, data.num_cols
 
-        # partition-local [sum | Gram] blocks, concatenated row-wise:
-        # each partition contributes a (d+1, d) block [Σx ; XᵀX]
-        def local_moments(m: LocalMatrix) -> LocalMatrix:
-            s = jnp.sum(m.data, axis=0, keepdims=True)          # (1, d)
-            gram = m.data.T @ m.data                            # (d, d)
-            return LocalMatrix(jnp.concatenate([s, gram], axis=0))
-
-        blocks = data.matrix_batch_map(local_moments)            # (P·(d+1), d)
-        stacked = blocks.data.reshape(data.num_shards, d + 1, d)
-        total = jnp.sum(stacked, axis=0)                         # explicit sum
+        runner = DistributedRunner.for_table(data, schedule=p.schedule)
+        total = runner.run_once(data, _local_moments, combine="sum")  # (d+1, d)
         mean = total[0] / n
         cov = total[1:] / n - jnp.outer(mean, mean)
 

@@ -15,8 +15,15 @@ The paper contrasts two ways to combine per-partition results each round:
 Beyond the paper we add **REDUCE_SCATTER**: psum_scatter + all_gather, the
 two-phase bandwidth-optimal schedule modern frameworks use; it shards the
 reduction work across devices.  All three compute the same mean — tests
-assert bit-level agreement to fp tolerance — but lower to different HLO
-collectives, which the roofline benchmark quantifies.
+assert agreement to fp tolerance — but lower to different HLO collectives,
+which ``benchmarks/collective_schedules.py`` quantifies (see
+``docs/benchmarks.md``).
+
+Every algorithm reaches these functions through
+:class:`repro.core.runner.DistributedRunner`, which owns the ``shard_map``
+context they require; the schedule is the runner's pluggable knob (see
+``docs/architecture.md`` for the full data flow and ``docs/api.md`` for the
+public surface).
 
 These functions must be called inside a ``shard_map`` body (they use named
 axes).
@@ -30,32 +37,55 @@ from typing import Any, Sequence, Union
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CollectiveSchedule", "combine_mean", "combine_sum"]
+from repro.core.compat import axis_size as _compat_axis_size
+
+__all__ = ["CollectiveSchedule", "combine_mean", "combine_sum", "combine_concat"]
 
 AxisNames = Union[str, Sequence[str]]
 
 
 class CollectiveSchedule(enum.Enum):
+    """Wire schedule for the per-round global combine (paper §IV-A).
+
+    Members:
+      * ``ALLREDUCE`` — VW's reduction tree (paper §IV-A); O(d) bytes per
+        device.
+      * ``GATHER_BROADCAST`` — MLI/Spark's gather-to-master + broadcast
+        (paper §IV-A, Fig. 2a discussion); O(N·d) bytes per device.
+      * ``REDUCE_SCATTER`` — beyond-paper two-phase psum_scatter +
+        all_gather; bandwidth-optimal on ring interconnects.
+
+    All members produce identical results to fp tolerance (asserted in
+    ``tests/test_runner.py``); they differ only in lowered HLO collectives.
+    See ``docs/benchmarks.md`` for the measured wire-byte comparison.
+    """
+
     ALLREDUCE = "allreduce"                 # VW-style (paper §IV-A)
     GATHER_BROADCAST = "gather_broadcast"   # MLI/Spark-style (paper §IV-A)
     REDUCE_SCATTER = "reduce_scatter"       # beyond-paper two-phase
 
     @classmethod
     def parse(cls, v: Union[str, "CollectiveSchedule"]) -> "CollectiveSchedule":
+        """Accept either a member or its lowercase string value — so
+        hyperparameter dataclasses, CLI flags, and JSON payloads can all
+        carry a schedule."""
         return v if isinstance(v, cls) else cls(str(v).lower())
 
 
-def _axis_size(axis_names: AxisNames) -> jnp.ndarray:
-    names = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+def _names(axis_names: AxisNames) -> Sequence[str]:
+    return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+
+
+def _axis_size(axis_names: AxisNames) -> int:
     size = 1
-    for n in names:
-        size *= jax.lax.axis_size(n)
+    for n in _names(axis_names):
+        size *= _compat_axis_size(n)
     return size
 
 
 def _leaf_mean(x: jnp.ndarray, axis_names: AxisNames,
                schedule: CollectiveSchedule) -> jnp.ndarray:
-    names = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+    names = _names(axis_names)
     if schedule is CollectiveSchedule.ALLREDUCE:
         return jax.lax.pmean(x, names)
     if schedule is CollectiveSchedule.GATHER_BROADCAST:
@@ -66,9 +96,7 @@ def _leaf_mean(x: jnp.ndarray, axis_names: AxisNames,
         return g
     if schedule is CollectiveSchedule.REDUCE_SCATTER:
         flat = x.reshape(-1)
-        n_dev = 1
-        for n in names:
-            n_dev *= jax.lax.axis_size(n)
+        n_dev = _axis_size(names)
         pad = (-flat.shape[0]) % n_dev
         if pad:
             flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
@@ -83,24 +111,84 @@ def _leaf_mean(x: jnp.ndarray, axis_names: AxisNames,
     raise ValueError(schedule)
 
 
+def _leaf_concat(x: jnp.ndarray, axis_names: AxisNames,
+                 schedule: CollectiveSchedule) -> jnp.ndarray:
+    """Concatenate every partition's (rows, ...) block into the full
+    (total_rows, ...) array on every device — the paper's Fig. A9 'broadcast
+    the factor' step, under the selected wire pattern.
+
+    Axes are walked innermost-first so the row order matches the
+    ``P((pod, data))`` partition layout.
+    """
+    names = _names(axis_names)
+    for n in reversed(names):
+        size = _compat_axis_size(n)
+        if schedule is CollectiveSchedule.GATHER_BROADCAST:
+            # the direct wire pattern: one tiled all-gather
+            x = jax.lax.all_gather(x, n, tiled=True)
+        else:
+            # place the local block at its global offset, combine by summing
+            # disjoint supports: ALLREDUCE in one phase, REDUCE_SCATTER via
+            # the two-phase psum_scatter + all_gather pipeline.
+            rows = x.shape[0]
+            full = jnp.zeros((size * rows,) + x.shape[1:], x.dtype)
+            idx = jax.lax.axis_index(n)
+            full = jax.lax.dynamic_update_slice_in_dim(full, x, idx * rows, axis=0)
+            if schedule is CollectiveSchedule.ALLREDUCE:
+                x = jax.lax.psum(full, n)
+            elif schedule is CollectiveSchedule.REDUCE_SCATTER:
+                part = jax.lax.psum_scatter(full, n, scatter_dimension=0, tiled=True)
+                x = jax.lax.all_gather(part, n, tiled=True)
+            else:
+                raise ValueError(schedule)
+    return x
+
+
 def combine_mean(tree: Any, axis_names: AxisNames,
                  schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE) -> Any:
     """Average a pytree of per-partition values across the data axes using the
-    selected collective schedule.  This is the paper's 'average all parameters
-    at each iteration' step, factored so the schedule is a knob."""
+    selected collective schedule.
+
+    This is the paper's 'average all parameters at each iteration' step
+    (§IV-A, Fig. A4 ``avgWeights``), factored so the schedule is a knob.
+    Used by :class:`repro.core.runner.DistributedRunner` with
+    ``combine="mean"``; documented in ``docs/api.md``.
+    """
     schedule = CollectiveSchedule.parse(schedule)
     return jax.tree.map(partial(_leaf_mean, axis_names=axis_names, schedule=schedule), tree)
 
 
 def combine_sum(tree: Any, axis_names: AxisNames,
                 schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE) -> Any:
-    """Sum variant (used for full-batch gradient accumulation)."""
+    """Sum a pytree of per-partition values across the data axes.
+
+    The combine used when partial results are *sufficient statistics* rather
+    than parameters: full-batch gradient accumulation (paper Fig. A4 top),
+    k-means cluster sums/counts, PCA moments, naive Bayes counts.  Runner
+    spelling: ``combine="sum"``; documented in ``docs/api.md``.
+    """
     schedule = CollectiveSchedule.parse(schedule)
-    size = None
 
     def leaf(x):
-        nonlocal size
         m = _leaf_mean(x, axis_names, schedule)
         return m * _axis_size(axis_names)
 
     return jax.tree.map(leaf, tree)
+
+
+def combine_concat(tree: Any, axis_names: AxisNames,
+                   schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.GATHER_BROADCAST) -> Any:
+    """Concatenate per-partition row blocks into the full array on every
+    device, preserving partition order.
+
+    This is the combine behind BroadcastALS (paper §IV-B, Fig. A9): each
+    half-sweep computes the rows of one factor partition-locally, then the
+    whole factor must be *broadcast* to every partition for the next sweep.
+    ``GATHER_BROADCAST`` is the paper's literal wire pattern (one
+    all-gather); ``ALLREDUCE`` and ``REDUCE_SCATTER`` realize the same
+    broadcast as a sum of disjointly-placed blocks, so ALS keeps the same
+    schedule knob as the gradient methods.  Runner spelling:
+    ``combine="concat"``; documented in ``docs/api.md``.
+    """
+    schedule = CollectiveSchedule.parse(schedule)
+    return jax.tree.map(partial(_leaf_concat, axis_names=axis_names, schedule=schedule), tree)

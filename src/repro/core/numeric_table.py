@@ -18,14 +18,14 @@ the paper's shared-nothing principle: no hidden distributed linalg.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
+from repro.core import partition as pt
 from repro.core.local_matrix import LocalMatrix
 
 __all__ = ["MLNumericTable"]
@@ -67,27 +67,16 @@ class MLNumericTable:
         self.names = tuple(names) if names is not None else None
         if mesh is not None:
             if data_axes is None:
-                data_axes = tuple(
-                    a for a in (("pod", self.DATA_AXIS)) if a in mesh.axis_names
-                )
+                data_axes = pt.infer_data_axes(mesh)
             self.data_axes: Tuple[str, ...] = data_axes
-            num_shards = int(np.prod([mesh.shape[a] for a in self.data_axes]))
-            if data.shape[0] % num_shards != 0:
-                raise ValueError(
-                    f"row count {data.shape[0]} must divide evenly over "
-                    f"{num_shards} devices on axes {self.data_axes} (pad first)"
-                )
-            sharding = NamedSharding(mesh, P(self.data_axes, None))
-            data = jax.device_put(data, sharding) if not _is_traced(data) else (
-                jax.lax.with_sharding_constraint(data, sharding)
-            )
+            num_shards = pt.num_data_shards(mesh, self.data_axes)
+            pt.check_rows_divisible(
+                data.shape[0], num_shards,
+                what=f"devices on axes {self.data_axes}")
+            data = pt.place_rows(data, mesh, self.data_axes)
         else:
             self.data_axes = ()
-            if data.shape[0] % num_shards != 0:
-                raise ValueError(
-                    f"row count {data.shape[0]} must divide evenly into "
-                    f"{num_shards} partitions (pad first)"
-                )
+            pt.check_rows_divisible(data.shape[0], num_shards)
         self.data = data
         self.num_shards = int(num_shards)
 
@@ -202,9 +191,7 @@ class MLNumericTable:
         stacked = self._per_shard(block_fn, *broadcast_args)  # (shards, r, c)
         flat = stacked.reshape((-1, stacked.shape[-1]))
         if self.mesh is not None:
-            sharding = NamedSharding(self.mesh, P(self.data_axes, None))
-            flat = jax.lax.with_sharding_constraint(flat, sharding) if _is_traced(flat) \
-                else jax.device_put(flat, sharding)
+            flat = pt.place_rows(flat, self.mesh, self.data_axes)
         return MLNumericTable(flat, num_shards=self.num_shards, mesh=self.mesh,
                               data_axes=self.data_axes or None)
 
@@ -215,31 +202,15 @@ class MLNumericTable:
     # ------------------------------------------------------------------ #
     def _per_shard(self, block_fn: Callable, *broadcast_args: Any) -> jnp.ndarray:
         """Run ``block_fn`` on every partition; return stacked results
-        (num_shards, ...).  Uses shard_map when a mesh is attached, a
-        partition loop otherwise."""
-        if self.mesh is not None:
-            axes = self.data_axes
+        (num_shards, ...).  Execution is delegated to the shared
+        :class:`repro.core.runner.DistributedRunner` engine (shard_map when
+        a mesh is attached, a partition loop otherwise)."""
+        from repro.core.runner import DistributedRunner
 
-            def spmd(block: jnp.ndarray, *args: Any) -> jnp.ndarray:
-                return block_fn(block, *args)[None]  # leading shard dim
-
-            mapped = jax.shard_map(
-                spmd,
-                mesh=self.mesh,
-                in_specs=(P(axes, None),) + tuple(P() for _ in broadcast_args),
-                out_specs=P(axes),
-                check_vma=False,
-            )
-            return mapped(self.data, *broadcast_args)
-        blocks = jnp.split(self.data, self.num_shards, axis=0)
-        outs = [block_fn(b, *broadcast_args) for b in blocks]
-        return jnp.stack(outs, axis=0)
+        runner = DistributedRunner.for_table(self)
+        return runner.partition_apply(self.data, block_fn, broadcast_args)
 
     def __repr__(self) -> str:  # pragma: no cover
         where = f"mesh{tuple(self.mesh.shape.items())}" if self.mesh is not None else "local"
         return (f"MLNumericTable(rows={self.num_rows}, cols={self.num_cols}, "
                 f"shards={self.num_shards}, {where})")
-
-
-def _is_traced(x) -> bool:
-    return isinstance(x, jax.core.Tracer)

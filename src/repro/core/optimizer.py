@@ -17,22 +17,24 @@ We provide:
     "matrix/vector multiplication in the case of mini-batch SGD").
 
 All three run the same code path on one CPU device (emulated partitions) and
-on a pod mesh (shard_map over the data axes).
+on a pod mesh (shard_map over the data axes): iteration, partitioning, and
+the collective schedule are owned by
+:class:`repro.core.runner.DistributedRunner` — the optimizers only supply
+the partition-local step (see docs/architecture.md).
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
-from functools import partial
 from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import CollectiveSchedule, combine_mean, combine_sum
+from repro.core.collectives import CollectiveSchedule
 from repro.core.local_matrix import LocalMatrix
 from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
 
 __all__ = [
     "Optimizer",
@@ -83,54 +85,15 @@ def _spmd_rounds(
     local_round: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray],
     schedule: CollectiveSchedule,
     combine: str = "mean",
+    update=None,
 ) -> jnp.ndarray:
     """Run ``num_rounds`` of: local_round(block, weights, round) per partition
     → global combine → next round.  This is the paper's main SGD loop
-    (Fig. A4 middle), with the combine schedule factored out."""
-    comb = combine_mean if combine == "mean" else combine_sum
-
-    if data.mesh is not None:
-        axes = data.data_axes
-
-        def round_body(w, r):
-            def spmd(block, w):
-                lw = local_round(block, w, r)
-                return comb(lw, axes, schedule)
-
-            w = jax.shard_map(
-                spmd,
-                mesh=data.mesh,
-                in_specs=(P(axes, None), P()),
-                out_specs=P(),
-                check_vma=False,
-            )(data.data, w)
-            return w, None
-
-        @jax.jit
-        def run(w0):
-            w, _ = jax.lax.scan(round_body, w0, jnp.arange(num_rounds))
-            return w
-
-        return run(w_init)
-
-    # emulated partitions: same semantics, one device
-    num_shards = data.num_shards
-
-    @jax.jit
-    def run(w0, table):
-        blocks = jnp.stack(jnp.split(table, num_shards, axis=0))
-
-        def round_body(w, r):
-            lws = jax.vmap(lambda b: local_round(b, w, r))(blocks)
-            red = jnp.mean(lws, axis=0)
-            if combine == "sum":
-                red = red * num_shards
-            return red, None
-
-        w, _ = jax.lax.scan(round_body, w0, jnp.arange(num_rounds))
-        return w
-
-    return run(w_init, data.data)
+    (Fig. A4 middle); iteration, partitioning, and the combine schedule all
+    live in the shared :class:`DistributedRunner`."""
+    runner = DistributedRunner.for_table(data, schedule=schedule)
+    return runner.run_rounds(data, w_init, local_round, num_rounds,
+                             combine=combine, update=update)
 
 
 # --------------------------------------------------------------------------- #
@@ -222,59 +185,20 @@ class GradientDescent(Optimizer):
     def apply(self, data: MLNumericTable, params=None) -> jnp.ndarray:
         p = params or self.params
         schedule = CollectiveSchedule.parse(p.schedule)
-        n = data.num_rows
 
         # The weight update needs the *summed* gradient, so the per-round
         # combine is a global sum and the update happens after the combine.
         def local_grad(block: jnp.ndarray, w: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
             return jnp.sum(jax.vmap(p.grad, in_axes=(0, None))(block, w), axis=0)
 
-        w = p.w_init
-        num_rounds = p.max_iter
-
-        if data.mesh is not None:
-            axes = data.data_axes
-
-            def body(w, r):
-                def spmd(block, w):
-                    g = local_grad(block, w, r)
-                    return combine_sum(g, axes, schedule)
-
-                g = jax.shard_map(
-                    spmd, mesh=data.mesh,
-                    in_specs=(P(axes, None), P()), out_specs=P(),
-                    check_vma=False,
-                )(data.data, w)
-                w = w - p.learning_rate * g
-                if p.prox is not None:
-                    w = p.prox(w, p.learning_rate)
-                return w, None
-
-            @jax.jit
-            def run(w0):
-                w, _ = jax.lax.scan(body, w0, jnp.arange(num_rounds))
-                return w
-
-            return run(w)
-
-        num_shards = data.num_shards
-
-        @jax.jit
-        def run(w0, table):
-            blocks = jnp.stack(jnp.split(table, num_shards, axis=0))
-
-            def body(w, r):
-                gs = jax.vmap(lambda b: local_grad(b, w, r))(blocks)
-                g = jnp.sum(gs, axis=0)
-                w = w - p.learning_rate * g
-                if p.prox is not None:
-                    w = p.prox(w, p.learning_rate)
-                return w, None
-
-            w, _ = jax.lax.scan(body, w0, jnp.arange(num_rounds))
+        def update(w, g, r):
+            w = w - p.learning_rate * g
+            if p.prox is not None:
+                w = p.prox(w, p.learning_rate)
             return w
 
-        return run(w, data.data)
+        return _spmd_rounds(data, p.w_init, p.max_iter, local_grad, schedule,
+                            "sum", update=update)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,103 @@
+"""Row partitioning of numeric data across a named mesh axis (paper §III-A).
+
+The MLI paper's tables are *row-partitioned* collections: every algorithm
+sees its partition as a local matrix and all global combination is explicit.
+This module is the single place that knows how a (rows, features) array maps
+onto partitions — both on a real device mesh (``NamedSharding`` over the
+data axes) and in emulated mode (logical blocks on one device).
+
+Used by :class:`repro.core.numeric_table.MLNumericTable` for placement and by
+:class:`repro.core.runner.DistributedRunner` for execution, so the two layers
+can never disagree about the partition layout.
+
+See ``docs/architecture.md`` for where partitioning sits in the data flow.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "infer_data_axes",
+    "data_spec",
+    "num_data_shards",
+    "check_rows_divisible",
+    "pad_rows",
+    "partition_rows",
+    "unpartition_rows",
+    "place_rows",
+]
+
+#: Mesh axes that carry the paper's partition dimension, outermost first.
+#: "pod" is the cross-pod data-parallel axis; "data" the in-pod one.
+DATA_AXIS_CANDIDATES: Tuple[str, ...] = ("pod", "data")
+
+
+def infer_data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The subset of ``mesh`` axes that carry data partitions, in the order
+    rows are laid out (pod-major, then data)."""
+    return tuple(a for a in DATA_AXIS_CANDIDATES if a in mesh.axis_names)
+
+
+def data_spec(data_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec for a row-partitioned 2-D array: rows over the data
+    axes, features replicated."""
+    return P(data_axes, None)
+
+
+def num_data_shards(mesh: Mesh, data_axes: Tuple[str, ...]) -> int:
+    """Number of row partitions the mesh induces (product of data-axis sizes)."""
+    return int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+
+
+def check_rows_divisible(num_rows: int, num_shards: int, *, what: str = "partitions") -> None:
+    """Raise if ``num_rows`` does not split evenly — MLI partitions are
+    equal-sized by construction (pad first; see :func:`pad_rows`)."""
+    if num_rows % num_shards != 0:
+        raise ValueError(
+            f"row count {num_rows} must divide evenly over {num_shards} {what} "
+            f"(pad first)"
+        )
+
+
+def pad_rows(array: jnp.ndarray, num_shards: int) -> Tuple[jnp.ndarray, int]:
+    """Zero-pad ``array`` rows up to a multiple of ``num_shards``.
+
+    Returns ``(padded, n_pad)``; ``n_pad`` rows of zeros were appended.
+    ``unpartition_rows(partition_rows(padded, s))[: rows]`` recovers the
+    original — the round-trip property the tests pin down.
+    """
+    n = array.shape[0]
+    n_pad = (-n) % num_shards
+    if n_pad:
+        pad = jnp.zeros((n_pad,) + array.shape[1:], array.dtype)
+        array = jnp.concatenate([array, pad], axis=0)
+    return array, n_pad
+
+
+def partition_rows(array: jnp.ndarray, num_shards: int) -> jnp.ndarray:
+    """Reshape (rows, ...) into (num_shards, rows/num_shards, ...) logical
+    partition blocks.  Pure layout — works under jit; rows must divide."""
+    check_rows_divisible(array.shape[0], num_shards)
+    return array.reshape((num_shards, array.shape[0] // num_shards) + array.shape[1:])
+
+
+def unpartition_rows(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`partition_rows`: (shards, rows, ...) -> (shards·rows, ...)."""
+    return blocks.reshape((-1,) + blocks.shape[2:])
+
+
+def place_rows(array: jnp.ndarray, mesh: Mesh, data_axes: Tuple[str, ...]) -> jnp.ndarray:
+    """Put ``array`` on the mesh row-sharded over the data axes.
+
+    Outside a trace this is a real ``device_put``; inside jit it becomes a
+    sharding constraint so tables can be (re)built inside compiled code.
+    """
+    sharding = NamedSharding(mesh, data_spec(data_axes))
+    if isinstance(array, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(array, sharding)
+    return jax.device_put(array, sharding)

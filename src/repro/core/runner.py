@@ -1,0 +1,251 @@
+"""DistributedRunner — the shared execution layer for every MLI algorithm.
+
+The paper's claim (§III, §IV) is that one uniform contract —
+``Algorithm.train(data, params) -> Model`` over a row-partitioned table —
+expresses many distributed ML algorithms.  The seed code had the contract
+but each algorithm wired its own ``shard_map`` loop.  This module is the
+single place that owns distributed execution:
+
+  * **mesh + partition layout** — delegated to :mod:`repro.core.partition`,
+    shared with :class:`repro.core.numeric_table.MLNumericTable` so table
+    placement and execution can never disagree;
+  * **per-round combine** — :mod:`repro.core.collectives` with
+    :class:`CollectiveSchedule` as a pluggable parameter, so the paper's
+    §IV-A schedule comparison is a knob every algorithm exposes;
+  * **iteration** — one jitted ``lax.scan`` over rounds with the carry
+    donated on accelerators, so per-round parameter buffers are reused
+    instead of reallocated.
+
+Algorithms express their per-partition compute as *pure local functions*
+``f(block, state, round) -> partial`` (or ``f(block, *broadcast) ->
+partial`` for one-shot passes) and delegate everything else here:
+
+    runner = DistributedRunner.for_table(table, schedule=params.schedule)
+    final = runner.run_rounds(table, init, local_step, num_rounds,
+                              combine="mean")
+
+Both execution modes of the table are supported transparently: **mesh mode**
+(shard_map over the data axes; collectives lower to real HLO) and
+**emulated mode** (logical partitions on one device; the combine is the
+algebraically-equal local reduction).  See ``docs/architecture.md`` for the
+data-flow diagram and ``docs/api.md`` for the full surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import partition as pt
+from repro.core.compat import shard_map
+from repro.core.collectives import (
+    CollectiveSchedule,
+    combine_concat,
+    combine_mean,
+    combine_sum,
+)
+
+__all__ = ["DistributedRunner"]
+
+# local_step(block, state, round_index) -> per-partition partial result
+LocalStep = Callable[[jnp.ndarray, Any, jnp.ndarray], Any]
+# update(state, combined, round_index) -> next state (defaults to `combined`)
+UpdateFn = Callable[[Any, Any, jnp.ndarray], Any]
+
+_COMBINERS = {
+    "mean": combine_mean,
+    "sum": combine_sum,
+    "concat": combine_concat,
+}
+
+
+def _emulated_combine(stacked: Any, combine: str) -> Any:
+    """Combine a (shards, ...) stacked tree without a mesh — the
+    algebraically-equal local form of each collective."""
+    if combine == "mean":
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+    if combine == "sum":
+        return jax.tree.map(lambda x: jnp.sum(x, axis=0), stacked)
+    if combine == "concat":
+        return jax.tree.map(pt.unpartition_rows, stacked)
+    raise ValueError(f"unknown combine {combine!r}")
+
+
+@dataclasses.dataclass
+class DistributedRunner:
+    """Owns mesh construction, data partitioning, and the per-round combine.
+
+    Parameters
+    ----------
+    mesh:
+        Device mesh, or ``None`` for emulated partitions on one device.
+    num_shards:
+        Partition count in emulated mode (ignored when a mesh is given —
+        then it is derived from the data-axis sizes).
+    data_axes:
+        Mesh axes carrying the row partitions; inferred from the mesh when
+        omitted (``("pod", "data")`` subset, outermost first).
+    schedule:
+        The :class:`CollectiveSchedule` used for every global combine.
+    donate:
+        Donate the carry buffers of the round loop to the jitted scan so
+        parameter memory is reused across rounds.  ``None`` (default) turns
+        donation on exactly when the backend supports it (not CPU, where XLA
+        would warn and ignore it).
+    """
+
+    mesh: Optional[Mesh] = None
+    num_shards: int = 1
+    data_axes: Optional[Tuple[str, ...]] = None
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+    donate: Optional[bool] = None
+
+    def __post_init__(self) -> None:
+        self.schedule = CollectiveSchedule.parse(self.schedule)
+        if self.mesh is not None:
+            if self.data_axes is None:
+                self.data_axes = pt.infer_data_axes(self.mesh)
+            self.num_shards = pt.num_data_shards(self.mesh, self.data_axes)
+        else:
+            self.data_axes = ()
+        if self.donate is None:
+            self.donate = jax.default_backend() != "cpu"
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def for_table(cls, table: Any,
+                  schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE,
+                  donate: Optional[bool] = None) -> "DistributedRunner":
+        """Build a runner matching a table's mesh / partition layout.
+
+        Accepts anything with ``mesh``, ``num_shards`` and (when meshed)
+        ``data_axes`` attributes — i.e. an :class:`MLNumericTable`."""
+        return cls(mesh=table.mesh, num_shards=table.num_shards,
+                   data_axes=getattr(table, "data_axes", None) or None,
+                   schedule=schedule, donate=donate)
+
+    # ------------------------------------------------------------------ #
+    # primitive: one pass over partitions (trace-safe)
+    # ------------------------------------------------------------------ #
+    def partition_apply(self, data: jnp.ndarray, fn: Callable,
+                        broadcast: Sequence[Any] = (),
+                        combine: Optional[str] = None) -> Any:
+        """Run ``fn(block, *broadcast)`` on every partition of ``data``.
+
+        ``combine=None`` returns the stacked per-partition results with a
+        leading ``(num_shards, ...)`` axis; ``"mean" | "sum" | "concat"``
+        combines them across partitions with the configured schedule.
+        Callable inside ``jax.jit`` — algorithms with bespoke outer loops
+        (ALS) build on this directly.
+        """
+        broadcast = tuple(broadcast)
+        if self.mesh is not None:
+            axes = self.data_axes
+
+            def spmd(block: jnp.ndarray, *args: Any) -> Any:
+                out = fn(block, *args)
+                if combine is None:
+                    return jax.tree.map(lambda x: x[None], out)
+                return _COMBINERS[combine](out, axes, self.schedule)
+
+            mapped = shard_map(
+                spmd,
+                mesh=self.mesh,
+                in_specs=(pt.data_spec(axes),) + tuple(P() for _ in broadcast),
+                out_specs=P(axes) if combine is None else P(),
+            )
+            return mapped(data, *broadcast)
+
+        blocks = pt.partition_rows(data, self.num_shards)
+        outs = [fn(blocks[i], *broadcast) for i in range(self.num_shards)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *outs)
+        if combine is None:
+            return stacked
+        return _emulated_combine(stacked, combine)
+
+    # ------------------------------------------------------------------ #
+    # one-shot sufficient-statistics pass
+    # ------------------------------------------------------------------ #
+    def run_once(self, table: Any, local_fn: Callable, *broadcast: Any,
+                 combine: str = "sum") -> Any:
+        """One combined pass: ``local_fn(block, *broadcast)`` per partition,
+        then one global combine.  The pattern of the closed-form algorithms
+        (PCA moments, naive Bayes counts)."""
+        return self.partition_apply(table.data, local_fn, broadcast, combine)
+
+    # ------------------------------------------------------------------ #
+    # the paper's iterate-and-combine loop
+    # ------------------------------------------------------------------ #
+    def run_rounds(self, table: Any, init_state: Any, local_step: LocalStep,
+                   num_rounds: int, *, combine: str = "mean",
+                   update: Optional[UpdateFn] = None) -> Any:
+        """Run ``num_rounds`` of: per-partition ``local_step(block, state,
+        r)`` → global combine (configured schedule) → ``update(state,
+        combined, r)``.
+
+        This is the paper's main loop (Fig. A4 middle: localSGD +
+        avgWeights) generalized: parameter-averaging methods pass
+        ``combine="mean"`` and no ``update``; sufficient-statistics methods
+        (k-means) pass ``combine="sum"`` and an ``update`` that rebuilds the
+        state.  The whole loop compiles to one jitted ``lax.scan``; the
+        state carry is donated when the backend supports it.
+        """
+        upd: UpdateFn = update or (lambda state, combined, r: combined)
+        rounds = jnp.arange(num_rounds)
+        donate_argnums = (0,) if self.donate else ()
+        if self.donate:
+            # donate a private copy, never the caller's buffer: init_state is
+            # typically a params field (w_init) the caller may reuse
+            init_state = jax.tree.map(jnp.copy, init_state)
+
+        if self.mesh is not None:
+            axes = self.data_axes
+            data = table.data
+
+            def round_body(state, r):
+                def spmd(block, state):
+                    part = local_step(block, state, r)
+                    return _COMBINERS[combine](part, axes, self.schedule)
+
+                combined = shard_map(
+                    spmd,
+                    mesh=self.mesh,
+                    in_specs=(pt.data_spec(axes), P()),
+                    out_specs=P(),
+                )(data, state)
+                return upd(state, combined, r), None
+
+            @partial(jax.jit, donate_argnums=donate_argnums)
+            def run(state0):
+                final, _ = jax.lax.scan(round_body, state0, rounds)
+                return final
+
+            return run(init_state)
+
+        num_shards = self.num_shards
+
+        @partial(jax.jit, donate_argnums=donate_argnums)
+        def run(state0, data):
+            blocks = pt.partition_rows(data, num_shards)
+
+            def round_body(state, r):
+                parts = jax.vmap(lambda b: local_step(b, state, r))(blocks)
+                combined = _emulated_combine(parts, combine)
+                return upd(state, combined, r), None
+
+            final, _ = jax.lax.scan(round_body, state0, rounds)
+            return final
+
+        return run(init_state, table.data)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        where = (f"mesh{tuple(self.mesh.shape.items())}" if self.mesh is not None
+                 else f"emulated[{self.num_shards}]")
+        return (f"DistributedRunner({where}, schedule={self.schedule.value}, "
+                f"donate={self.donate})")

@@ -428,8 +428,8 @@ def main() -> None:
     if args.mesh_shape:
         shp = tuple(int(x) for x in args.mesh_shape.split("x"))
         names = ("pod", "data", "model")[-len(shp):]
-        override_mesh = jax.make_mesh(
-            shp, names, axis_types=(jax.sharding.AxisType.Auto,) * len(shp))
+        from repro.core.compat import make_mesh
+        override_mesh = make_mesh(shp, names)
     from repro.sharding.rules import SERVE_RULES
     rules = SERVE_RULES if args.serve_rules else DEFAULT_RULES
     for arch, shape in pairs:

@@ -16,17 +16,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_host_mesh"]
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_serving_mesh(*, multi_pod: bool = False,
@@ -39,9 +37,8 @@ def make_serving_mesh(*, multi_pod: bool = False,
     {1, 2, 8, 12, 40 → replicated})."""
     data = (512 if multi_pod else 256) // model
     if multi_pod:
-        return jax.make_mesh((2, data // 2, model), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+        return make_mesh((2, data // 2, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def serving_setup(cfg, *, multi_pod: bool = False):
@@ -64,5 +61,4 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (host) devices exist — used by tests and
     the CPU examples; same axis names as production so all sharding rules
     apply unchanged."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))

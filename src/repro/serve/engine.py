@@ -1,11 +1,17 @@
 """Batched serving engine: static-batch continuous decode over a request
-queue (the serving-side analogue of the paper's 'Model makes predictions'
-contract, scaled to a request stream).
+queue (the serving-side analogue of the paper §III-C 'Model makes
+predictions' contract, scaled from one ``predict`` call to a request
+stream).
 
 This engine is deliberately simple but real: it admits requests into fixed
 batch slots, prefills per request, then steps all active slots together with
 one fused decode step per token, retiring slots on EOS/max-tokens.  Slot
 admission is host-side; all device work is two jitted functions.
+
+See ``docs/architecture.md`` for where serving sits next to the training
+stack and ``docs/benchmarks.md`` for the serving-mesh measurements; the
+mesh/rules selection the engine runs under is
+:func:`repro.launch.mesh.serving_setup`.
 """
 from __future__ import annotations
 
@@ -24,6 +30,15 @@ __all__ = ["Request", "ServeEngine"]
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: a prompt plus decode limits.
+
+    The streaming unit of the paper's Model contract (§III-C): where the
+    paper's ``Model.predict`` maps one feature vector to one prediction,
+    serving maps one ``Request`` to a token stream.  ``out_tokens`` is
+    filled in place by the engine; ``done`` flips when the request retires
+    (EOS or ``max_new_tokens``).
+    """
+
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
@@ -32,6 +47,16 @@ class Request:
 
 
 class ServeEngine:
+    """Fixed-slot batched decode engine over a request list.
+
+    Two jitted device functions (prefill, decode-step) plus host-side slot
+    management.  Requests with equal prompt lengths are decoded together
+    through one fused step per token; greedy outputs are identical to the
+    slot-at-a-time path (asserted in ``tests/test_serve.py``).  See
+    ``docs/architecture.md`` (serving section) for how this relates to the
+    training-side DistributedRunner.
+    """
+
     def __init__(self, cfg: ArchConfig, params, batch_size: int, max_seq: int,
                  greedy: bool = True):
         self.cfg = cfg
@@ -48,6 +73,8 @@ class ServeEngine:
         self.greedy = greedy
 
     def _run_one(self, req: Request) -> Request:
+        """Slot-at-a-time fallback: prefill one request, then greedy-decode
+        token by token with a batch-1 cache."""
         S = len(req.prompt)
         cache = self.model.init_cache(1, self.max_seq)
         logits, cache = self._prefill(self.params, jnp.asarray(req.prompt)[None, :], cache)

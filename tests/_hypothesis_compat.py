@@ -1,0 +1,121 @@
+"""Property-testing front end: real hypothesis when installed, a small
+deterministic fallback otherwise.
+
+The test-suite's property tests (`@settings + @given` over integer / float /
+list / sampled_from strategies) use hypothesis when the ``dev`` extra is
+installed (``pip install -e .[dev]`` — what CI does).  On minimal
+environments without hypothesis the fallback below runs each property with a
+fixed number of deterministically-sampled examples, so the suite always
+collects and the properties are still exercised — just without shrinking or
+the full search heuristics.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    import inspect
+    import random
+
+    _MAX_FALLBACK_EXAMPLES = 10  # cap: no shrinking, so keep runtime bounded
+
+    class _Strategy:
+        """A draw function + repr; mirrors the tiny slice of the hypothesis
+        strategy API the tests use."""
+
+        def __init__(self, draw, name):
+            self._draw = draw
+            self._name = name
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self._name
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=2**16):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             f"integers({min_value}, {max_value})")
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             f"floats({min_value}, {max_value})")
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements),
+                             f"sampled_from({elements!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(size)]
+
+            return _Strategy(draw, f"lists({elements!r})")
+
+    st = _St()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        """Record the example budget on the decorated test."""
+
+        def decorate(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = min(max_examples,
+                                              _MAX_FALLBACK_EXAMPLES)
+            return fn
+
+        return decorate
+
+    def given(*st_args, **st_kwargs):
+        """Run the test once per deterministically-drawn example.
+
+        Mirrors hypothesis's argument mapping: keyword strategies bind by
+        name; positional strategies bind to the test's rightmost parameters
+        (so methods keep ``self``).  The wrapper exposes only the unbound
+        leading parameters to pytest (e.g. ``self`` or fixtures).
+        """
+
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters)
+            kw_bound = set(st_kwargs)
+            pos_candidates = [p for p in params if p not in kw_bound]
+            pos_bound = pos_candidates[len(pos_candidates) - len(st_args):]
+            passthrough = [p for p in params
+                           if p not in kw_bound and p not in pos_bound]
+
+            def wrapper(*call_args, **call_kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _MAX_FALLBACK_EXAMPLES)
+                rng = random.Random(fn.__name__)
+                for _ in range(n):
+                    # bind drawn values by NAME: pytest passes fixtures as
+                    # keywords, so positional insertion would shift onto the
+                    # fixture parameters
+                    drawn = {name: s.example(rng)
+                             for name, s in zip(pos_bound, st_args)}
+                    drawn.update((k, s.example(rng))
+                                 for k, s in st_kwargs.items())
+                    fn(*call_args, **call_kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__signature__ = inspect.Signature(
+                [sig.parameters[p] for p in passthrough])
+            if hasattr(fn, "_compat_max_examples"):
+                wrapper._compat_max_examples = fn._compat_max_examples
+            return wrapper
+
+        return decorate

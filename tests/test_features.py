@@ -2,7 +2,7 @@
 vectorizer (the streaming companion of the Fig. A2 path)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mltable import MLTable
 from repro.core.numeric_table import MLNumericTable

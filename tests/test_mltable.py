@@ -2,7 +2,7 @@
 text featurization (Fig. A2 pipeline front half)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mltable import MLTable
 from repro.core.schema import EMPTY, ColumnType, MLRow, Schema

@@ -1,0 +1,224 @@
+"""DistributedRunner: the shared execution layer (docs/architecture.md).
+
+Covers the paper's §IV-A schedule-equivalence claim end to end: all three
+CollectiveSchedules must produce identical models (to fp tolerance) for
+logistic regression and k-means on a real multi-device CPU mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``), plus the
+partition-layer round-trip property and the runner's emulated-mode
+semantics."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import partition as pt
+from repro.core.collectives import CollectiveSchedule
+from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# --------------------------------------------------------------------------- #
+# schedule agreement on a real 8-device mesh (paper §IV-A)
+# --------------------------------------------------------------------------- #
+_MESH_AGREEMENT_PROGRAM = """
+import json
+import numpy as np
+import jax
+
+from repro.core.compat import make_mesh
+from repro.core import MLNumericTable, CollectiveSchedule, DistributedRunner
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm, LogisticRegressionParameters)
+from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+from repro.core.algorithms.als import (ALSParameters, BroadcastALS,
+                                       pack_csr_table)
+from repro.data import synth_classification, synth_netflix_tiled
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = make_mesh((8,), ("data",))
+
+X, y, _ = synth_classification(512, 16, seed=0)
+data = np.concatenate([y[:, None], X], 1).astype(np.float32)
+table = MLNumericTable.from_numpy(data, mesh=mesh)
+tX = MLNumericTable.from_numpy(X.astype(np.float32), mesh=mesh)
+
+drift = {}
+logreg, kmeans = {}, {}
+for sched in CollectiveSchedule:
+    p = LogisticRegressionParameters(learning_rate=0.5, max_iter=5,
+                                     local_batch_size=16, schedule=sched)
+    logreg[sched] = np.asarray(LogisticRegressionAlgorithm.train(table, p).weights)
+    kp = KMeansParameters(k=4, max_iter=5, seed=0, schedule=sched)
+    kmeans[sched] = np.asarray(KMeans.train(tX, kp).centroids)
+
+# mesh-mode combine="concat": directly (identity map must reassemble the
+# table on every schedule) and through ALS (whose factor broadcast rides it)
+M = synth_netflix_tiled(users=64, items=48, rank=4, tiles=1, density=0.2)
+r, c = np.nonzero(M)
+v = M[r, c]
+als = {}
+for sched in CollectiveSchedule:
+    runner = DistributedRunner.for_table(tX, schedule=sched)
+    got = runner.partition_apply(tX.data, lambda b: b * 1.0, combine="concat")
+    drift["concat_" + sched.value] = float(
+        np.abs(np.asarray(got) - X.astype(np.float32)).max())
+    d = pack_csr_table(r, c, v, M.shape[0], 32, mesh=mesh)
+    dT = pack_csr_table(c, r, v, M.shape[1], 32, mesh=mesh)
+    ap = ALSParameters(rank=4, lam=0.05, max_iter=3, seed=0, schedule=sched)
+    als[sched] = np.asarray(BroadcastALS.train(d, ap, data_transposed=dT).U)
+
+ref_w = logreg[CollectiveSchedule.ALLREDUCE]
+ref_c = kmeans[CollectiveSchedule.ALLREDUCE]
+ref_u = als[CollectiveSchedule.ALLREDUCE]
+for sched in CollectiveSchedule:
+    drift["logreg_" + sched.value] = float(np.abs(logreg[sched] - ref_w).max())
+    drift["kmeans_" + sched.value] = float(np.abs(kmeans[sched] - ref_c).max())
+    drift["als_" + sched.value] = float(np.abs(als[sched] - ref_u).max())
+print("RESULT::" + json.dumps(drift))
+"""
+
+
+def test_schedules_agree_on_8_device_mesh():
+    """All three schedules must train identical logreg, kmeans, and ALS
+    models on an 8-way data-parallel mesh — the runner makes the schedule a
+    pure wire-pattern knob — and mesh-mode combine="concat" must reassemble
+    partitioned rows exactly under every schedule."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", _MESH_AGREEMENT_PROGRAM],
+                         capture_output=True, text=True, env=env,
+                         timeout=540, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT::")][-1]
+    drift = json.loads(line[len("RESULT::"):])
+    for key, d in drift.items():
+        assert d < 1e-5, f"{key}: schedules disagree by {d}"
+
+
+# --------------------------------------------------------------------------- #
+# emulated-mode semantics (always run, one device)
+# --------------------------------------------------------------------------- #
+class TestRunOnce:
+    def test_sum_matches_numpy(self, rng):
+        X = np.asarray(rng.normal(size=(32, 5)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        runner = DistributedRunner.for_table(t)
+        got = runner.run_once(t, lambda b: jnp.sum(b, axis=0), combine="sum")
+        np.testing.assert_allclose(np.asarray(got), X.sum(0), rtol=1e-5)
+
+    def test_mean_matches_numpy(self, rng):
+        X = np.asarray(rng.normal(size=(32, 5)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        runner = DistributedRunner.for_table(t)
+        got = runner.run_once(t, lambda b: jnp.mean(b, axis=0), combine="mean")
+        np.testing.assert_allclose(np.asarray(got), X.mean(0), rtol=1e-5)
+
+
+class TestPartitionApply:
+    def test_concat_is_identity_for_identity_fn(self, rng):
+        X = np.asarray(rng.normal(size=(24, 3)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        runner = DistributedRunner.for_table(t)
+        got = runner.partition_apply(t.data, lambda b: b * 1.0, combine="concat")
+        np.testing.assert_allclose(np.asarray(got), X, rtol=1e-6)
+
+    def test_stacked_shape(self, rng):
+        X = np.asarray(rng.normal(size=(24, 3)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        runner = DistributedRunner.for_table(t)
+        stacked = runner.partition_apply(t.data, lambda b: jnp.sum(b, 0)[None])
+        assert stacked.shape == (4, 1, 3)
+
+    def test_broadcast_args(self, rng):
+        X = np.asarray(rng.normal(size=(16, 4)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=2)
+        runner = DistributedRunner.for_table(t)
+        w = jnp.ones((4,), jnp.float32)
+        got = runner.partition_apply(t.data, lambda b, ww: b @ ww,
+                                     broadcast=(w,), combine="concat")
+        np.testing.assert_allclose(np.asarray(got), X.sum(1), rtol=1e-5)
+
+
+class TestRunRounds:
+    def test_full_batch_gd_matches_closed_loop(self, rng):
+        """sum-combined gradient rounds == the same loop written by hand."""
+        X = np.asarray(rng.normal(size=(32, 3)), np.float32)
+        w_true = np.asarray(rng.normal(size=3), np.float32)
+        y = X @ w_true
+        data = np.concatenate([y[:, None], X], 1).astype(np.float32)
+        t = MLNumericTable.from_numpy(data, num_shards=4)
+        runner = DistributedRunner.for_table(t)
+        lr = 0.01
+
+        def local_grad(block, w, r):
+            x, yy = block[:, 1:], block[:, 0]
+            return jnp.sum(x * (x @ w - yy)[:, None], axis=0)
+
+        got = runner.run_rounds(
+            t, jnp.zeros(3, jnp.float32), local_grad, 20, combine="sum",
+            update=lambda w, g, r: w - lr * g)
+
+        w = np.zeros(3, np.float32)
+        for _ in range(20):
+            w = w - lr * (X.T @ (X @ w - y))
+        np.testing.assert_allclose(np.asarray(got), w, rtol=1e-4, atol=1e-5)
+
+    def test_shard_invariance(self, rng):
+        """mean-combined rounds over equal partitions must not depend on the
+        partition count when every partition computes the same statistic."""
+        X = np.asarray(rng.normal(size=(32, 3)), np.float32)
+        outs = []
+        for shards in (1, 2, 8):
+            t = MLNumericTable.from_numpy(X, num_shards=shards)
+            runner = DistributedRunner.for_table(t)
+            out = runner.run_rounds(
+                t, jnp.zeros(3, jnp.float32),
+                lambda b, s, r: s + jnp.mean(b, axis=0), 3, combine="mean")
+            outs.append(np.asarray(out))
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+    def test_schedule_knob_accepts_strings(self, rng):
+        X = np.asarray(rng.normal(size=(16, 2)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        for sched in ("allreduce", "gather_broadcast", "reduce_scatter"):
+            runner = DistributedRunner.for_table(t, schedule=sched)
+            assert runner.schedule is CollectiveSchedule.parse(sched)
+
+
+# --------------------------------------------------------------------------- #
+# partition layer round-trip (property)
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 64), cols=st.integers(1, 8),
+       shards=st.sampled_from([1, 2, 3, 4, 8]), seed=st.integers(0, 2**16))
+def test_partition_roundtrip_property(rows, cols, shards, seed):
+    """pad → partition → unpartition → trim recovers any array exactly."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    padded, n_pad = pt.pad_rows(X, shards)
+    assert padded.shape[0] % shards == 0
+    assert n_pad == (-rows) % shards
+    blocks = pt.partition_rows(padded, shards)
+    assert blocks.shape == (shards, padded.shape[0] // shards, cols)
+    back = pt.unpartition_rows(blocks)[:rows]
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(X))
+
+
+def test_partition_rejects_indivisible():
+    with pytest.raises(ValueError):
+        pt.partition_rows(jnp.zeros((10, 2)), 3)
+
+
+def test_runner_matches_table_layout(rng):
+    X = np.asarray(rng.normal(size=(16, 2)), np.float32)
+    t = MLNumericTable.from_numpy(X, num_shards=4)
+    runner = DistributedRunner.for_table(t)
+    assert runner.mesh is None and runner.num_shards == 4
