@@ -1,0 +1,104 @@
+"""Resident rounds vs streaming epochs through the shared DistributedRunner
+(see docs/benchmarks.md).
+
+Both modes run the same partition-local SGD workload over the same number
+of rows on a real multi-device mesh (subprocess, since the device count
+must be fixed before jax initializes):
+
+  * **resident** — the paper's §IV loop: the whole table lives on the
+    mesh, ``run_rounds`` scans full-table rounds inside one jit.
+  * **streaming** — ``run_epochs``: each epoch's window crosses the
+    host→device boundary (``shard_batch`` placement) and is scanned in
+    chunks; this is the mode that scales past device memory and pairs with
+    checkpoint/resume.
+
+The delta between the two rows is the streaming tax: host batch
+generation + device placement + one jit dispatch per epoch, amortized
+over the window.  Swept across all three collective schedules so the wire
+pattern and the data motion can be read off independently.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks._util import emit, run_with_devices
+
+DEVICES = 8
+ROWS = 4096          # rows per pass (window size in streaming mode)
+D = 128
+PASSES = 5           # rounds (resident) == epochs (streaming)
+CHUNKS = 4           # streaming minibatch chunks per window
+
+
+def _worker() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks._util import timeit
+    from repro.core.collectives import CollectiveSchedule
+    from repro.core.compat import make_mesh
+    from repro.core.numeric_table import MLNumericTable
+    from repro.core.runner import DistributedRunner
+    from repro.data import BatchIterator, synth_classification
+
+    devices = len(jax.devices())
+    mesh = make_mesh((devices,), ("data",))
+
+    X, y, _ = synth_classification(ROWS, D, seed=0)
+    data = np.concatenate([y[:, None], X], 1).astype(np.float32)
+    table = MLNumericTable.from_numpy(data, mesh=mesh)
+
+    def source(step: int) -> dict:
+        rng = np.random.default_rng(step)
+        Xs = rng.normal(size=(ROWS, D)).astype(np.float32)
+        ys = (Xs @ np.linspace(-1, 1, D) > 0).astype(np.float32)
+        return {"data": np.concatenate([ys[:, None], Xs], 1).astype(np.float32)}
+
+    def grad(vec, w):
+        x = vec[1:]
+        return x * (jax.nn.sigmoid(jnp.dot(x, w)) - vec[0])
+
+    def local_step(block, w, r):
+        g = jnp.mean(jax.vmap(grad, in_axes=(0, None))(block, w), axis=0)
+        return w - 0.3 * g
+
+    total_rows = ROWS * PASSES
+    rows_out = []
+    for sched in CollectiveSchedule:
+        runner = DistributedRunner(mesh=mesh, schedule=sched)
+
+        def resident():
+            return runner.run_rounds(table, jnp.zeros(D, jnp.float32),
+                                     local_step, PASSES, combine="mean")
+
+        def streaming():
+            stream = BatchIterator(source, mesh=mesh)
+            return runner.run_epochs(stream, jnp.zeros(D, jnp.float32),
+                                     local_step, PASSES, combine="mean",
+                                     chunks_per_epoch=CHUNKS)
+
+        for mode, fn in (("resident", resident), ("streaming", streaming)):
+            t = timeit(fn, warmup=1, iters=3)
+            rows_out.append({"mode": mode, "schedule": sched.value,
+                             "seconds": round(t, 4),
+                             "rows_per_sec": int(total_rows / t)})
+    print(json.dumps({"devices": devices, "rows": rows_out}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args()
+    if args._worker:
+        _worker()
+        return
+
+    res = run_with_devices("benchmarks.streaming_throughput", DEVICES, {})
+    emit("streaming_throughput", res["rows"])
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,16 @@ combine — each schedule lowers to different HLO collectives on the mesh —
 and switching it must not change the model, which this script demonstrates
 by training under all three schedules and comparing inertia.
 
+The second half shows the streaming + fault-tolerance path: the same
+k-means trained from per-epoch minibatch windows (data never fully
+resident), checkpointed every epoch, "preempted" half-way, and resumed
+from the snapshot — the resumed model matches the uninterrupted one
+exactly.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import os
+import tempfile
 
 if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -24,8 +31,8 @@ from repro.core.algorithms.kmeans import KMeans, KMeansParameters
 from repro.core.collectives import CollectiveSchedule
 from repro.core.compat import make_mesh
 from repro.core.mltable import MLTable
-from repro.core.runner import DistributedRunner
-from repro.data import synth_text_corpus
+from repro.core.runner import CheckpointPolicy, DistributedRunner
+from repro.data import BatchIterator, synth_text_corpus
 from repro.features.text import n_grams, tf_idf
 
 
@@ -63,6 +70,36 @@ def main() -> None:
     sizes = np.bincount(labels, minlength=4)
     print(f"k-means cluster sizes: {sizes.tolist()}")
     assert sizes.sum() == 64
+
+    # ---- streaming + fault tolerance -----------------------------------
+    # The same clustering fed as per-epoch minibatch windows: the table
+    # never needs to be resident; each epoch the runner pulls one sharded
+    # window and scans its chunks on-device.  A CheckpointPolicy snapshots
+    # (state, epoch, stream step) each epoch, so a killed run resumes
+    # bit-for-bit.
+    X = np.asarray(table.data)
+
+    def window_source(step: int) -> dict:
+        # replay the featurized rows as the stream; a production source
+        # would read shard files keyed by step
+        return {"data": X}
+
+    epochs, half = 6, 3
+    params = KMeansParameters(k=4, max_iter=epochs, seed=0)
+    straight = KMeans.train_stream(BatchIterator(window_source, mesh=mesh),
+                                   params, chunks_per_epoch=2)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        policy = CheckpointPolicy(ckpt_dir, every_epochs=1)
+        # "preemption": the first run only survives to the half-way epoch
+        KMeans.train_stream(BatchIterator(window_source, mesh=mesh), params,
+                            num_epochs=half, chunks_per_epoch=2,
+                            checkpoint=policy)
+        resumed = KMeans.train_stream(BatchIterator(window_source, mesh=mesh),
+                                      params, checkpoint=policy, resume=True)
+    drift = float(np.abs(np.asarray(straight.centroids)
+                         - np.asarray(resumed.centroids)).max())
+    print(f"streaming kill+resume drift vs uninterrupted: {drift:.2e}")
+    assert drift == 0.0, "resume must be bit-for-bit on the same mesh"
     print("quickstart OK")
 
 

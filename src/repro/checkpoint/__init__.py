@@ -1,3 +1,13 @@
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.store import (
+    latest_step,
+    load_metadata,
+    prune_checkpoints,
+    restore_checkpoint,
+    restore_with_metadata,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "restore_with_metadata",
+    "load_metadata", "latest_step", "prune_checkpoints",
+]

@@ -1,13 +1,28 @@
 """Restart-based checkpointing of parameter/optimizer pytrees.
 
 The paper leans on Spark RDD lineage for fault tolerance; a TPU pod has no
-lineage, so the recovery story is checkpoint + restart (DESIGN.md §2).
+lineage, so the recovery story is checkpoint + restart (DESIGN.md §2):
+:class:`repro.core.runner.DistributedRunner` snapshots its training state
+periodically (see ``CheckpointPolicy``) and ``resume`` restarts a killed run
+from the latest snapshot, bit-for-bit on the same mesh.
 
-Format: one ``step_<n>.npz`` per step with flattened key paths, plus a
-``meta.json`` carrying the treedef fingerprint and dtypes.  Arrays are
-gathered to host before writing (fine for the example scale; a production
-variant would write per-shard files — the key-path format already supports
-that extension).
+Format: one ``step_<n>.npz`` per step with flattened key paths.  Each file
+embeds a JSON record under a reserved key carrying
+
+  * the per-leaf dtypes — required because numpy round-trips extension
+    dtypes (``bfloat16``, the float8 family) as raw void arrays; restore
+    reinterprets them back, so dtype preservation is exact;
+  * optional host-side **metadata** (epoch/round counters, the stream
+    position, rng keys) so a resumed run can restart the *whole* loop, not
+    just the parameter values.
+
+Writes are crash-safe: the array payload goes to a ``.tmp`` sibling, is
+fsync'd, then atomically renamed (and the directory entry fsync'd), so a
+kill mid-write can never corrupt the latest visible checkpoint — a
+``latest_step`` scan ignores ``.tmp`` leftovers and any non-checkpoint
+files.  Arrays are gathered to host before writing (fine for the example
+scale; a production variant would write per-shard files — the key-path
+format already supports that extension).
 """
 from __future__ import annotations
 
@@ -20,64 +35,210 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "restore_with_metadata",
+    "load_metadata",
+    "latest_step",
+    "prune_checkpoints",
+]
 
-_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+# anchored on both ends: "step_3.npz.tmp", "xstep_3.npz", "notes.txt" never match
+_STEP_RE = re.compile(r"^step_(\d+)\.npz$")
+#: reserved key inside the npz holding the JSON {dtypes, metadata} record
+_META_KEY = "__checkpoint_meta__"
 
 
-def _flatten(tree: Any) -> Dict[str, jnp.ndarray]:
+def _path_key(path: Tuple[Any, ...]) -> str:
+    """Flatten a tree path to a stable string key: dict keys, sequence
+    indices, and dataclass/attr field names all spell naturally."""
+    def part(p: Any) -> str:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                return str(getattr(p, attr))
+        return str(p)
+    return "/".join(part(p) for p in path)
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = _path_key(path)
+        if key in flat:
+            raise ValueError(
+                f"two leaves flatten to the same key {key!r} (a dict key "
+                f"containing '/'?) — the checkpoint would silently drop one")
         flat[key] = leaf
     return flat
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
-    """Write ``tree`` (any pytree of arrays) at ``step``; returns the path."""
+def _ckpt_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}.npz")
+
+
+def _fsync_dir(dirname: str) -> None:
+    """Persist the directory entry of a just-renamed file (POSIX crash
+    safety: the rename itself is atomic but not durable until the directory
+    is synced)."""
+    fd = os.open(dirname, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[Dict[str, Any]] = None,
+                    keep: Optional[int] = None) -> str:
+    """Write ``tree`` (any pytree of arrays) at ``step``; returns the path.
+
+    ``metadata`` is any JSON-serializable dict of host-side loop state
+    (epoch counters, stream step, rng key) stored inside the same file —
+    one atomic unit, so state and counters can never be torn apart by a
+    crash.  ``keep`` prunes all but the newest ``keep`` checkpoints after a
+    successful publish.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
-    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    path = os.path.join(ckpt_dir, f"step_{step}.npz")
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, **arrays)
-    os.replace(tmp, path)  # atomic publish
-    meta = {"step": step, "keys": sorted(arrays),
-            "dtypes": {k: str(v.dtype) for k, v in arrays.items()}}
-    with open(os.path.join(ckpt_dir, "meta.json"), "w") as f:
-        json.dump(meta, f)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        if k == _META_KEY:
+            raise ValueError(f"tree key collides with reserved {_META_KEY!r}")
+        a = np.asarray(jax.device_get(v))
+        arrays[k] = a
+        dtypes[k] = str(a.dtype)
+    record = {"step": step, "dtypes": dtypes, "metadata": metadata}
+    arrays[_META_KEY] = np.array(json.dumps(record))
+    path = _ckpt_path(ckpt_dir, step)
+    # pid-unique temp name: two writers racing on the same dir (e.g. an
+    # operator resuming while the "dead" run is still flushing) can never
+    # clobber each other's in-flight file; the rename stays last-wins atomic
+    tmp = f"{path}.{os.getpid()}.tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())    # payload durable before it becomes visible
+        os.replace(tmp, path)       # atomic publish
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    _fsync_dir(ckpt_dir)
+    if keep is not None:
+        prune_checkpoints(ckpt_dir, keep)
     return path
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest published step, or None.  ``.tmp`` leftovers from a killed
+    write and any non-checkpoint files are ignored."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
-             if (m := _STEP_RE.search(fn))]
+             if (m := _STEP_RE.match(fn))]
     return max(steps) if steps else None
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` published checkpoints.
+
+    Only *published* files are touched: ``.tmp`` partials are left alone
+    because one may belong to a concurrently-flushing writer (deleting it
+    from under them crashes their atomic rename); dead partials from
+    crashes are harmless — every reader ignores them.
+    """
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    if not os.path.isdir(ckpt_dir):
+        return
+    found = sorted(
+        (int(m.group(1)), fn) for fn in os.listdir(ckpt_dir)
+        if (m := _STEP_RE.match(fn))
+    )
+    for _, fn in found[:-keep] if len(found) > keep else []:
+        os.remove(os.path.join(ckpt_dir, fn))
+
+
+def _read_record(data) -> Dict[str, Any]:
+    if _META_KEY in data.files:
+        return json.loads(str(data[_META_KEY][()]))
+    return {"dtypes": {}, "metadata": None}
+
+
+def _load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read one checkpoint file: (arrays with dtypes reinterpreted, record).
+
+    The npz handle is context-managed so the underlying zip file is closed
+    even on a mismatch error part-way through.
+    """
+    with np.load(path) as data:
+        record = _read_record(data)
+        arrays = {}
+        for k in data.files:
+            if k == _META_KEY:
+                continue
+            a = data[k]
+            want = record["dtypes"].get(k)
+            if want is not None and str(a.dtype) != want:
+                # extension dtypes (bfloat16, float8_*) come back as raw
+                # void arrays; reinterpret with the recorded dtype
+                a = a.view(np.dtype(want))
+            arrays[k] = a
+    return arrays, record
+
+
+def _resolve_step(ckpt_dir: str, step: Optional[int]) -> int:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    return step
+
+
+def _restore(ckpt_dir: str, tree: Any, step: Optional[int]
+             ) -> Tuple[Any, int, Optional[Dict[str, Any]]]:
+    step = _resolve_step(ckpt_dir, step)
+    path = _ckpt_path(ckpt_dir, step)
+    arrays, record = _load_arrays(path)
+    flat_ref = _flatten(tree)
+    missing = set(flat_ref) - set(arrays)
+    extra = set(arrays) - set(flat_ref)
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path} does not match the template tree: "
+            f"{len(missing)} template leaves absent from the checkpoint "
+            f"(e.g. {sorted(missing)[:5]}), {len(extra)} checkpoint arrays "
+            f"with no template leaf (e.g. {sorted(extra)[:5]}) — was the "
+            f"checkpoint written for a different model/optimizer state?")
+    leaves_ref, _ = jax.tree_util.tree_flatten_with_path(tree)
+    keys_in_order = [_path_key(p) for p, _ in leaves_ref]
+    restored = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree),
+        [jnp.asarray(arrays[k]) for k in keys_in_order])
+    return restored, step, record.get("metadata")
 
 
 def restore_checkpoint(ckpt_dir: str, tree: Any, step: Optional[int] = None
                        ) -> Tuple[Any, int]:
     """Restore into the structure of ``tree`` (an abstract or concrete
     pytree).  Returns (restored_tree, step)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step}.npz")
-    data = np.load(path)
-    flat_ref = _flatten(tree)
-    missing = set(flat_ref) - set(data.files)
-    extra = set(data.files) - set(flat_ref)
-    if missing or extra:
-        raise ValueError(f"checkpoint/tree mismatch: missing={sorted(missing)[:5]} "
-                         f"extra={sorted(extra)[:5]}")
-    restored_flat = {k: jnp.asarray(data[k]) for k in flat_ref}
-    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    keys_in_order = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                              for p in path_) for path_, _ in leaves_ref]
-    restored = jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(tree), [restored_flat[k] for k in keys_in_order])
+    restored, step, _ = _restore(ckpt_dir, tree, step)
     return restored, step
+
+
+def restore_with_metadata(ckpt_dir: str, tree: Any, step: Optional[int] = None
+                          ) -> Tuple[Any, int, Optional[Dict[str, Any]]]:
+    """Like :func:`restore_checkpoint` but also returns the host-side
+    ``metadata`` dict the checkpoint was saved with (None for checkpoints
+    written without one)."""
+    return _restore(ckpt_dir, tree, step)
+
+
+def load_metadata(ckpt_dir: str, step: Optional[int] = None
+                  ) -> Optional[Dict[str, Any]]:
+    """Read just the host-side metadata of a checkpoint — only the JSON
+    record entry is decompressed, not the (potentially huge) arrays."""
+    step = _resolve_step(ckpt_dir, step)
+    with np.load(_ckpt_path(ckpt_dir, step)) as data:
+        return _read_record(data).get("metadata")

@@ -12,7 +12,7 @@ from repro.core.collectives import (
     combine_mean,
     combine_sum,
 )
-from repro.core.runner import DistributedRunner
+from repro.core.runner import CheckpointPolicy, DistributedRunner
 from repro.core.optimizer import (
     GradientDescent,
     GradientDescentParameters,
@@ -29,7 +29,7 @@ __all__ = [
     "EMPTY", "Column", "ColumnType", "MLRow", "Schema",
     "MLTable", "MLNumericTable", "LocalMatrix", "PaddedCSR",
     "CollectiveSchedule", "combine_mean", "combine_sum", "combine_concat",
-    "DistributedRunner",
+    "CheckpointPolicy", "DistributedRunner",
     "Optimizer",
     "StochasticGradientDescent", "StochasticGradientDescentParameters",
     "GradientDescent", "GradientDescentParameters",

@@ -17,11 +17,12 @@ from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.collectives import CollectiveSchedule
 from repro.core.interfaces import Model, NumericAlgorithm
 from repro.core.numeric_table import MLNumericTable
-from repro.core.runner import DistributedRunner
+from repro.core.runner import CheckpointPolicy, DistributedRunner
 
 __all__ = ["KMeansParameters", "KMeansModel", "KMeans"]
 
@@ -88,4 +89,62 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
         runner = DistributedRunner.for_table(data, schedule=p.schedule)
         centroids = runner.run_rounds(data, centroids, local_step, p.max_iter,
                                       combine="sum", update=update)
+        return KMeansModel(centroids, p)
+
+    @classmethod
+    def train_stream(cls, stream, params: Optional[KMeansParameters] = None, *,
+                     num_epochs: Optional[int] = None, num_shards: int = 1,
+                     chunks_per_epoch: Optional[int] = None,
+                     checkpoint: Optional[CheckpointPolicy] = None,
+                     resume: bool = False,
+                     init_centroids: Optional[jnp.ndarray] = None
+                     ) -> KMeansModel:
+        """Streaming Lloyd rounds over minibatch windows: every round
+        re-assigns one window chunk to the current centroids, sums the
+        per-partition (cluster sums, counts) statistics with the configured
+        schedule, and rebuilds the centroids — mini-batch k-means in MLI
+        primitives.  ``checkpoint``/``resume`` make long runs
+        preemption-safe (see :meth:`repro.core.runner.DistributedRunner.
+        run_epochs`).
+
+        Centroids initialize from the first ``k`` rows of the stream's
+        current window (peeked without consuming it) unless
+        ``init_centroids`` is given; on resume the values are overwritten
+        by the snapshot, so only the shape matters.
+        """
+        p = params or cls.default_parameters()
+        if init_centroids is None:
+            if not hasattr(stream, "source"):
+                raise ValueError("pass init_centroids= for non-peekable streams")
+            first = np.asarray(stream.source(stream.step)["data"])
+            if p.k > first.shape[0]:
+                raise ValueError("k exceeds rows in the first window")
+            init_centroids = jnp.asarray(first[: p.k])
+        d = init_centroids.shape[1]
+
+        def local_step(block, centroids, r):
+            return _local_stats(block, centroids)
+
+        def update(centroids, tot, r):
+            sums, counts = tot[:, :d], tot[:, d]
+            return jnp.where(counts[:, None] > 0,
+                             sums / jnp.maximum(counts[:, None], 1.0),
+                             centroids)
+
+        runner = DistributedRunner(mesh=getattr(stream, "mesh", None),
+                                   num_shards=num_shards, schedule=p.schedule)
+        epochs = num_epochs if num_epochs is not None else p.max_iter
+        if resume:
+            if checkpoint is None:
+                raise ValueError("resume=True requires a CheckpointPolicy")
+            centroids = runner.resume(checkpoint.ckpt_dir, stream,
+                                      init_centroids, local_step, epochs,
+                                      combine="sum", update=update,
+                                      chunks_per_epoch=chunks_per_epoch,
+                                      checkpoint=checkpoint)
+        else:
+            centroids = runner.run_epochs(stream, init_centroids, local_step,
+                                          epochs, combine="sum", update=update,
+                                          chunks_per_epoch=chunks_per_epoch or 1,
+                                          checkpoint=checkpoint)
         return KMeansModel(centroids, p)

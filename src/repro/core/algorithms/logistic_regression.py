@@ -72,6 +72,28 @@ class LogisticRegressionModel(Model):
         return jnp.mean(jnp.logaddexp(0.0, logits) - y * logits)
 
 
+def _make_gradient(p: LogisticRegressionParameters):
+    """The paper's gradient closure (or its Pallas-kernel twin), shared by
+    the resident and streaming training paths."""
+    if p.use_kernel:
+        from repro.kernels import ops as kops
+
+        def gradient(vec: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+            # kernel path operates on a (1, d) block
+            x = vec[1:][None, :]
+            y = vec[0][None]
+            return kops.logreg_grad(x, y, w)
+    else:
+        def gradient(vec: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+            x = vec[1:]
+            g = x * (sigmoid(jnp.dot(x, w)) - vec[0])
+            if p.l2:
+                g = g + p.l2 * w
+            return g
+
+    return gradient
+
+
 class LogisticRegressionAlgorithm(
     NumericAlgorithm[LogisticRegressionParameters, LogisticRegressionModel]
 ):
@@ -85,23 +107,7 @@ class LogisticRegressionAlgorithm(
               ) -> LogisticRegressionModel:
         p = params or cls.default_parameters()
         d = data.num_cols - 1
-
-        if p.use_kernel:
-            from repro.kernels import ops as kops
-
-            def gradient(vec: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-                # kernel path operates on a (1, d) block
-                x = vec[1:][None, :]
-                y = vec[0][None]
-                return kops.logreg_grad(x, y, w)
-        else:
-            def gradient(vec: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-                x = vec[1:]
-                g = x * (sigmoid(jnp.dot(x, w)) - vec[0])
-                if p.l2:
-                    g = g + p.l2 * w
-                return g
-
+        gradient = _make_gradient(p)
         prox = soft_threshold(p.l1) if p.l1 else None
         w0 = jnp.zeros((d,), jnp.float32)
 
@@ -116,4 +122,46 @@ class LogisticRegressionAlgorithm(
                 local_batch_size=p.local_batch_size, prox=prox,
                 lr_decay=p.lr_decay))
         weights = opt.apply(data, None)
+        return LogisticRegressionModel(p, weights)
+
+    @classmethod
+    def train_stream(cls, stream,
+                     params: Optional[LogisticRegressionParameters] = None, *,
+                     num_epochs: Optional[int] = None,
+                     num_features: Optional[int] = None,
+                     num_shards: int = 1,
+                     chunks_per_epoch: Optional[int] = None,
+                     checkpoint=None, resume: bool = False
+                     ) -> LogisticRegressionModel:
+        """Streaming training over a :class:`repro.data.pipeline.
+        BatchIterator` whose windows follow the library convention (label
+        in column 0): one window per epoch, ``chunks_per_epoch`` SGD rounds
+        per window, optional checkpoint/resume (see
+        :meth:`repro.core.runner.DistributedRunner.run_epochs`).
+
+        ``num_features`` may be omitted when the stream has a peekable
+        ``source`` (a ``BatchIterator``); only the ``"sgd"`` solver
+        streams — full-batch GD needs the whole table resident by
+        definition.
+        """
+        p = params or cls.default_parameters()
+        if p.solver != "sgd":
+            raise ValueError(
+                f"streaming supports solver='sgd' only, got {p.solver!r} "
+                f"(full-batch GD is a resident-table method)")
+        if num_features is None:
+            if not hasattr(stream, "source"):
+                raise ValueError("pass num_features= for non-peekable streams")
+            num_features = stream.source(stream.step)["data"].shape[1] - 1
+        gradient = _make_gradient(p)
+        prox = soft_threshold(p.l1) if p.l1 else None
+        opt = StochasticGradientDescent(StochasticGradientDescentParameters(
+            w_init=jnp.zeros((num_features,), jnp.float32), grad=gradient,
+            learning_rate=p.learning_rate, max_iter=p.max_iter,
+            schedule=p.schedule, local_batch_size=p.local_batch_size,
+            prox=prox, lr_decay=p.lr_decay))
+        weights = opt.apply_stream(
+            stream, num_epochs if num_epochs is not None else p.max_iter,
+            num_shards=num_shards, chunks_per_epoch=chunks_per_epoch,
+            checkpoint=checkpoint, resume=resume)
         return LogisticRegressionModel(p, weights)

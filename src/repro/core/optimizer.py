@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.core.collectives import CollectiveSchedule
 from repro.core.local_matrix import LocalMatrix
 from repro.core.numeric_table import MLNumericTable
-from repro.core.runner import DistributedRunner
+from repro.core.runner import CheckpointPolicy, DistributedRunner
 
 __all__ = [
     "Optimizer",
@@ -96,6 +96,39 @@ def _spmd_rounds(
                              combine=combine, update=update)
 
 
+def _stream_fit(
+    stream,
+    w_init: jnp.ndarray,
+    num_epochs: int,
+    local_round: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    schedule: CollectiveSchedule,
+    *,
+    num_shards: int = 1,
+    chunks_per_epoch: Optional[int] = None,
+    checkpoint: Optional[CheckpointPolicy] = None,
+    resume: bool = False,
+) -> jnp.ndarray:
+    """Streaming counterpart of :func:`_spmd_rounds`: one window per epoch
+    from ``stream`` (a :class:`repro.data.pipeline.BatchIterator`), iterated
+    by :meth:`DistributedRunner.run_epochs` with mean-combined weights.
+    With ``resume=True`` the run restarts from ``checkpoint.ckpt_dir``;
+    ``chunks_per_epoch=None`` then inherits the checkpointed layout, while
+    an explicit value is cross-checked against it (mismatch raises)."""
+    runner = DistributedRunner(mesh=getattr(stream, "mesh", None),
+                               num_shards=num_shards, schedule=schedule)
+    if resume:
+        if checkpoint is None:
+            raise ValueError("resume=True requires a CheckpointPolicy")
+        return runner.resume(checkpoint.ckpt_dir, stream, w_init, local_round,
+                             num_epochs, combine="mean",
+                             chunks_per_epoch=chunks_per_epoch,
+                             checkpoint=checkpoint)
+    return runner.run_epochs(stream, w_init, local_round, num_epochs,
+                             combine="mean",
+                             chunks_per_epoch=chunks_per_epoch or 1,
+                             checkpoint=checkpoint)
+
+
 # --------------------------------------------------------------------------- #
 # StochasticGradientDescent (paper Fig. A4)
 # --------------------------------------------------------------------------- #
@@ -134,13 +167,16 @@ class StochasticGradientDescent(Optimizer):
     def __init__(self, params: StochasticGradientDescentParameters):
         self.params = params
 
-    def apply(self, data: MLNumericTable, params=None) -> jnp.ndarray:
-        p = params or self.params
-        schedule = CollectiveSchedule.parse(p.schedule)
+    @staticmethod
+    def _local_round(p: StochasticGradientDescentParameters):
+        """Build the partition-local pass (paper Fig. A4 ``localSGD``):
+        a sequential fold over the block's rows in sub-batches of
+        ``local_batch_size``.  Shared by the resident (:meth:`apply`) and
+        streaming (:meth:`apply_stream`) paths — same compute, different
+        data motion."""
         bs = int(p.local_batch_size)
 
         def local_sgd(block: jnp.ndarray, w: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
-            # paper Fig A4 `localSGD`: sequential pass over the partition
             rows = block.shape[0]
             if rows % bs != 0:
                 raise ValueError(
@@ -159,7 +195,30 @@ class StochasticGradientDescent(Optimizer):
             w, _ = jax.lax.scan(step, w, chunks)
             return w
 
-        return _spmd_rounds(data, p.w_init, p.max_iter, local_sgd, schedule, "mean")
+        return local_sgd
+
+    def apply(self, data: MLNumericTable, params=None) -> jnp.ndarray:
+        p = params or self.params
+        schedule = CollectiveSchedule.parse(p.schedule)
+        return _spmd_rounds(data, p.w_init, p.max_iter, self._local_round(p),
+                            schedule, "mean")
+
+    def apply_stream(self, stream, num_epochs: int, *, num_shards: int = 1,
+                     chunks_per_epoch: Optional[int] = None,
+                     checkpoint: Optional[CheckpointPolicy] = None,
+                     resume: bool = False, params=None) -> jnp.ndarray:
+        """Streaming fit: each epoch's window is split into
+        ``chunks_per_epoch`` rounds; every round each partition folds over
+        its chunk rows exactly as the resident path folds over its
+        partition, then weights are mean-combined with the configured
+        schedule.  ``checkpoint``/``resume`` make the run preemption-safe
+        (see :class:`repro.core.runner.CheckpointPolicy`)."""
+        p = params or self.params
+        return _stream_fit(stream, p.w_init, num_epochs, self._local_round(p),
+                           CollectiveSchedule.parse(p.schedule),
+                           num_shards=num_shards,
+                           chunks_per_epoch=chunks_per_epoch,
+                           checkpoint=checkpoint, resume=resume)
 
 
 # --------------------------------------------------------------------------- #
@@ -241,3 +300,35 @@ class MinibatchSGD(Optimizer):
             return w
 
         return _spmd_rounds(data, p.w_init, p.max_iter, local_round, schedule, "mean")
+
+    @staticmethod
+    def _streaming_round(p: MinibatchSGDParameters):
+        """Streaming local round: the window chunk IS the minibatch — no
+        rotating slice needed, because every round sees fresh rows from the
+        stream (``batch_per_shard`` is implied by the window size and
+        ``chunks_per_epoch``)."""
+
+        def local_round(chunk: jnp.ndarray, w: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+            g = jnp.mean(jax.vmap(p.grad, in_axes=(0, None))(chunk, w), axis=0)
+            w = w - p.learning_rate * g
+            if p.prox is not None:
+                w = p.prox(w, p.learning_rate)
+            return w
+
+        return local_round
+
+    def apply_stream(self, stream, num_epochs: int, *, num_shards: int = 1,
+                     chunks_per_epoch: Optional[int] = None,
+                     checkpoint: Optional[CheckpointPolicy] = None,
+                     resume: bool = False, params=None) -> jnp.ndarray:
+        """Streaming minibatch SGD: each of the window's
+        ``chunks_per_epoch`` chunks is one per-partition minibatch — mean
+        gradient, local update, mean-combined weights.  Preemption-safe via
+        ``checkpoint``/``resume``."""
+        p = params or self.params
+        return _stream_fit(stream, p.w_init, num_epochs,
+                           self._streaming_round(p),
+                           CollectiveSchedule.parse(p.schedule),
+                           num_shards=num_shards,
+                           chunks_per_epoch=chunks_per_epoch,
+                           checkpoint=checkpoint, resume=resume)

@@ -29,15 +29,28 @@ Both execution modes of the table are supported transparently: **mesh mode**
 **emulated mode** (logical partitions on one device; the combine is the
 algebraically-equal local reduction).  See ``docs/architecture.md`` for the
 data-flow diagram and ``docs/api.md`` for the full surface.
+
+Beyond the paper's resident-table loop, the runner has a **streaming
+mode** (:meth:`DistributedRunner.run_epochs`): each epoch consumes one
+host window from a :class:`repro.data.pipeline.BatchIterator` (placed on
+the mesh by ``shard_batch``) and runs a chunked, jitted ``lax.scan`` of
+minibatch rounds over the device-resident window — so training is not
+bounded by device memory.  Paired with :class:`CheckpointPolicy` (periodic
+snapshots of state + epoch + stream position + rng through
+:mod:`repro.checkpoint.store`) and :meth:`DistributedRunner.resume`, a
+run killed mid-flight restarts bit-for-bit on the same mesh — the
+checkpoint-and-restart fault-tolerance story that replaces the paper's
+Spark lineage.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Iterator, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import partition as pt
@@ -49,7 +62,7 @@ from repro.core.collectives import (
     combine_sum,
 )
 
-__all__ = ["DistributedRunner"]
+__all__ = ["CheckpointPolicy", "DistributedRunner"]
 
 # local_step(block, state, round_index) -> per-partition partial result
 LocalStep = Callable[[jnp.ndarray, Any, jnp.ndarray], Any]
@@ -61,6 +74,30 @@ _COMBINERS = {
     "sum": combine_sum,
     "concat": combine_concat,
 }
+
+
+@dataclasses.dataclass
+class CheckpointPolicy:
+    """When and where the streaming loop snapshots its state.
+
+    Every ``every_epochs`` completed epochs, :meth:`DistributedRunner.
+    run_epochs` writes one atomic checkpoint through
+    :mod:`repro.checkpoint.store` carrying the state pytree **and** the
+    host-side loop counters (epoch, stream step, rng key, chunk layout,
+    schedule) — everything :meth:`DistributedRunner.resume` needs to
+    restart the run bit-for-bit.  ``keep`` bounds disk usage by pruning all
+    but the newest ``keep`` snapshots after each publish.
+    """
+
+    ckpt_dir: str
+    every_epochs: int = 1
+    keep: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.every_epochs < 1:
+            raise ValueError(f"every_epochs must be >= 1, got {self.every_epochs}")
+        if self.keep is not None and self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
 
 
 def _emulated_combine(stacked: Any, combine: str) -> Any:
@@ -243,6 +280,206 @@ class DistributedRunner:
             return final
 
         return run(init_state, table.data)
+
+    # ------------------------------------------------------------------ #
+    # streaming mode: epochs over minibatch windows (beyond the paper)
+    # ------------------------------------------------------------------ #
+    def _check_window(self, window: jnp.ndarray, chunks_per_epoch: int) -> None:
+        pt.check_rows_divisible(window.shape[0], self.num_shards,
+                                what="stream partitions")
+        per_shard = window.shape[0] // self.num_shards
+        if per_shard % chunks_per_epoch != 0:
+            raise ValueError(
+                f"rows-per-shard {per_shard} must divide into "
+                f"chunks_per_epoch={chunks_per_epoch}")
+
+    def _epoch_fn(self, local_step: LocalStep, upd: UpdateFn, combine: str,
+                  chunks: int) -> Callable:
+        """Build the jitted one-epoch function ``(state, window, rounds) ->
+        state``: a ``lax.scan`` over the window's ``chunks`` minibatches.
+        ``rounds`` carries the global round ids (epoch·chunks + chunk), so
+        round-indexed local steps (lr decay, rotating slices) see a
+        monotone counter across epochs and the compiled function is reused
+        for every epoch."""
+        donate = (0,) if self.donate else ()
+
+        if self.mesh is not None:
+            axes = self.data_axes
+
+            def round_body(window, state, r):
+                def spmd(wblock, state, r):
+                    cr = wblock.shape[0] // chunks
+                    c = r % chunks
+                    block = jax.lax.dynamic_slice_in_dim(wblock, c * cr, cr, axis=0)
+                    part = local_step(block, state, r)
+                    return _COMBINERS[combine](part, axes, self.schedule)
+
+                return shard_map(
+                    spmd,
+                    mesh=self.mesh,
+                    in_specs=(pt.data_spec(axes), P(), P()),
+                    out_specs=P(),
+                )(window, state, r)
+
+            @partial(jax.jit, donate_argnums=donate)
+            def epoch(state, window, rounds):
+                def body(state, r):
+                    combined = round_body(window, state, r)
+                    return upd(state, combined, r), None
+
+                final, _ = jax.lax.scan(body, state, rounds)
+                return final
+
+            return epoch
+
+        num_shards = self.num_shards
+
+        @partial(jax.jit, donate_argnums=donate)
+        def epoch(state, window, rounds):
+            blocks = pt.partition_rows(window, num_shards)
+            cr = blocks.shape[1] // chunks
+
+            def body(state, r):
+                c = r % chunks
+                chunk = jax.lax.dynamic_slice_in_dim(blocks, c * cr, cr, axis=1)
+                parts = jax.vmap(lambda b: local_step(b, state, r))(chunk)
+                combined = _emulated_combine(parts, combine)
+                return upd(state, combined, r), None
+
+            final, _ = jax.lax.scan(body, state, rounds)
+            return final
+
+        return epoch
+
+    def run_epochs(self, stream: Iterator, init_state: Any,
+                   local_step: LocalStep, num_epochs: int, *,
+                   combine: str = "mean", update: Optional[UpdateFn] = None,
+                   chunks_per_epoch: int = 1,
+                   checkpoint: Optional[CheckpointPolicy] = None,
+                   rng: Optional[jnp.ndarray] = None,
+                   start_epoch: int = 0) -> Any:
+        """Streaming variant of :meth:`run_rounds` for data larger than
+        device memory: each epoch pulls ONE window of rows from ``stream``
+        (a :class:`repro.data.pipeline.BatchIterator` yielding ``{"data":
+        (rows, features)}`` host batches, already mesh-placed by
+        ``shard_batch``) and runs ``chunks_per_epoch`` rounds of
+        local-step → combine → update over it as a single jitted
+        ``lax.scan`` with the state carry donated.  Round ``r`` of epoch
+        ``e`` sees the window's ``r % chunks_per_epoch``-th row chunk and
+        the global round index ``e * chunks_per_epoch + r``.
+
+        With a :class:`CheckpointPolicy`, every ``every_epochs`` epochs the
+        ``(state, epoch, stream.step, rng)`` tuple is snapshotted
+        atomically via :mod:`repro.checkpoint.store`; :meth:`resume`
+        restarts from the newest snapshot bit-for-bit.  ``rng`` is an
+        optional uint32 key carried for stochastic pipelines (fold per
+        epoch with ``jax.random.fold_in(rng, epoch)``); it rides in the
+        checkpoint so a resumed run re-derives identical per-epoch keys.
+        """
+        if num_epochs < start_epoch:
+            raise ValueError(f"num_epochs {num_epochs} < start_epoch {start_epoch}")
+        upd: UpdateFn = update or (lambda state, combined, r: combined)
+        chunks = int(chunks_per_epoch)
+        if chunks < 1:
+            raise ValueError(f"chunks_per_epoch must be >= 1, got {chunks}")
+        epoch_fn = self._epoch_fn(local_step, upd, combine, chunks)
+
+        state = init_state
+        if self.donate:
+            # donate a private copy, never the caller's buffer
+            state = jax.tree.map(jnp.copy, state)
+
+        last_saved = None
+        for e in range(start_epoch, num_epochs):
+            batch = next(stream)
+            window = batch["data"] if isinstance(batch, dict) else batch
+            self._check_window(window, chunks)
+            rounds = jnp.arange(e * chunks, (e + 1) * chunks, dtype=jnp.int32)
+            state = epoch_fn(state, window, rounds)
+            if checkpoint is not None and (e + 1) % checkpoint.every_epochs == 0:
+                self._save_snapshot(checkpoint, stream, state, e + 1, chunks, rng)
+                last_saved = e + 1
+        if checkpoint is not None and last_saved != num_epochs:
+            self._save_snapshot(checkpoint, stream, state, num_epochs, chunks, rng)
+        return state
+
+    def _save_snapshot(self, policy: CheckpointPolicy, stream: Any, state: Any,
+                       epoch: int, chunks: int, rng: Optional[jnp.ndarray]) -> None:
+        from repro.checkpoint.store import save_checkpoint
+
+        stream_step = getattr(stream, "step", None)
+        if stream_step is None:
+            raise TypeError(
+                "checkpointing requires a stream exposing its position as "
+                ".step (a BatchIterator) — resume could not replay an "
+                "unpositioned stream")
+        meta = {
+            "epoch": epoch,
+            "stream_step": int(stream_step),
+            "rng": None if rng is None else np.asarray(rng).tolist(),
+            "chunks_per_epoch": chunks,
+            "schedule": self.schedule.value,
+            "num_shards": self.num_shards,
+            "every_epochs": policy.every_epochs,
+            "keep": policy.keep,
+        }
+        save_checkpoint(policy.ckpt_dir, epoch, state, metadata=meta,
+                        keep=policy.keep)
+
+    def resume(self, ckpt_dir: str, stream: Any, init_state: Any,
+               local_step: LocalStep, num_epochs: int, *,
+               combine: str = "mean", update: Optional[UpdateFn] = None,
+               chunks_per_epoch: Optional[int] = None,
+               checkpoint: Optional[CheckpointPolicy] = None,
+               step: Optional[int] = None) -> Any:
+        """Restart a killed :meth:`run_epochs` run from its newest (or
+        ``step``-selected) checkpoint and continue to ``num_epochs``.
+
+        ``init_state`` is only the structure template for the restore — its
+        values are replaced by the snapshot.  The stream is fast-forwarded
+        with ``seek`` to the checkpointed position, the rng key restored,
+        and the chunk layout / schedule / shard count cross-checked against
+        the snapshot so a mismatched relaunch fails loudly instead of
+        silently diverging.  On the same mesh the resumed run replays the
+        identical compiled computation, so the final state matches an
+        uninterrupted run bit-for-bit (asserted in
+        ``tests/test_streaming_resume.py``).
+        """
+        from repro.checkpoint.store import restore_with_metadata
+
+        state, ck_step, meta = restore_with_metadata(ckpt_dir, init_state, step)
+        if meta is None:
+            raise ValueError(
+                f"checkpoint step {ck_step} under {ckpt_dir} carries no "
+                f"resume metadata — was it written by run_epochs?")
+        for name, have in (("schedule", self.schedule.value),
+                           ("num_shards", self.num_shards)):
+            want = meta.get(name)
+            if want is not None and want != have:
+                raise ValueError(
+                    f"cannot resume: checkpoint was written with "
+                    f"{name}={want!r} but this runner has {name}={have!r}")
+        chunks = int(meta.get("chunks_per_epoch", 1))
+        if chunks_per_epoch is not None and chunks_per_epoch != chunks:
+            raise ValueError(
+                f"cannot resume: checkpoint used chunks_per_epoch={chunks}, "
+                f"got {chunks_per_epoch}")
+        if not hasattr(stream, "seek"):
+            raise TypeError("resume requires a seekable stream "
+                            "(BatchIterator or anything with .seek(step))")
+        stream.seek(meta["stream_step"])
+        rng = (jnp.asarray(meta["rng"], jnp.uint32)
+               if meta.get("rng") is not None else None)
+        epoch = int(meta["epoch"])
+        if checkpoint is None and meta.get("every_epochs"):
+            checkpoint = CheckpointPolicy(ckpt_dir, meta["every_epochs"],
+                                          meta.get("keep"))
+        if epoch >= num_epochs:
+            return state
+        return self.run_epochs(stream, state, local_step, num_epochs,
+                               combine=combine, update=update,
+                               chunks_per_epoch=chunks, checkpoint=checkpoint,
+                               rng=rng, start_epoch=epoch)
 
     def __repr__(self) -> str:  # pragma: no cover
         where = (f"mesh{tuple(self.mesh.shape.items())}" if self.mesh is not None

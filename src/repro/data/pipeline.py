@@ -3,7 +3,12 @@ NamedSharding over the mesh ("pod","data") axes.
 
 This is the data-pipeline analogue of the paper's partitioned MLTable load:
 each host batch is laid out so that device d receives exactly its row
-partition — no gather through a driver.
+partition — no gather through a driver.  The iterator's position is a
+single integer ``step`` and the source is a pure function of it, so the
+stream is *seekable*: :meth:`BatchIterator.seek` repositions it exactly,
+which is how ``DistributedRunner.resume`` replays a killed run bit-for-bit
+(the checkpoint metadata records the step; see docs/architecture.md,
+"Streaming epochs and fault tolerance").
 """
 from __future__ import annotations
 
@@ -18,7 +23,13 @@ __all__ = ["BatchIterator", "shard_batch"]
 
 def shard_batch(batch: Dict[str, np.ndarray], mesh: Optional[Mesh]) -> Dict[str, Any]:
     """Place a host batch on the mesh: leading (batch) dim over
-    ("pod","data") when divisible, replicated otherwise."""
+    ("pod","data") when divisible, replicated otherwise.
+
+    The partitioned placement uses the same spec as
+    :func:`repro.core.partition.data_spec`, so a streamed window and a
+    resident ``MLNumericTable`` have identical layouts and the runner can
+    consume either without resharding.
+    """
     if mesh is None:
         return {k: jax.numpy.asarray(v) for k, v in batch.items()}
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -34,13 +45,26 @@ def shard_batch(batch: Dict[str, np.ndarray], mesh: Optional[Mesh]) -> Dict[str,
 
 class BatchIterator:
     """Iterate ``source(step) -> host batch`` onto the mesh, prefetch-free
-    (CPU container); on a real pod this is where double-buffering would go."""
+    (CPU container); on a real pod this is where double-buffering would go.
+
+    ``source`` must be a pure function of ``step`` — that determinism is
+    what makes kill-and-resume exact: after a restart,
+    ``seek(checkpointed_step)`` reproduces the identical remaining batch
+    sequence.
+    """
 
     def __init__(self, source: Callable[[int], Dict[str, np.ndarray]],
                  mesh: Optional[Mesh] = None, start_step: int = 0):
         self.source = source
         self.mesh = mesh
         self.step = start_step
+
+    def seek(self, step: int) -> "BatchIterator":
+        """Reposition the stream; the next batch will be ``source(step)``.
+        Used by ``DistributedRunner.resume`` to fast-forward a fresh
+        iterator to the checkpointed position."""
+        self.step = int(step)
+        return self
 
     def __iter__(self) -> Iterator[Dict[str, Any]]:
         return self

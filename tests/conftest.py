@@ -1,7 +1,74 @@
+"""Shared fixtures and helpers for the test suite.
+
+Multi-device behavior is tested through subprocesses because the emulated
+host-device count (``--xla_force_host_platform_device_count``) must be set
+before jax initializes and cannot change inside one process.  The helpers
+here own that boilerplate so test modules only supply the program text:
+
+  * :func:`run_devices_subprocess` — run a ``python -c`` program with N
+    emulated devices and the repo on PYTHONPATH; returns the completed
+    process (``check=False`` for tests that expect a non-zero exit, e.g.
+    the SIGKILL in the kill-and-resume test).
+  * :func:`result_json` — parse the ``RESULT::{json}`` line a program
+    prints as its structured verdict.
+  * ``eight_device_run`` — fixture composing the two for the common case.
+"""
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices_subprocess(program: str, devices: int = 8, timeout: int = 540,
+                           env: dict = None, check: bool = True):
+    """Run ``program`` via ``python -c`` with ``devices`` emulated host
+    devices.  Asserts a clean exit unless ``check=False``."""
+    full_env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(REPO, "src"),
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+    )
+    if env:
+        full_env.update(env)
+    out = subprocess.run([sys.executable, "-c", program], capture_output=True,
+                         text=True, env=full_env, timeout=timeout, cwd=REPO)
+    if check:
+        assert out.returncode == 0, out.stderr[-2000:]
+    return out
+
+
+def result_json(out) -> dict:
+    """Parse the last ``RESULT::{json}`` line of a subprocess' stdout."""
+    lines = [l for l in out.stdout.splitlines() if l.startswith("RESULT::")]
+    assert lines, f"no RESULT:: line in output:\n{out.stdout[-2000:]}"
+    return json.loads(lines[-1][len("RESULT::"):])
 
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def tmp_ckpt_dir(tmp_path):
+    """An empty checkpoint directory, cleaned up with the test."""
+    d = tmp_path / "ckpt"
+    d.mkdir()
+    return str(d)
+
+
+@pytest.fixture(scope="session")
+def eight_device_run():
+    """Run a program on an 8-device emulated mesh and return its parsed
+    ``RESULT::`` JSON."""
+
+    def run(program: str, timeout: int = 540, env: dict = None) -> dict:
+        return result_json(run_devices_subprocess(program, devices=8,
+                                                  timeout=timeout, env=env))
+
+    return run

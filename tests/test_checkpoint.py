@@ -1,0 +1,169 @@
+"""Property tests for `repro.checkpoint.store` — the persistence layer the
+streaming fault-tolerance story (DistributedRunner.run_epochs / resume)
+stands on.
+
+Pinned properties:
+  * save → restore round-trips **values, dtypes, and structure** for any
+    nested dict/tuple/dataclass pytree, including extension dtypes
+    (bfloat16) that numpy would otherwise load back as raw void arrays;
+  * host-side metadata rides in the same atomic file and round-trips;
+  * ``latest_step`` ignores ``.tmp`` leftovers of a killed write and any
+    non-checkpoint files;
+  * restoring into a mismatched template raises with the offending keys
+    named;
+  * ``keep`` pruning retains exactly the newest snapshots.
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.checkpoint import (
+    latest_step,
+    load_metadata,
+    prune_checkpoints,
+    restore_checkpoint,
+    restore_with_metadata,
+    save_checkpoint,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    """Stand-in for an algorithm's checkpointable state."""
+    weights: jnp.ndarray
+    moment: jnp.ndarray
+
+
+DTYPES = ("float32", "int32", "float16", "bfloat16")
+
+
+def _leaf(dtype: str, shape, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    if dtype == "int32":
+        return jnp.asarray(rng.integers(-1000, 1000, size=shape), jnp.int32)
+    return jnp.asarray(rng.normal(size=shape), jnp.dtype(dtype))
+
+
+def _make_tree(dt_a: str, dt_b: str, dt_c: str, rows: int, seed: int):
+    """Nested dict / tuple / dataclass pytree with mixed-dtype leaves."""
+    return {
+        "state": TrainState(weights=_leaf(dt_a, (rows, 3), seed),
+                            moment=_leaf(dt_b, (rows,), seed + 1)),
+        "counters": (_leaf(dt_c, (2, 2), seed + 2),
+                     _leaf("int32", (), seed + 3)),
+    }
+
+
+@settings(max_examples=20, deadline=None)
+@given(dt_a=st.sampled_from(DTYPES), dt_b=st.sampled_from(DTYPES),
+       dt_c=st.sampled_from(DTYPES), rows=st.integers(1, 16),
+       step=st.integers(0, 10**6), seed=st.integers(0, 2**16))
+def test_roundtrip_preserves_values_dtypes_structure(dt_a, dt_b, dt_c, rows,
+                                                     step, seed):
+    tree = _make_tree(dt_a, dt_b, dt_c, rows, seed)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, step, tree)
+        template = jax.tree.map(jnp.zeros_like, tree)
+        restored, got_step = restore_checkpoint(d, template)
+        assert got_step == step
+    assert (jax.tree_util.tree_structure(restored)
+            == jax.tree_util.tree_structure(tree))
+    for got, want in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        assert got.dtype == want.dtype
+        assert got.shape == want.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(epoch=st.integers(0, 1000), stream_step=st.integers(0, 10**6),
+       rng_hi=st.integers(0, 2**31 - 1))
+def test_metadata_roundtrips_in_same_file(epoch, stream_step, rng_hi):
+    """Host-side loop counters (epoch, stream position, rng key) ride in
+    the same atomic checkpoint file and come back exactly."""
+    meta = {"epoch": epoch, "stream_step": stream_step, "rng": [rng_hi, 7],
+            "schedule": "allreduce"}
+    tree = {"w": jnp.arange(4.0)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, epoch, tree, metadata=meta)
+        _, step, got = restore_with_metadata(d, {"w": jnp.zeros(4)})
+        assert step == epoch
+        assert got == meta
+        assert load_metadata(d) == meta
+
+
+@settings(max_examples=20, deadline=None)
+@given(steps=st.lists(st.integers(0, 500), min_size=1, max_size=6),
+       junk_step=st.integers(501, 999))
+def test_latest_step_ignores_tmp_and_foreign_files(steps, junk_step):
+    """A kill mid-write leaves ``.tmp`` partials behind; they and any
+    non-checkpoint files must never be picked up as the latest snapshot."""
+    tree = {"w": jnp.zeros(2)}
+    with tempfile.TemporaryDirectory() as d:
+        for s in steps:
+            save_checkpoint(d, s, tree)
+        # dead partial from a killed write, with a HIGHER step than any real
+        # checkpoint, plus assorted non-checkpoint files
+        open(os.path.join(d, f"step_{junk_step}.npz.tmp"), "wb").close()
+        open(os.path.join(d, "notes.txt"), "w").close()
+        open(os.path.join(d, "xstep_7777.npz"), "wb").close()
+        open(os.path.join(d, "step_.npz"), "wb").close()
+        assert latest_step(d) == max(steps)
+        restored, got = restore_checkpoint(d, {"w": jnp.ones(2)})
+        assert got == max(steps)
+
+
+def test_latest_step_empty_and_missing(tmp_ckpt_dir):
+    assert latest_step(tmp_ckpt_dir) is None
+    assert latest_step(os.path.join(tmp_ckpt_dir, "nope")) is None
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(tmp_ckpt_dir, {"w": jnp.zeros(1)})
+
+
+def test_mismatched_tree_raises_with_key_names(tmp_ckpt_dir):
+    save_checkpoint(tmp_ckpt_dir, 1, {"w": jnp.zeros(3), "b": jnp.zeros(1)})
+    with pytest.raises(ValueError) as ei:
+        restore_checkpoint(tmp_ckpt_dir, {"w": jnp.zeros(3),
+                                          "extra_moment": jnp.zeros(3)})
+    msg = str(ei.value)
+    # the error must name both directions of the mismatch
+    assert "extra_moment" in msg and "b" in msg
+
+
+def test_bf16_dtype_survives_numpy_npz(tmp_ckpt_dir):
+    """The exact regression the dtype record exists for: numpy round-trips
+    bfloat16 as a raw void array; restore must reinterpret it."""
+    w = jnp.asarray(np.arange(6).reshape(2, 3), jnp.bfloat16)
+    save_checkpoint(tmp_ckpt_dir, 0, {"w": w})
+    restored, _ = restore_checkpoint(tmp_ckpt_dir, {"w": jnp.zeros((2, 3),
+                                                                   jnp.bfloat16)})
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(w, np.float32))
+
+
+def test_keep_prunes_all_but_newest(tmp_ckpt_dir):
+    tree = {"w": jnp.zeros(2)}
+    for s in range(1, 6):
+        save_checkpoint(tmp_ckpt_dir, s, tree, keep=2)
+    steps = sorted(int(f.split("_")[1].split(".")[0])
+                   for f in os.listdir(tmp_ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    assert steps == [4, 5]
+    with pytest.raises(ValueError):
+        prune_checkpoints(tmp_ckpt_dir, 0)
+
+
+def test_restore_selects_requested_step(tmp_ckpt_dir):
+    for s in (1, 2, 3):
+        save_checkpoint(tmp_ckpt_dir, s, {"w": jnp.full(2, float(s))})
+    restored, step = restore_checkpoint(tmp_ckpt_dir, {"w": jnp.zeros(2)},
+                                        step=2)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["w"]), [2.0, 2.0])

@@ -6,11 +6,6 @@ logistic regression and k-means on a real multi-device CPU mesh
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), plus the
 partition-layer round-trip property and the runner's emulated-mode
 semantics."""
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,8 +16,7 @@ from repro.core import partition as pt
 from repro.core.collectives import CollectiveSchedule
 from repro.core.numeric_table import MLNumericTable
 from repro.core.runner import DistributedRunner
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.data import BatchIterator
 
 # --------------------------------------------------------------------------- #
 # schedule agreement on a real 8-device mesh (paper §IV-A)
@@ -85,19 +79,12 @@ print("RESULT::" + json.dumps(drift))
 """
 
 
-def test_schedules_agree_on_8_device_mesh():
+def test_schedules_agree_on_8_device_mesh(eight_device_run):
     """All three schedules must train identical logreg, kmeans, and ALS
     models on an 8-way data-parallel mesh — the runner makes the schedule a
     pure wire-pattern knob — and mesh-mode combine="concat" must reassemble
     partitioned rows exactly under every schedule."""
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    out = subprocess.run([sys.executable, "-c", _MESH_AGREEMENT_PROGRAM],
-                         capture_output=True, text=True, env=env,
-                         timeout=540, cwd=REPO)
-    assert out.returncode == 0, out.stderr[-2000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT::")][-1]
-    drift = json.loads(line[len("RESULT::"):])
+    drift = eight_device_run(_MESH_AGREEMENT_PROGRAM)
     for key, d in drift.items():
         assert d < 1e-5, f"{key}: schedules disagree by {d}"
 
@@ -191,6 +178,140 @@ class TestRunRounds:
         for sched in ("allreduce", "gather_broadcast", "reduce_scatter"):
             runner = DistributedRunner.for_table(t, schedule=sched)
             assert runner.schedule is CollectiveSchedule.parse(sched)
+
+
+# --------------------------------------------------------------------------- #
+# streaming mode (emulated partitions; mesh + kill behavior is covered by
+# tests/test_streaming_resume.py subprocesses)
+# --------------------------------------------------------------------------- #
+def _window_source(rows, cols, base_seed=7):
+    def source(step):
+        srng = np.random.default_rng(base_seed + step)
+        return {"data": srng.normal(size=(rows, cols)).astype(np.float32)}
+    return source
+
+
+class TestRunEpochs:
+    def test_constant_stream_matches_run_rounds(self, rng):
+        """A stream that replays the resident table every epoch with one
+        chunk per epoch is mathematically run_rounds — the streaming loop
+        must reproduce it exactly."""
+        X = np.asarray(rng.normal(size=(32, 3)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        runner = DistributedRunner.for_table(t)
+
+        def local_step(block, s, r):
+            return s + jnp.mean(block, axis=0) / (1.0 + r)
+
+        resident = runner.run_rounds(t, jnp.zeros(3), local_step, 5,
+                                     combine="mean")
+        stream = BatchIterator(lambda step: {"data": X})
+        streamed = runner.run_epochs(stream, jnp.zeros(3), local_step, 5,
+                                     combine="mean")
+        np.testing.assert_array_equal(np.asarray(streamed),
+                                      np.asarray(resident))
+        assert stream.step == 5
+
+    def test_chunks_split_the_window_in_order(self, rng):
+        """With chunks_per_epoch=c, round r must see the window's (r%c)-th
+        row chunk of every partition, in order: weight each round's
+        contribution by its round index and compare to the same walk done
+        in numpy."""
+        X = np.asarray(rng.normal(size=(16, 2)), np.float32)
+        runner = DistributedRunner(num_shards=2)
+        stream = BatchIterator(lambda step: {"data": X})
+        got = runner.run_epochs(
+            stream, jnp.zeros(2),
+            lambda b, s, r: s + (r + 1.0) * jnp.sum(b, axis=0), 1,
+            combine="mean", chunks_per_epoch=4)
+        # shards of 8 rows, chunks of 2 rows: round r sees rows
+        # [shard*8 + 2r, shard*8 + 2r+2) of each shard
+        shards = X.reshape(2, 8, 2)
+        expect = np.zeros(2, np.float32)
+        for r in range(4):
+            chunk_sums = shards[:, 2 * r: 2 * r + 2].sum(axis=1)  # (2, 2)
+            expect = expect + (r + 1.0) * chunk_sums.mean(axis=0)
+        np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-5)
+
+    def test_checkpoint_cadence_and_metadata(self, tmp_ckpt_dir):
+        from repro.checkpoint import latest_step, load_metadata
+        from repro.core.runner import CheckpointPolicy
+
+        runner = DistributedRunner(num_shards=2)
+        stream = BatchIterator(_window_source(8, 2))
+        runner.run_epochs(stream, jnp.zeros(2),
+                          lambda b, s, r: s + jnp.mean(b, 0), 5,
+                          combine="mean", chunks_per_epoch=2,
+                          checkpoint=CheckpointPolicy(tmp_ckpt_dir,
+                                                      every_epochs=2))
+        # epochs 2, 4 on cadence plus the final state at 5
+        assert latest_step(tmp_ckpt_dir) == 5
+        meta = load_metadata(tmp_ckpt_dir, step=4)
+        assert meta["epoch"] == 4 and meta["stream_step"] == 4
+        assert meta["chunks_per_epoch"] == 2 and meta["num_shards"] == 2
+        assert meta["schedule"] == "allreduce"
+
+    def test_resume_rejects_mismatched_layout(self, tmp_ckpt_dir):
+        from repro.core.runner import CheckpointPolicy
+
+        step = lambda b, s, r: s + jnp.mean(b, 0)
+        runner = DistributedRunner(num_shards=2)
+        runner.run_epochs(BatchIterator(_window_source(8, 2)), jnp.zeros(2),
+                          step, 2, checkpoint=CheckpointPolicy(tmp_ckpt_dir))
+        with pytest.raises(ValueError, match="num_shards"):
+            DistributedRunner(num_shards=4).resume(
+                tmp_ckpt_dir, BatchIterator(_window_source(8, 2)),
+                jnp.zeros(2), step, 4)
+        with pytest.raises(ValueError, match="schedule"):
+            DistributedRunner(num_shards=2, schedule="reduce_scatter").resume(
+                tmp_ckpt_dir, BatchIterator(_window_source(8, 2)),
+                jnp.zeros(2), step, 4)
+        with pytest.raises(ValueError, match="chunks_per_epoch"):
+            runner.resume(tmp_ckpt_dir, BatchIterator(_window_source(8, 2)),
+                          jnp.zeros(2), step, 4, chunks_per_epoch=8)
+
+    def test_resume_past_target_returns_snapshot(self, tmp_ckpt_dir):
+        from repro.core.runner import CheckpointPolicy
+
+        step = lambda b, s, r: s + jnp.mean(b, 0)
+        runner = DistributedRunner(num_shards=2)
+        final = runner.run_epochs(BatchIterator(_window_source(8, 2)),
+                                  jnp.zeros(2), step, 3,
+                                  checkpoint=CheckpointPolicy(tmp_ckpt_dir))
+        again = runner.resume(tmp_ckpt_dir, BatchIterator(_window_source(8, 2)),
+                              jnp.zeros(2), step, 3)
+        np.testing.assert_array_equal(np.asarray(again), np.asarray(final))
+
+    def test_apply_stream_forwards_chunk_mismatch_on_resume(self, tmp_ckpt_dir):
+        """The high-level streaming APIs must surface the checkpoint's
+        chunk-layout cross-check, not swallow the caller's value."""
+        from repro.core.optimizer import MinibatchSGD, MinibatchSGDParameters
+        from repro.core.runner import CheckpointPolicy
+
+        p = MinibatchSGDParameters(
+            w_init=jnp.zeros(2),
+            grad=lambda vec, w: vec[1:] * (jnp.dot(vec[1:], w) - vec[0]))
+        opt = MinibatchSGD(p)
+        ck = CheckpointPolicy(tmp_ckpt_dir)
+        opt.apply_stream(BatchIterator(_window_source(8, 3)), 2, num_shards=2,
+                         chunks_per_epoch=2, checkpoint=ck)
+        with pytest.raises(ValueError, match="chunks_per_epoch"):
+            opt.apply_stream(BatchIterator(_window_source(8, 3)), 4,
+                             num_shards=2, chunks_per_epoch=4, checkpoint=ck,
+                             resume=True)
+        # omitting the value inherits the checkpointed layout
+        opt.apply_stream(BatchIterator(_window_source(8, 3)), 4, num_shards=2,
+                         checkpoint=ck, resume=True)
+
+    def test_rejects_bad_windows(self):
+        runner = DistributedRunner(num_shards=4)
+        step = lambda b, s, r: s
+        with pytest.raises(ValueError, match="divide"):
+            runner.run_epochs(BatchIterator(_window_source(10, 2)),
+                              jnp.zeros(2), step, 1)
+        with pytest.raises(ValueError, match="chunks_per_epoch"):
+            runner.run_epochs(BatchIterator(_window_source(16, 2)),
+                              jnp.zeros(2), step, 1, chunks_per_epoch=3)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,213 @@
+"""Kill-and-resume equivalence on a real 8-device mesh.
+
+Three subprocesses per scenario:
+
+  1. **straight** — stream-train logreg, MinibatchSGD, and k-means for E
+     epochs under all three collective schedules; print final models.
+  2. **killed** — same runs with `CheckpointPolicy(every_epochs=1)`, but
+     each stopped at E/2 — and the process is genuinely SIGKILLed
+     mid-training-loop (an uncatchable preemption, delivered when the
+     stream is asked for the next window), leaving only the on-disk
+     snapshots behind.
+  3. **resumed** — fresh process, `resume()` from each checkpoint dir
+     (littered with `.tmp` partials and foreign files first), continue to
+     E epochs; print final models and stream positions.
+
+The resumed models must match the uninterrupted ones to fp tolerance
+(they are bit-for-bit on the same mesh: same compiled program, same
+state), and every stream must land exactly at step E.
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from conftest import result_json, run_devices_subprocess
+
+pytestmark = pytest.mark.skipif(not hasattr(signal, "SIGKILL"),
+                                reason="POSIX-only kill semantics")
+
+E, HALF = 4, 2
+
+_COMMON = """
+import json, os, signal
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core.compat import make_mesh
+from repro.core.runner import CheckpointPolicy
+from repro.core.collectives import CollectiveSchedule
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm, LogisticRegressionParameters)
+from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+from repro.core.optimizer import MinibatchSGD, MinibatchSGDParameters
+from repro.data import BatchIterator
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = make_mesh((8,), ("data",))
+ROWS, D, E, HALF, CHUNKS = 128, 8, %(E)d, %(HALF)d, 2
+
+
+def clf_source(step):
+    rng = np.random.default_rng(1000 + step)
+    w = np.linspace(-1, 1, D).astype(np.float32)
+    X = rng.normal(size=(ROWS, D)).astype(np.float32)
+    y = (X @ w > 0).astype(np.float32)
+    return {"data": np.concatenate([y[:, None], X], 1).astype(np.float32)}
+
+
+def reg_source(step):
+    rng = np.random.default_rng(2000 + step)
+    w = np.arange(1, D + 1, dtype=np.float32) / D
+    X = rng.normal(size=(ROWS, D)).astype(np.float32)
+    return {"data": np.concatenate([(X @ w)[:, None], X], 1)}
+
+
+def km_source(step):
+    rng = np.random.default_rng(3000 + step)
+    centers = np.stack([np.full(D, -2.0), np.zeros(D), np.full(D, 2.0),
+                        np.linspace(-3, 3, D)]).astype(np.float32)
+    idx = rng.integers(0, 4, size=ROWS)
+    return {"data": (centers[idx]
+                     + 0.3 * rng.normal(size=(ROWS, D))).astype(np.float32)}
+
+
+def linreg_grad(vec, w):
+    x = vec[1:]
+    return x * (jnp.dot(x, w) - vec[0])
+
+
+class PreemptedIterator(BatchIterator):
+    '''Delivers an uncatchable SIGKILL instead of the batch at kill_step —
+    a deterministic stand-in for a pod preemption.'''
+
+    def __init__(self, source, mesh, kill_step):
+        super().__init__(source, mesh)
+        self.kill_step = kill_step
+
+    def __next__(self):
+        if self.step == self.kill_step:
+            os.kill(os.getpid(), signal.SIGKILL)
+        return super().__next__()
+
+
+SOURCES = {"logreg": clf_source, "minibatch": reg_source, "kmeans": km_source}
+
+
+def train(algo, sched, num_epochs, ckpt=None, resume=False, kill_step=None):
+    source = SOURCES[algo]
+    if kill_step is None:
+        stream = BatchIterator(source, mesh=mesh)
+    else:
+        stream = PreemptedIterator(source, mesh, kill_step)
+    if algo == "logreg":
+        p = LogisticRegressionParameters(learning_rate=0.3,
+                                         local_batch_size=8, schedule=sched)
+        m = LogisticRegressionAlgorithm.train_stream(
+            stream, p, num_epochs=num_epochs, chunks_per_epoch=CHUNKS,
+            checkpoint=ckpt, resume=resume)
+        return np.asarray(m.weights), stream
+    if algo == "minibatch":
+        p = MinibatchSGDParameters(w_init=jnp.zeros(D), grad=linreg_grad,
+                                   learning_rate=0.05, schedule=sched)
+        w = MinibatchSGD(p).apply_stream(stream, num_epochs,
+                                         chunks_per_epoch=CHUNKS,
+                                         checkpoint=ckpt, resume=resume)
+        return np.asarray(w), stream
+    p = KMeansParameters(k=4, seed=0, schedule=sched)
+    m = KMeans.train_stream(stream, p, num_epochs=num_epochs,
+                            chunks_per_epoch=CHUNKS, checkpoint=ckpt,
+                            resume=resume)
+    return np.asarray(m.centroids), stream
+
+
+COMBOS = [(a, s) for a in ("logreg", "minibatch", "kmeans")
+          for s in CollectiveSchedule]
+""" % {"E": E, "HALF": HALF}
+
+_PROG_STRAIGHT = _COMMON + """
+out = {}
+for algo, sched in COMBOS:
+    w, _ = train(algo, sched, E)
+    out[algo + "/" + sched.value] = w.tolist()
+print("RESULT::" + json.dumps(out))
+"""
+
+_PROG_KILLED = _COMMON + """
+base = os.environ["CKPT_BASE"]
+for i, (algo, sched) in enumerate(COMBOS):
+    ck = CheckpointPolicy(os.path.join(base, algo + "-" + sched.value),
+                          every_epochs=1)
+    if i < len(COMBOS) - 1:
+        # preempted later (process-wide); each run leaves snapshots 1..HALF
+        train(algo, sched, HALF, ckpt=ck)
+    else:
+        # the preemption itself: SIGKILL when the stream is asked for the
+        # window of epoch HALF — the snapshot at HALF is already on disk
+        train(algo, sched, E, ckpt=ck, kill_step=HALF)
+raise SystemExit("unreachable: the SIGKILL above must fire")
+"""
+
+_PROG_RESUME = _COMMON + """
+base = os.environ["CKPT_BASE"]
+out = {"weights": {}, "stream_steps": {}, "latest": {}}
+from repro.checkpoint import latest_step
+for algo, sched in COMBOS:
+    d = os.path.join(base, algo + "-" + sched.value)
+    # debris a real preemption could leave: a dead partial write and an
+    # operator's stray file — resume must see through both
+    open(os.path.join(d, "step_99.npz.tmp"), "wb").close()
+    with open(os.path.join(d, "notes.txt"), "w") as f:
+        f.write("preempted here")
+    ck = CheckpointPolicy(d, every_epochs=1)
+    w, stream = train(algo, sched, E, ckpt=ck, resume=True)
+    key = algo + "/" + sched.value
+    out["weights"][key] = w.tolist()
+    out["stream_steps"][key] = stream.step
+    out["latest"][key] = latest_step(d)
+print("RESULT::" + json.dumps(out))
+"""
+
+
+def test_kill_and_resume_matches_uninterrupted_run(tmp_path):
+    """3 algorithms x 3 schedules: a run SIGKILLed at E/2 and resumed from
+    its checkpoints must produce the same model as the uninterrupted run."""
+    straight = result_json(run_devices_subprocess(_PROG_STRAIGHT))
+
+    killed = run_devices_subprocess(_PROG_KILLED, check=False,
+                                    env={"CKPT_BASE": str(tmp_path)})
+    assert killed.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL death, got rc={killed.returncode}\n"
+        f"{killed.stderr[-2000:]}")
+
+    resumed = result_json(run_devices_subprocess(
+        _PROG_RESUME, env={"CKPT_BASE": str(tmp_path)}))
+
+    assert set(resumed["weights"]) == set(straight)
+    for key, want in straight.items():
+        np.testing.assert_allclose(
+            np.asarray(resumed["weights"][key]), np.asarray(want),
+            rtol=0, atol=1e-6,
+            err_msg=f"{key}: resumed model diverged from uninterrupted run")
+        # the stream was fast-forwarded to exactly the checkpointed position
+        # and then consumed the remaining epochs
+        assert resumed["stream_steps"][key] == E, key
+        # resume continued checkpointing to the same dir
+        assert resumed["latest"][key] == E, key
+
+
+def test_fit_cli_checkpoints_and_resumes(tmp_path):
+    """The launcher surface: a run that checkpoints, then a --resume
+    relaunch that continues from the snapshot instead of restarting."""
+    common = ("--algorithm kmeans --rows-per-epoch 32 --features 4 "
+              "--chunks-per-epoch 2 --num-shards 2 "
+              f"--ckpt-dir {tmp_path / 'ck'}")
+    prog = ("import repro.launch.fit as fit\n"
+            "fit.main({args!r}.split())\n")
+    first = run_devices_subprocess(
+        prog.format(args=f"{common} --epochs 2"), devices=1)
+    assert "starting fresh" not in first.stdout
+    second = run_devices_subprocess(
+        prog.format(args=f"{common} --epochs 4 --resume"), devices=1)
+    assert "resuming from step 2" in second.stdout
+    assert "stream position: step 4" in second.stdout
