@@ -1,0 +1,104 @@
+"""Device-stacked vs sequential model-search throughput (docs/benchmarks.md).
+
+One grid of logistic-regression configs (learning rate × L2), trained to
+completion two ways through the same :class:`repro.tune.ModelSearch` on a
+real multi-device mesh (subprocess — the device count must be fixed before
+jax initializes):
+
+  * **sequential** — one execution unit per config: every trial pays its
+    own epoch dispatches, collectives, and scoring pass (the "six
+    single-model trainers" baseline this subsystem replaces);
+  * **stacked** — all same-shape configs vmapped over a leading trial
+    axis: ONE jitted epoch and ONE collective per round advance the whole
+    grid, and one shard-aware metrics pass scores it.
+
+Timing accounting: each measured run is a FRESH ``ModelSearch`` (its own
+runner, its own jit closures), so ``seconds`` is the full one-shot search
+wall time *including* trace/compile — the cost a user actually pays, since
+a given search is typically run once.  Both modes pay their own
+trace/compile under identical rules; the stacked side's smaller bill
+(1 compiled epoch for the whole grid vs. per-unit dispatch overheads ×
+K trials) is part of the design being measured, not an artifact.
+
+The reported ``trials_per_sec`` ratio is the claim of the tune subsystem:
+searching K models costs far less than K single-model runs.  The
+acceptance bar (ISSUE 3) is stacked ≥ 2× sequential; the CPU container
+typically shows 4–8×.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks._util import emit, run_with_devices
+
+DEVICES = 8
+ROWS = 512
+D = 32
+EPOCHS = 6
+CHUNKS = 4
+GRID = {"learning_rate": [0.05, 0.1, 0.2, 0.3], "l2": [0.0, 0.01]}
+
+
+def _worker() -> None:
+    import time
+
+    import numpy as np
+
+    from repro.core.compat import make_mesh
+    from repro.core.numeric_table import MLNumericTable
+    from repro.tune import ModelSearch, grid
+
+    import jax
+
+    devices = len(jax.devices())
+    mesh = make_mesh((devices,), ("data",))
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(ROWS, D)).astype(np.float32)
+    w = np.linspace(-1, 1, D).astype(np.float32)
+    y = (X @ w > 0).astype(np.float32)
+    table = MLNumericTable.from_numpy(np.concatenate([y[:, None], X], 1),
+                                      mesh=mesh)
+    configs = grid(GRID)
+
+    def run_search(mode: str) -> float:
+        search = ModelSearch("logreg", configs, num_epochs=EPOCHS,
+                             chunks_per_epoch=CHUNKS, folds=None,
+                             execution=mode, seed=0)
+        t0 = time.perf_counter()
+        search.run(table)
+        return time.perf_counter() - t0
+
+    rows_out = []
+    times = {}
+    for mode in ("sequential", "stacked"):
+        # one discarded run settles allocator/XLA autotuning state; each
+        # measured run is a fresh search and pays its own trace+compile
+        # (see module docstring — that IS the one-shot search cost)
+        run_search(mode)
+        t = min(run_search(mode) for _ in range(2))
+        times[mode] = t
+        rows_out.append({"mode": mode, "trials": len(configs),
+                         "seconds": round(t, 3),
+                         "trials_per_sec": round(len(configs) / t, 2)})
+    rows_out.append({"mode": "speedup",
+                     "stacked_over_sequential":
+                         round(times["sequential"] / times["stacked"], 2)})
+    print(json.dumps({"devices": devices, "rows": rows_out}))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args()
+    if args._worker:
+        _worker()
+        return
+
+    res = run_with_devices("benchmarks.model_search", DEVICES, {})
+    emit("model_search", res["rows"])
+
+
+if __name__ == "__main__":
+    main()

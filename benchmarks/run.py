@@ -8,6 +8,10 @@
   collective_schedules  §IV-A  MLI gather-broadcast vs VW allreduce
   kernel_bench          (beyond paper)  kernel traffic models
   roofline              (beyond paper)  per-arch dry-run roofline table
+  model_search          (beyond paper)  stacked vs sequential trials/sec
+
+(streaming_throughput and model_search can also run standalone:
+``python -m benchmarks.<name>``.)
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (als_scaling, collective_schedules, kernel_bench,
-                            loc_table, logreg_scaling, roofline)
+                            loc_table, logreg_scaling, model_search, roofline)
 
     devices = "1,2,4" if args.fast else "1,2,4,8"
     jobs = [
@@ -35,6 +39,7 @@ def main() -> None:
         ("collective_schedules", collective_schedules.main, []),
         ("kernel_bench", kernel_bench.main, []),
         ("roofline", roofline.main, []),
+        ("model_search", model_search.main, []),
     ]
     failures = 0
     for name, fn, argv in jobs:

@@ -110,6 +110,18 @@ def _local_als(block: jnp.ndarray, Y: jnp.ndarray, lam: float) -> jnp.ndarray:
     return jax.vmap(solve_row)(idx, val, msk)                # (rows, k)
 
 
+def _local_als_stacked(block: jnp.ndarray, Ys: jnp.ndarray,
+                       lams: jnp.ndarray) -> jnp.ndarray:
+    """K stacked half-sweep solves: ``Ys`` is (K, n, rank), ``lams`` (K,).
+    The K normal-equation solves vmap over the trial axis; the result is
+    returned **rows-major** (rows, K, rank) so the per-partition blocks
+    concatenate over the row axis — ``combine="concat"`` then broadcasts
+    all K completed factors with one collective, exactly as it broadcasts
+    one factor in the single-model sweep."""
+    out = jax.vmap(lambda Y, lam: _local_als(block, Y, lam))(Ys, lams)
+    return jnp.moveaxis(out, 0, 1)                           # (rows, K, rank)
+
+
 class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
     """train(packed_ratings, packed_ratings_T, params) -> (U, V) model."""
 
@@ -167,3 +179,65 @@ class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
 
         U, V = run(data.data, data_transposed.data, U, V)
         return MatrixFactorizationModel(U, V, p)
+
+    @classmethod
+    def train_stacked(cls, data: MLNumericTable,
+                      params_list: list,
+                      data_transposed: MLNumericTable,
+                      ) -> list:
+        """Trial-stackable ALS: factor the SAME ratings under K parameter
+        configurations at once (model search over ``lam`` / ``seed``).
+
+        The K regularizers ride as a traced (K,) vector and the factors
+        carry a leading trial axis — each half-sweep runs all K
+        normal-equation solves in one vmapped ``partition_apply`` and
+        re-broadcasts all K completed factors with ONE ``combine="concat"``
+        collective (trial axis packed behind the row axis, so the Fig. A9
+        wire pattern is unchanged).  ``rank`` and ``max_iter`` must agree
+        across configs (they set the compiled loop structure); ragged
+        configs belong in separate calls.  Returns one
+        :class:`MatrixFactorizationModel` per config, each matching its
+        sequentially-trained twin to fp tolerance
+        (``tests/test_tune.py``).
+        """
+        ps = [p or cls.default_parameters() for p in params_list]
+        if not ps:
+            raise ValueError("params_list must not be empty")
+        for field in ("rank", "max_iter"):
+            vals = {getattr(p, field) for p in ps}
+            if len(vals) > 1:
+                raise ValueError(
+                    f"stacked ALS trials must share {field}, got {sorted(vals)}"
+                    f" — run ragged configs in separate calls")
+        p0 = ps[0]
+        m, n = data.num_rows, data_transposed.num_rows
+        lams = jnp.asarray([p.lam for p in ps], jnp.float32)
+        inits = []
+        for p in ps:
+            key_u, key_v = jax.random.split(jax.random.PRNGKey(p.seed))
+            inits.append((jax.random.uniform(key_u, (m, p0.rank), jnp.float32),
+                          jax.random.uniform(key_v, (n, p0.rank), jnp.float32)))
+        U0 = jnp.stack([u for u, _ in inits])                 # (K, m, rank)
+        V0 = jnp.stack([v for _, v in inits])                 # (K, n, rank)
+
+        runner = DistributedRunner.for_table(data, schedule=p0.schedule)
+
+        def half_sweep(ratings: jnp.ndarray, fixed: jnp.ndarray) -> jnp.ndarray:
+            rows_major = runner.partition_apply(
+                ratings, _local_als_stacked, (fixed, lams), combine="concat")
+            return jnp.moveaxis(rows_major, 1, 0)             # (K, rows, rank)
+
+        @jax.jit
+        def run(data_arr, dataT_arr, U0, V0):
+            def body(carry, _):
+                U, V = carry
+                U = half_sweep(data_arr, V)
+                V = half_sweep(dataT_arr, U)
+                return (U, V), None
+
+            (U1, V1), _ = jax.lax.scan(body, (U0, V0), None, length=p0.max_iter)
+            return U1, V1
+
+        U, V = run(data.data, data_transposed.data, U0, V0)
+        return [MatrixFactorizationModel(U[i], V[i], ps[i])
+                for i in range(len(ps))]

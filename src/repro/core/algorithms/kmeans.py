@@ -59,6 +59,41 @@ def _local_stats(block: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([sums, counts], axis=1)
 
 
+def _centroid_update(centroids: jnp.ndarray, tot: jnp.ndarray) -> jnp.ndarray:
+    """Rebuild centroids from combined (sums | counts) statistics; empty
+    clusters keep their previous centroid.  The single copy of the Lloyd
+    update rule — resident, streaming, and trial-stacked paths all call
+    it, so the empty-cluster policy can never diverge between them."""
+    d = centroids.shape[1]
+    sums, counts = tot[:, :d], tot[:, d]
+    return jnp.where(counts[:, None] > 0,
+                     sums / jnp.maximum(counts[:, None], 1.0),
+                     centroids)
+
+
+# --------------------------------------------------------------------------- #
+# trial-stackable form (model search; repro.tune)
+# --------------------------------------------------------------------------- #
+def _trial_stats(block: jnp.ndarray, centroids: jnp.ndarray, r: jnp.ndarray,
+                 hyper: dict) -> jnp.ndarray:
+    """Lloyd assignment statistics in trial form — k-means has no
+    continuous hyperparameters, so ``hyper`` is empty and trials differ
+    only in their seeded centroid init (and ``k``, which rides in the
+    stack key)."""
+    return _local_stats(block, centroids)
+
+
+def _trial_update(centroids: jnp.ndarray, tot: jnp.ndarray, r: jnp.ndarray,
+                  hyper: dict) -> jnp.ndarray:
+    return _centroid_update(centroids, tot)
+
+
+def _silhouette_score(val_table, centroids, schedule):
+    from repro.eval import metrics as M
+
+    return M.silhouette_lite(val_table, centroids, schedule=schedule)
+
+
 class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
     @classmethod
     def default_parameters(cls) -> KMeansParameters:
@@ -68,7 +103,6 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
     def train(cls, data: MLNumericTable,
               params: Optional[KMeansParameters] = None) -> KMeansModel:
         p = params or cls.default_parameters()
-        d = data.num_cols
         n = data.num_rows
         if p.k > n:
             raise ValueError("k exceeds number of rows")
@@ -81,15 +115,41 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
             return _local_stats(block, centroids)
 
         def update(centroids, tot, r):
-            sums, counts = tot[:, :d], tot[:, d]
-            return jnp.where(counts[:, None] > 0,
-                             sums / jnp.maximum(counts[:, None], 1.0),
-                             centroids)
+            return _centroid_update(centroids, tot)
 
         runner = DistributedRunner.for_table(data, schedule=p.schedule)
         centroids = runner.run_rounds(data, centroids, local_step, p.max_iter,
                                       combine="sum", update=update)
         return KMeansModel(centroids, p)
+
+    @classmethod
+    def trial_spec(cls, config: dict, metric: str = "silhouette"):
+        """One model-search trial (see :mod:`repro.tune`): search over
+        ``seed`` (restarts) and ``k``.  Same-``k`` trials share centroid
+        shapes and stack into one vmapped Lloyd round; different ``k``
+        configs are ragged (separate groups).  Scored with
+        :func:`repro.eval.metrics.silhouette_lite` on the validation view.
+        """
+        import dataclasses as _dc
+
+        from repro.tune.trials import TrialSpec
+
+        p = _dc.replace(cls.default_parameters(), **config)
+        if metric != "silhouette":
+            raise ValueError(f"unknown kmeans metric {metric!r} (silhouette)")
+
+        def init(table) -> jnp.ndarray:
+            if p.k > table.num_rows:
+                raise ValueError("k exceeds rows in the training view")
+            perm = jax.random.permutation(
+                jax.random.PRNGKey(p.seed), table.num_rows)[: p.k]
+            return jnp.take(table.data, perm, axis=0)
+
+        return TrialSpec(
+            config=dict(config), hyper={}, init=init,
+            local_step=_trial_stats, combine="sum", update=_trial_update,
+            stack_key=("kmeans", int(p.k)), score=_silhouette_score,
+            finalize=lambda c: KMeansModel(c, p))
 
     @classmethod
     def train_stream(cls, stream, params: Optional[KMeansParameters] = None, *,
@@ -120,16 +180,12 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
             if p.k > first.shape[0]:
                 raise ValueError("k exceeds rows in the first window")
             init_centroids = jnp.asarray(first[: p.k])
-        d = init_centroids.shape[1]
 
         def local_step(block, centroids, r):
             return _local_stats(block, centroids)
 
         def update(centroids, tot, r):
-            sums, counts = tot[:, :d], tot[:, d]
-            return jnp.where(counts[:, None] > 0,
-                             sums / jnp.maximum(counts[:, None], 1.0),
-                             centroids)
+            return _centroid_update(centroids, tot)
 
         runner = DistributedRunner(mesh=getattr(stream, "mesh", None),
                                    num_shards=num_shards, schedule=p.schedule)

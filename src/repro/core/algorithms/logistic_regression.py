@@ -28,6 +28,7 @@ from repro.core.optimizer import (
     GradientDescentParameters,
     StochasticGradientDescent,
     StochasticGradientDescentParameters,
+    sgd_trial_round,
     soft_threshold,
 )
 
@@ -94,6 +95,57 @@ def _make_gradient(p: LogisticRegressionParameters):
     return gradient
 
 
+# --------------------------------------------------------------------------- #
+# trial-stackable form (model search; repro.tune)
+# --------------------------------------------------------------------------- #
+def _hyper_gradient(vec: jnp.ndarray, w: jnp.ndarray, hyper: dict) -> jnp.ndarray:
+    """The paper's gradient closure with L2 as a traced hyperparameter —
+    ``l2 = 0`` adds an exact zero, so regularized and unregularized
+    configs share one compiled round."""
+    x = vec[1:]
+    return x * (sigmoid(jnp.dot(x, w)) - vec[0]) + hyper["l2"] * w
+
+
+# one shared local round per local_batch_size: every trial of a stack group
+# (and every fold/rung segment) reuses the same function object, so the
+# runner's compiled-epoch cache hits instead of retracing
+_TRIAL_ROUNDS: dict = {}
+
+
+def _trial_round(local_batch_size: int):
+    if local_batch_size not in _TRIAL_ROUNDS:
+        _TRIAL_ROUNDS[local_batch_size] = sgd_trial_round(
+            _hyper_gradient, local_batch_size)
+    return _TRIAL_ROUNDS[local_batch_size]
+
+
+_SCORERS: dict = {}
+
+
+def _scorer(metric: str):
+    """(val_table, stacked_W, schedule) -> (K,) higher-is-better scores,
+    one shard-aware pass for the whole stack (repro.eval.metrics)."""
+    if metric in _SCORERS:
+        return _SCORERS[metric]
+    from repro.eval import metrics as M
+
+    if metric == "accuracy":
+        def score(val_table, W, schedule):
+            return M.accuracy(
+                val_table,
+                lambda X: (sigmoid(X @ W.T).T > 0.5).astype(jnp.float32),
+                schedule=schedule)
+    elif metric == "log_loss":
+        def score(val_table, W, schedule):
+            return -M.log_loss(val_table, lambda X: sigmoid(X @ W.T).T,
+                               schedule=schedule)
+    else:
+        raise ValueError(
+            f"unknown logreg metric {metric!r} (accuracy | log_loss)")
+    _SCORERS[metric] = score
+    return score
+
+
 class LogisticRegressionAlgorithm(
     NumericAlgorithm[LogisticRegressionParameters, LogisticRegressionModel]
 ):
@@ -123,6 +175,47 @@ class LogisticRegressionAlgorithm(
                 lr_decay=p.lr_decay))
         weights = opt.apply(data, None)
         return LogisticRegressionModel(p, weights)
+
+    @classmethod
+    def trial_spec(cls, config: dict, metric: str = "accuracy"):
+        """One model-search trial (see :mod:`repro.tune`): ``config``
+        overrides :class:`LogisticRegressionParameters` fields, and every
+        continuous hyperparameter (``learning_rate``, ``l2``, ``l1``,
+        ``lr_decay``) becomes a *traced* value in the trial's hyper pytree
+        — so a grid over regularization × step size stacks into one
+        compiled round per K configs.  ``local_batch_size`` changes the
+        compiled fold structure and therefore rides in the stack key
+        (configs differing there run in separate groups).  Only the paper
+        ``"sgd"`` solver is searchable (full-batch GD is a resident-table
+        method with a different update structure).
+        """
+        import dataclasses as _dc
+
+        from repro.tune.trials import TrialSpec
+
+        p = _dc.replace(cls.default_parameters(), **config)
+        if p.solver != "sgd":
+            raise ValueError(
+                f"model search supports solver='sgd' only, got {p.solver!r}")
+        if p.use_kernel:
+            raise ValueError("model search does not stack the Pallas-kernel "
+                             "gradient (its L2 term is not hyper-traced)")
+        hyper = {
+            "lr": jnp.asarray(p.learning_rate, jnp.float32),
+            "decay": jnp.asarray(p.lr_decay, jnp.float32),
+            "l1": jnp.asarray(p.l1, jnp.float32),
+            "l2": jnp.asarray(p.l2, jnp.float32),
+        }
+
+        def init(table) -> jnp.ndarray:
+            return jnp.zeros((table.num_cols - 1,), jnp.float32)
+
+        return TrialSpec(
+            config=dict(config), hyper=hyper, init=init,
+            local_step=_trial_round(p.local_batch_size), combine="mean",
+            stack_key=("logreg", "sgd", int(p.local_batch_size)),
+            score=_scorer(metric),
+            finalize=lambda w: LogisticRegressionModel(p, w))
 
     @classmethod
     def train_stream(cls, stream,

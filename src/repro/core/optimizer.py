@@ -45,12 +45,16 @@ __all__ = [
     "MinibatchSGDParameters",
     "MinibatchSGD",
     "soft_threshold",
+    "sgd_trial_round",
 ]
 
 # grad_fn(row_including_label, weights) -> gradient wrt weights  (paper Fig A4)
 GradFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # prox_fn(weights, step) -> weights  (proximal operator, e.g. L1 soft-threshold)
 ProxFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+# hyper_grad_fn(row, weights, hyper) -> gradient, reading traced
+# hyperparameters (e.g. hyper["l2"]) instead of baked-in Python constants
+HyperGradFn = Callable[[jnp.ndarray, jnp.ndarray, dict], jnp.ndarray]
 
 
 def soft_threshold(lam: float) -> ProxFn:
@@ -127,6 +131,56 @@ def _stream_fit(
                              combine="mean",
                              chunks_per_epoch=chunks_per_epoch or 1,
                              checkpoint=checkpoint)
+
+
+# --------------------------------------------------------------------------- #
+# trial-stackable SGD round (model search; repro.tune)
+# --------------------------------------------------------------------------- #
+def sgd_trial_round(grad: HyperGradFn, local_batch_size: int = 1):
+    """Trial-stackable twin of the Fig. A4 partition-local SGD pass.
+
+    Identical fold-over-rows structure to
+    :meth:`StochasticGradientDescent._local_round`, but every
+    hyperparameter is read from a *traced* ``hyper`` pytree instead of
+    being baked into the jit as a Python constant:
+
+      * ``hyper["lr"]`` / ``hyper["decay"]`` — per-round step size
+        ``lr * decay**r``;
+      * ``hyper["l1"]`` — L1 soft-threshold applied after every update
+        (``l1 = 0`` is the exact identity, so unregularized configs stack
+        with regularized ones);
+      * anything ``grad(vec, w, hyper)`` reads (e.g. ``hyper["l2"]``).
+
+    Because nothing config-specific is a compile-time constant, K configs
+    differing only in these values share ONE compiled round — the
+    device-stacked trial executor vmaps this function over the trial axis
+    (see :meth:`repro.core.runner.DistributedRunner.run_stacked_rounds`).
+    Returns ``local_round(block, w, r, hyper) -> w``.
+    """
+    bs = int(local_batch_size)
+
+    def local_round(block: jnp.ndarray, w: jnp.ndarray, r: jnp.ndarray,
+                    hyper: dict) -> jnp.ndarray:
+        rows = block.shape[0]
+        if rows % bs != 0:
+            raise ValueError(
+                f"rows-per-shard {rows} must be divisible by "
+                f"local_batch_size {bs}")
+        lr = hyper["lr"] * hyper["decay"] ** r
+        chunks = block.reshape(rows // bs, bs, block.shape[1])
+
+        def step(w, chunk):
+            g = jnp.mean(jax.vmap(grad, in_axes=(0, None, None))(chunk, w, hyper),
+                         axis=0)
+            w = w - lr * g
+            t = hyper["l1"] * lr
+            w = jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0)
+            return w, None
+
+        w, _ = jax.lax.scan(step, w, chunks)
+        return w
+
+    return local_round
 
 
 # --------------------------------------------------------------------------- #

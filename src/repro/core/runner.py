@@ -68,6 +68,11 @@ __all__ = ["CheckpointPolicy", "DistributedRunner"]
 LocalStep = Callable[[jnp.ndarray, Any, jnp.ndarray], Any]
 # update(state, combined, round_index) -> next state (defaults to `combined`)
 UpdateFn = Callable[[Any, Any, jnp.ndarray], Any]
+# trial_step(block, state, round_index, hyper) -> per-partition partial for ONE
+# trial; the stacked entry points vmap it over the trial axis
+TrialStep = Callable[[jnp.ndarray, Any, jnp.ndarray, Any], Any]
+# trial_update(state, combined, round_index, hyper) -> next state for ONE trial
+TrialUpdateFn = Callable[[Any, Any, jnp.ndarray, Any], Any]
 
 _COMBINERS = {
     "mean": combine_mean,
@@ -98,6 +103,25 @@ class CheckpointPolicy:
             raise ValueError(f"every_epochs must be >= 1, got {self.every_epochs}")
         if self.keep is not None and self.keep < 1:
             raise ValueError(f"keep must be >= 1, got {self.keep}")
+
+
+def _default_update(state: Any, combined: Any, r: jnp.ndarray) -> Any:
+    """The default ``update``: the combined value becomes the next state.
+
+    A module-level function (not a per-call lambda) so repeated
+    ``run_epochs`` calls with the default update share one jit cache entry.
+    """
+    return combined
+
+
+def _mask_tree(active: jnp.ndarray, new: Any, old: Any) -> Any:
+    """Per-leaf ``where`` with the (K,) trial mask broadcast over each
+    leaf's trailing dims — stopped trials keep their frozen state."""
+    def leaf(n, o):
+        m = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(leaf, new, old)
 
 
 def _emulated_combine(stacked: Any, combine: str) -> Any:
@@ -151,6 +175,14 @@ class DistributedRunner:
             self.data_axes = ()
         if self.donate is None:
             self.donate = jax.default_backend() != "cpu"
+        # jitted one-epoch functions, keyed by (local_step, update, combine,
+        # chunks): repeated run_epochs calls with the SAME function objects
+        # (the tune layer's rung loop, resume continuations) reuse the
+        # compiled epoch instead of retracing.  Callers that build a fresh
+        # closure per call simply miss; the cache is capped so a long-lived
+        # runner fed per-call closures cannot leak dead executables.
+        self._epoch_cache: dict = {}
+        self._epoch_cache_max = 16
 
     # ------------------------------------------------------------------ #
     # construction
@@ -221,7 +253,8 @@ class DistributedRunner:
     # ------------------------------------------------------------------ #
     def run_rounds(self, table: Any, init_state: Any, local_step: LocalStep,
                    num_rounds: int, *, combine: str = "mean",
-                   update: Optional[UpdateFn] = None) -> Any:
+                   update: Optional[UpdateFn] = None,
+                   start_round: int = 0) -> Any:
         """Run ``num_rounds`` of: per-partition ``local_step(block, state,
         r)`` → global combine (configured schedule) → ``update(state,
         combined, r)``.
@@ -232,9 +265,14 @@ class DistributedRunner:
         (k-means) pass ``combine="sum"`` and an ``update`` that rebuilds the
         state.  The whole loop compiles to one jitted ``lax.scan``; the
         state carry is donated when the backend supports it.
+
+        ``start_round`` offsets the round indices ``local_step`` sees —
+        callers that split one logical run into segments (the tune layer's
+        early-stopping rungs) keep lr decay and rotating slices monotone
+        across segments.
         """
-        upd: UpdateFn = update or (lambda state, combined, r: combined)
-        rounds = jnp.arange(num_rounds)
+        upd: UpdateFn = update or _default_update
+        rounds = jnp.arange(start_round, start_round + num_rounds)
         donate_argnums = (0,) if self.donate else ()
         if self.donate:
             # donate a private copy, never the caller's buffer: init_state is
@@ -378,11 +416,15 @@ class DistributedRunner:
         """
         if num_epochs < start_epoch:
             raise ValueError(f"num_epochs {num_epochs} < start_epoch {start_epoch}")
-        upd: UpdateFn = update or (lambda state, combined, r: combined)
+        upd: UpdateFn = update or _default_update
         chunks = int(chunks_per_epoch)
         if chunks < 1:
             raise ValueError(f"chunks_per_epoch must be >= 1, got {chunks}")
-        epoch_fn = self._epoch_fn(local_step, upd, combine, chunks)
+        cache_key = (local_step, upd, combine, chunks)
+        epoch_fn = self._epoch_cache.get(cache_key)
+        if epoch_fn is None:
+            epoch_fn = self._epoch_fn(local_step, upd, combine, chunks)
+            self._cache_put(cache_key, epoch_fn)
 
         state = init_state
         if self.donate:
@@ -480,6 +522,114 @@ class DistributedRunner:
                                combine=combine, update=update,
                                chunks_per_epoch=chunks, checkpoint=checkpoint,
                                rng=rng, start_epoch=epoch)
+
+    # ------------------------------------------------------------------ #
+    # device-stacked trials: K models per round (model search; repro.tune)
+    # ------------------------------------------------------------------ #
+    def _stacked_carry(self, trial_states: Any, trial_hyper: Any,
+                       active: Optional[jnp.ndarray]) -> dict:
+        """Assemble the carry of a stacked run: ``trial`` (every leaf has a
+        leading (K, …) trial axis), ``hyper`` (per-trial scalar
+        hyperparameters, leading (K,)), and ``active`` (the (K,) bool mask
+        early stopping freezes trials with)."""
+        leaves = jax.tree.leaves(trial_states)
+        if not leaves:
+            raise ValueError("trial_states must have at least one array leaf")
+        k = leaves[0].shape[0]
+        for leaf in leaves + jax.tree.leaves(trial_hyper):
+            if leaf.shape[:1] != (k,):
+                raise ValueError(
+                    f"every stacked leaf needs leading trial axis {k}, got "
+                    f"shape {leaf.shape}")
+        if active is None:
+            active = jnp.ones((k,), bool)
+        return {"trial": trial_states, "hyper": trial_hyper,
+                "active": jnp.asarray(active)}
+
+    def _cache_put(self, key: Any, value: Any) -> None:
+        """Insert into the bounded epoch cache, evicting oldest-first."""
+        while len(self._epoch_cache) >= self._epoch_cache_max:
+            self._epoch_cache.pop(next(iter(self._epoch_cache)))
+        self._epoch_cache[key] = value
+
+    def _stacked_fns(self, trial_step: TrialStep,
+                     trial_update: Optional[TrialUpdateFn]
+                     ) -> Tuple[LocalStep, UpdateFn]:
+        """vmap one trial's step/update over the trial axis.  Memoized per
+        (trial_step, trial_update) so rung-segmented searches hit the
+        jitted-epoch cache instead of retracing every segment."""
+        key = ("stacked", trial_step, trial_update)
+        if key in self._epoch_cache:
+            return self._epoch_cache[key]
+
+        def local_step(block: jnp.ndarray, carry: dict, r: jnp.ndarray) -> Any:
+            return jax.vmap(lambda s, h: trial_step(block, s, r, h))(
+                carry["trial"], carry["hyper"])
+
+        def upd(carry: dict, combined: Any, r: jnp.ndarray) -> dict:
+            trial, hyper = carry["trial"], carry["hyper"]
+            if trial_update is None:
+                new = combined
+            else:
+                new = jax.vmap(lambda s, c, h: trial_update(s, c, r, h))(
+                    trial, combined, hyper)
+            return {"trial": _mask_tree(carry["active"], new, trial),
+                    "hyper": hyper, "active": carry["active"]}
+
+        self._cache_put(key, (local_step, upd))
+        return local_step, upd
+
+    def run_stacked_rounds(self, table: Any, trial_states: Any,
+                           trial_hyper: Any, trial_step: TrialStep,
+                           num_rounds: int, *, combine: str = "mean",
+                           update: Optional[TrialUpdateFn] = None,
+                           active: Optional[jnp.ndarray] = None,
+                           start_round: int = 0) -> Any:
+        """Advance K device-stacked trials together over a resident table.
+
+        ``trial_states`` is a pytree whose every leaf carries a leading
+        (K, …) trial axis (see :func:`repro.tune.trials.tree_stack`);
+        ``trial_hyper`` holds the per-trial scalar hyperparameters as (K,)
+        leaves, so learning rates / regularizers are *traced* values and
+        one compiled round advances all K candidates — K model-search
+        trials for one jit and one collective per round instead of K.
+        ``trial_step(block, state, r, hyper)`` and ``update(state,
+        combined, r, hyper)`` describe ONE trial; this entry point vmaps
+        them over the trial axis.  ``active`` masks trials stopped by the
+        median rule: their states freeze but the round shape stays static.
+        Returns the final stacked trial states.
+        """
+        carry = self._stacked_carry(trial_states, trial_hyper, active)
+        step, upd = self._stacked_fns(trial_step, update)
+        out = self.run_rounds(table, carry, step, num_rounds, combine=combine,
+                              update=upd, start_round=start_round)
+        return out["trial"]
+
+    def run_stacked_epochs(self, stream: Iterator, trial_states: Any,
+                           trial_hyper: Any, trial_step: TrialStep,
+                           num_epochs: int, *, combine: str = "mean",
+                           update: Optional[TrialUpdateFn] = None,
+                           active: Optional[jnp.ndarray] = None,
+                           chunks_per_epoch: int = 1,
+                           checkpoint: Optional[CheckpointPolicy] = None,
+                           rng: Optional[jnp.ndarray] = None,
+                           start_epoch: int = 0) -> Any:
+        """Streaming twin of :meth:`run_stacked_rounds`: every epoch pulls
+        ONE window from ``stream`` (shared by all K trials — the window
+        crosses the host→device boundary once, not K times) and advances
+        the stacked trial states through the PR-2 epoch scan, so searches
+        inherit streaming's checkpoint/resume story unchanged.  Segmented
+        callers (early-stopping rungs) pass ``start_epoch``/``active`` per
+        segment; the compiled epoch function is cached across segments.
+        Returns the final stacked trial states.
+        """
+        carry = self._stacked_carry(trial_states, trial_hyper, active)
+        step, upd = self._stacked_fns(trial_step, update)
+        out = self.run_epochs(stream, carry, step, num_epochs, combine=combine,
+                              update=upd, chunks_per_epoch=chunks_per_epoch,
+                              checkpoint=checkpoint, rng=rng,
+                              start_epoch=start_epoch)
+        return out["trial"]
 
     def __repr__(self) -> str:  # pragma: no cover
         where = (f"mesh{tuple(self.mesh.shape.items())}" if self.mesh is not None

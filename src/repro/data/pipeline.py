@@ -66,6 +66,56 @@ class BatchIterator:
         self.step = int(step)
         return self
 
+    def restrict(self, indices) -> "BatchIterator":
+        """Fold-restricted view of this stream: every window the source
+        yields is row-gathered to ``indices`` (host-side, before mesh
+        placement), so a streamed cross-validation split trains on exactly
+        the rows the resident :func:`repro.tune.cv.fold_view` would.
+
+        The restricted source stays a pure function of the step, so the
+        view remains seekable and checkpoint/resume-exact.  The returned
+        iterator starts at this stream's current position.  Values whose
+        leading dim covers every index are row-gathered; shorter values
+        (per-window broadcast extras) pass through untouched — but a
+        window where NOTHING covers the indices raises, so a fold
+        restriction can never be silently ignored (CV leakage).
+        """
+        idx = np.asarray(indices)
+        if idx.ndim != 1:
+            raise ValueError(f"indices must be 1-D, got shape {idx.shape}")
+        if idx.size == 0:
+            raise ValueError("cannot restrict a stream to zero rows")
+        needed = int(idx.max()) + 1
+        source = self.source
+
+        def restricted(step: int) -> Dict[str, np.ndarray]:
+            batch = source(step)
+            out = {}
+            for k, v in batch.items():
+                if np.ndim(v) >= 1 and np.shape(v)[0] >= needed:
+                    out[k] = v[idx]
+                elif k == "data":
+                    # the row-carrying key (library convention: run_epochs
+                    # consumes batch["data"]) MUST cover the fold — a
+                    # too-short window silently training on unrestricted
+                    # rows is exactly the CV leakage this guards against
+                    raise ValueError(
+                        f"restricted stream at step {step}: 'data' window "
+                        f"has {np.shape(v)[0]} rows, cannot cover fold "
+                        f"indices up to {needed - 1}")
+                else:
+                    out[k] = v
+            if all(o is v for o, v in zip(out.values(), batch.values())):
+                sizes = {k: np.shape(v)[:1] for k, v in batch.items()}
+                raise ValueError(
+                    f"restricted stream at step {step}: no value covers "
+                    f"fold indices up to {needed - 1} (leading dims "
+                    f"{sizes}) — the restriction would be silently "
+                    f"ignored")
+            return out
+
+        return BatchIterator(restricted, mesh=self.mesh, start_step=self.step)
+
     def __iter__(self) -> Iterator[Dict[str, Any]]:
         return self
 

@@ -1,0 +1,9 @@
+"""Shard-aware model evaluation (the scoring half of model search)."""
+from repro.eval.metrics import (  # noqa: F401
+    accuracy,
+    log_loss,
+    rmse,
+    silhouette_lite,
+)
+
+__all__ = ["accuracy", "log_loss", "rmse", "silhouette_lite"]

@@ -1,0 +1,120 @@
+"""Shard-aware evaluation metrics over row-partitioned tables.
+
+Every metric here is a *sufficient-statistics* computation in MLI form: a
+pure local function turns each partition's block into partial sums, one
+global ``combine="sum"`` (through :class:`repro.core.runner.
+DistributedRunner`, so the wire pattern is the configured
+:class:`repro.core.collectives.CollectiveSchedule`) accumulates them, and a
+closed-form host-side finalize produces the scalar.  No metric ever gathers
+rows to one place — evaluation scales exactly like training.
+
+All metrics accept **stacked** predictors too: a prediction function (or
+centroid array) carrying a leading (K, …) trial axis yields a (K,) score
+vector from the *same single pass* over the table — this is how the tune
+layer scores K device-stacked trials with one collective instead of K
+(see ``repro.tune.trials``).
+
+Library convention (paper Fig. A4): supervised tables carry the label in
+column 0 and the features in columns 1..d; ``predict`` receives only the
+feature columns.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import CollectiveSchedule
+from repro.core.runner import DistributedRunner
+
+__all__ = ["accuracy", "log_loss", "rmse", "silhouette_lite"]
+
+#: predict(X_block) -> (rows,) predictions, or (K, rows) for K stacked trials
+PredictFn = Callable[[jnp.ndarray], jnp.ndarray]
+Schedule = Union[str, CollectiveSchedule]
+
+_EPS = 1e-7  # log-loss probability clip
+
+
+def _sum_stats(table: Any, local_fn: Callable[[jnp.ndarray], Any],
+               schedule: Schedule) -> Any:
+    """One combined pass: ``local_fn(block) -> partial sums`` per partition,
+    globally summed under ``schedule``."""
+    runner = DistributedRunner.for_table(table, schedule=schedule)
+    return runner.run_once(table, local_fn, combine="sum")
+
+
+def accuracy(table: Any, predict: PredictFn, *,
+             schedule: Schedule = CollectiveSchedule.ALLREDUCE) -> jnp.ndarray:
+    """Fraction of rows whose predicted label matches column 0.
+
+    ``predict(X)`` returns hard labels (or anything comparable to the label
+    column) shaped ``(rows,)`` — or ``(K, rows)`` for K stacked models,
+    giving a ``(K,)`` result from one pass.
+    """
+    def local(block: jnp.ndarray) -> jnp.ndarray:
+        pred = predict(block[:, 1:])
+        return jnp.sum((pred == block[:, 0]).astype(jnp.float32), axis=-1)
+
+    return _sum_stats(table, local, schedule) / table.num_rows
+
+
+def log_loss(table: Any, predict_proba: PredictFn, *,
+             schedule: Schedule = CollectiveSchedule.ALLREDUCE) -> jnp.ndarray:
+    """Mean binary cross-entropy of ``predict_proba(X)`` against the 0/1
+    label column (clipped at 1e-7).  Stacked probabilities ``(K, rows)``
+    give a ``(K,)`` result."""
+    def local(block: jnp.ndarray) -> jnp.ndarray:
+        y = block[:, 0]
+        p = jnp.clip(predict_proba(block[:, 1:]), _EPS, 1.0 - _EPS)
+        nll = -(y * jnp.log(p) + (1.0 - y) * jnp.log1p(-p))
+        return jnp.sum(nll, axis=-1)
+
+    return _sum_stats(table, local, schedule) / table.num_rows
+
+
+def rmse(table: Any, predict: PredictFn, *,
+         schedule: Schedule = CollectiveSchedule.ALLREDUCE) -> jnp.ndarray:
+    """Root-mean-squared error of ``predict(X)`` against column 0.  Stacked
+    predictions ``(K, rows)`` give a ``(K,)`` result."""
+    def local(block: jnp.ndarray) -> jnp.ndarray:
+        err = predict(block[:, 1:]) - block[:, 0]
+        return jnp.sum(err * err, axis=-1)
+
+    return jnp.sqrt(_sum_stats(table, local, schedule) / table.num_rows)
+
+
+def silhouette_lite(table: Any, centroids: jnp.ndarray, *,
+                    schedule: Schedule = CollectiveSchedule.ALLREDUCE
+                    ) -> jnp.ndarray:
+    """Centroid-based silhouette score in one pass (higher is better).
+
+    The classic silhouette needs all pairwise row distances — O(n²) and a
+    full gather, exactly what MLI forbids.  This "lite" variant replaces
+    the intra/inter-cluster mean distances with distances to centroids:
+    per row, ``a`` = distance to its own (nearest) centroid, ``b`` =
+    distance to the second-nearest centroid, score ``(b - a) / max(a, b)``
+    — a shard-local computation whose mean is one global sum.
+
+    ``centroids`` is ``(k, d)`` — or ``(K, k, d)`` for K stacked k-means
+    trials, giving a ``(K,)`` score vector from the same pass.  The whole
+    table is treated as features (no label column).
+    """
+    C = jnp.asarray(centroids)
+
+    def row_scores(X: jnp.ndarray, cents: jnp.ndarray) -> jnp.ndarray:
+        d2 = jnp.sum((X[:, None, :] - cents[None, :, :]) ** 2, axis=-1)
+        two, _ = jax.lax.top_k(-d2, 2)               # two smallest, negated
+        two = jnp.maximum(-two, 0.0)                 # clamp fp-negative d²
+        a = jnp.sqrt(two[:, 0])
+        b = jnp.sqrt(two[:, 1])
+        denom = jnp.maximum(jnp.maximum(a, b), _EPS)
+        return (b - a) / denom
+
+    def local(block: jnp.ndarray) -> jnp.ndarray:
+        if C.ndim == 3:
+            return jnp.sum(jax.vmap(lambda c: row_scores(block, c))(C), axis=-1)
+        return jnp.sum(row_scores(block, C), axis=-1)
+
+    return _sum_stats(table, local, schedule) / table.num_rows

@@ -1,0 +1,207 @@
+"""Model-search launcher: grid/random search with CV and checkpoint/resume.
+
+The search counterpart of ``repro.launch.fit``: enumerate candidate
+configurations of an MLI algorithm (``--grid`` or ``--samples`` over
+``--space``), train them as device-stacked trials through
+:class:`repro.tune.ModelSearch` (streaming epochs, k-fold or holdout
+validation, optional median early stopping), and report every trial plus
+the winner.  With ``--ckpt-dir`` the search snapshots after every
+completed unit; ``--resume`` continues a killed search trial-for-trial.
+
+Examples (CPU container; add
+XLA_FLAGS=--xla_force_host_platform_device_count=8 for a multi-device
+mesh):
+
+    PYTHONPATH=src python -m repro.launch.tune --algorithm logreg \\
+        --grid "learning_rate=0.05,0.1,0.3;l2=0.0,0.01" \\
+        --rows 128 --features 8 --epochs 4 --chunks-per-epoch 2 \\
+        --folds 3 --schedule allreduce --exec stacked
+
+    PYTHONPATH=src python -m repro.launch.tune --algorithm logreg \\
+        --samples 6 --space "learning_rate=loguniform:0.01:1.0;l2=0.0,0.01" \\
+        --ckpt-dir /tmp/mli-search
+    # kill it mid-search, then add --resume to the same command line
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import signal
+import sys
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.collectives import CollectiveSchedule
+from repro.core.compat import make_mesh
+from repro.core.numeric_table import MLNumericTable
+from repro.tune import MedianStoppingRule, ModelSearch, grid, sample
+
+ALGORITHMS = ("logreg", "kmeans")
+
+
+def _literal(text: str) -> Any:
+    """Parse one grid/space value: python literal when it is one, else the
+    raw string (schedule names etc.)."""
+    try:
+        return ast.literal_eval(text)
+    except (ValueError, SyntaxError):
+        return text
+
+
+def parse_space(spec: str) -> Dict[str, Any]:
+    """Parse ``"lr=0.1,0.3;l2=0.0,0.01"`` into a search space dict.
+
+    Each ``;``-separated entry is ``name=v1,v2,…`` (a value list) or
+    ``name=uniform:lo:hi`` / ``name=loguniform:lo:hi`` (a continuous
+    range for ``--samples``).
+    """
+    space: Dict[str, Any] = {}
+    for entry in filter(None, (e.strip() for e in spec.split(";"))):
+        name, _, values = entry.partition("=")
+        if not _ or not values:
+            raise ValueError(f"malformed space entry {entry!r} (want name=…)")
+        if values.startswith(("uniform:", "loguniform:")):
+            kind, lo, hi = values.split(":")
+            space[name.strip()] = (kind, float(lo), float(hi))
+        else:
+            space[name.strip()] = [_literal(v) for v in values.split(",")]
+    return space
+
+
+def make_table(algorithm: str, rows: int, features: int, seed: int
+               ) -> MLNumericTable:
+    """Deterministic synthetic dataset (pure function of the arguments, so
+    a --resume relaunch sees the identical table)."""
+    rng = np.random.default_rng(seed * 100_003 + 17)
+    mesh = (make_mesh((len(jax.devices()),), ("data",))
+            if len(jax.devices()) > 1 else None)
+    if algorithm == "logreg":
+        w = np.linspace(-1, 1, features).astype(np.float32)
+        X = rng.normal(size=(rows, features)).astype(np.float32)
+        y = (X @ w > 0).astype(np.float32)
+        data = np.concatenate([y[:, None], X], 1)
+    else:
+        k = 4
+        centers = np.stack([np.full(features, 2.5 * (i - (k - 1) / 2))
+                            for i in range(k)]).astype(np.float32)
+        idx = rng.integers(0, k, size=rows)
+        data = (centers[idx]
+                + 0.3 * rng.normal(size=(rows, features))).astype(np.float32)
+    num_shards = None if mesh is not None else 4
+    return MLNumericTable.from_numpy(data, num_shards=num_shards, mesh=mesh)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--algorithm", required=True, choices=ALGORITHMS)
+    ap.add_argument("--grid", default=None,
+                    help="grid space, e.g. 'learning_rate=0.1,0.3;l2=0,0.01'")
+    ap.add_argument("--samples", type=int, default=None,
+                    help="random-search draw count (over --space)")
+    ap.add_argument("--space", default=None,
+                    help="random-search space; supports uniform:lo:hi and "
+                         "loguniform:lo:hi ranges")
+    ap.add_argument("--rows", type=int, default=128)
+    ap.add_argument("--features", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--chunks-per-epoch", type=int, default=2)
+    ap.add_argument("--folds", type=int, default=None,
+                    help="k-fold CV; omit for a single holdout split")
+    ap.add_argument("--holdout", type=float, default=0.25,
+                    help="holdout validation fraction (when --folds is unset)")
+    ap.add_argument("--metric", default=None,
+                    help="accuracy | log_loss (logreg), silhouette (kmeans)")
+    ap.add_argument("--schedule", default="allreduce",
+                    choices=[s.value for s in CollectiveSchedule])
+    ap.add_argument("--exec", dest="execution", default="auto",
+                    choices=("auto", "stacked", "sequential"))
+    ap.add_argument("--early-stop", action="store_true",
+                    help="median-rule early stopping, one rung per "
+                         "--rung-epochs")
+    ap.add_argument("--rung-epochs", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest snapshot in --ckpt-dir")
+    ap.add_argument("--json", action="store_true",
+                    help="print a RESULT::{json} line with every trial")
+    ap.add_argument("--kill-after-trial", type=int, default=None,
+                    help="fault injection (tests): SIGKILL this process "
+                         "after N trials are completed and checkpointed")
+    args = ap.parse_args(argv)
+
+    if args.grid:
+        configs = grid(parse_space(args.grid))
+    elif args.samples:
+        if not args.space:
+            ap.error("--samples requires --space")
+        configs = sample(parse_space(args.space), args.samples, args.seed)
+    else:
+        ap.error("pass --grid or --samples/--space")
+
+    table = make_table(args.algorithm, args.rows, args.features, args.seed)
+    where = (f"{len(jax.devices())}-device mesh" if table.mesh is not None
+             else f"{table.num_shards} emulated partitions")
+    print(f"tune: {args.algorithm} | {len(configs)} trials | "
+          f"{'%d-fold CV' % args.folds if args.folds else 'holdout'} | "
+          f"exec={args.execution} | schedule={args.schedule} | {where}")
+
+    killer = None
+    if args.kill_after_trial is not None:
+        completed = {"trials": 0}
+
+        def killer(units_done: int, trial_indices: List[int]) -> None:
+            completed["trials"] += len(trial_indices)
+            if completed["trials"] >= args.kill_after_trial:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    search = ModelSearch(
+        algorithm=args.algorithm, configs=configs, num_epochs=args.epochs,
+        chunks_per_epoch=args.chunks_per_epoch, folds=args.folds,
+        val_fraction=args.holdout, metric=args.metric,
+        schedule=args.schedule, execution=args.execution, seed=args.seed,
+        early_stop=MedianStoppingRule() if args.early_stop else None,
+        rung_epochs=args.rung_epochs, ckpt_dir=args.ckpt_dir,
+        unit_callback=killer)
+
+    resume = bool(args.resume and args.ckpt_dir)
+    if resume:
+        from repro.checkpoint import latest_step
+        step = latest_step(args.ckpt_dir)
+        if step is None:
+            print("no checkpoint found; starting fresh")
+            resume = False
+        else:
+            print(f"resuming from unit {step} in {args.ckpt_dir}")
+
+    result = search.run(table, resume=resume)
+
+    for t in result.trials:
+        flag = " (stopped early)" if t.stopped else ""
+        print(f"TRIAL {t.index} score={t.score:.6f} "
+              f"config={json.dumps(t.config, sort_keys=True)}{flag}")
+    best = result.best
+    print(f"BEST trial={best.index} score={best.score:.6f} "
+          f"config={json.dumps(best.config, sort_keys=True)}")
+
+    if args.json:
+        payload = {
+            "trials": [
+                {"index": t.index, "config": t.config,
+                 "score": t.score, "rung_scores": t.rung_scores,
+                 "stopped": t.stopped,
+                 "state": np.asarray(t.state).tolist()}
+                for t in result.trials
+            ],
+            "best": {"index": best.index, "config": best.config,
+                     "score": best.score},
+        }
+        print("RESULT::" + json.dumps(payload))
+
+
+if __name__ == "__main__":
+    main()

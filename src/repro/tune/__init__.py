@@ -1,0 +1,43 @@
+"""Parallel model search over MLI algorithms (the MLbase end goal).
+
+The paper positions MLI as the API layer of MLbase, whose purpose is
+*model search*: train many candidate configurations and keep the best.
+This package is that layer for this repo:
+
+  * :mod:`repro.tune.search` — grid / random config enumeration, the
+    median early-stopping rule, and the :class:`ModelSearch` driver;
+  * :mod:`repro.tune.trials` — trial execution: device-stacked groups
+    (K same-shape trials vmapped over a leading axis, one jitted round
+    advancing all K) with a sequential fallback for ragged configs, plus
+    mid-search checkpoint/resume;
+  * :mod:`repro.tune.cv` — k-fold and holdout splitters as row-index
+    views over `MLNumericTable` / `BatchIterator`.
+
+Scoring lives in :mod:`repro.eval.metrics`.  See ``docs/architecture.md``
+("Model search") and ``examples/model_search.py``.
+"""
+from repro.tune.cv import KFold, fold_view, holdout_split  # noqa: F401
+from repro.tune.search import (  # noqa: F401
+    MedianStoppingRule,
+    ModelSearch,
+    SearchResult,
+    TrialResult,
+    grid,
+    sample,
+)
+from repro.tune.trials import TrialSpec, tree_stack, tree_unstack  # noqa: F401
+
+__all__ = [
+    "KFold",
+    "fold_view",
+    "holdout_split",
+    "grid",
+    "sample",
+    "MedianStoppingRule",
+    "ModelSearch",
+    "SearchResult",
+    "TrialResult",
+    "TrialSpec",
+    "tree_stack",
+    "tree_unstack",
+]

@@ -1,0 +1,463 @@
+"""Model search: config enumeration, median early stopping, and the driver.
+
+:func:`grid` and :func:`sample` enumerate candidate configurations
+deterministically (the paper's MLbase motivation: train many candidate
+``Parameters`` and keep the best).  :class:`ModelSearch` executes them over
+a row-partitioned table:
+
+  * **folds** — k-fold or holdout splits from :mod:`repro.tune.cv`,
+    expressed as row-index views (train view streamed, validation view
+    scored in place);
+  * **execution** — ``"stacked"`` vmaps every same-shape group of trials
+    over a leading trial axis so one jitted round advances the whole
+    group (``DistributedRunner.run_stacked_epochs``), ``"sequential"``
+    runs one trial per unit, ``"auto"`` = stacked where shapes allow;
+  * **training** — always the PR-2 streaming path: each epoch pulls the
+    train view's window from a :class:`repro.data.pipeline.BatchIterator`
+    and scans ``chunks_per_epoch`` minibatch rounds over it, so searches
+    inherit checkpoint/resume and the collective-schedule knob unchanged;
+  * **early stopping** — the median rule (:class:`MedianStoppingRule`):
+    after each rung, trials scoring below the median of their peers at
+    the same rung are frozen (masked in stacked groups, skipped in
+    sequential units);
+  * **fault tolerance** — with ``ckpt_dir`` the search snapshots after
+    every completed unit and ``run(..., resume=True)`` continues
+    trial-for-trial after a kill.
+
+Scores are **higher-is-better** throughout (loss metrics are negated).
+Everything is a pure function of ``(configs, seed, data)`` — the
+determinism ``tests/test_tune_determinism.py`` pins across collective
+schedules and execution modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collectives import CollectiveSchedule
+from repro.core.runner import DistributedRunner
+from repro.data.pipeline import BatchIterator
+from repro.tune.cv import KFold, fold_view, holdout_split
+from repro.tune.trials import (
+    SearchCheckpointer,
+    TrialSpec,
+    fingerprint,
+    group_trials,
+    tree_stack,
+    tree_unstack,
+)
+
+__all__ = [
+    "grid",
+    "sample",
+    "MedianStoppingRule",
+    "TrialResult",
+    "SearchResult",
+    "ModelSearch",
+]
+
+
+# --------------------------------------------------------------------------- #
+# config enumeration
+# --------------------------------------------------------------------------- #
+def _is_range(v: Any) -> bool:
+    return (isinstance(v, tuple) and len(v) == 3
+            and v[0] in ("uniform", "loguniform"))
+
+
+def grid(space: Dict[str, Sequence[Any]]) -> List[Dict[str, Any]]:
+    """Cartesian product of a ``{param: [values…]}`` space, in sorted-key
+    order — a pure function of the space, so every run of the same grid
+    enumerates trials identically."""
+    for k, v in space.items():
+        if _is_range(v):
+            raise ValueError(
+                f"{k}={v!r} is a continuous range — ranges are for "
+                f"sample(); a grid needs an explicit value list")
+    keys = sorted(space)
+    return [dict(zip(keys, vals))
+            for vals in itertools.product(*(space[k] for k in keys))]
+
+
+def sample(space: Dict[str, Any], num_samples: int, seed: int = 0
+           ) -> List[Dict[str, Any]]:
+    """Random search: ``num_samples`` deterministic draws from ``space``.
+
+    Per key, a list/tuple of values is sampled uniformly; the 3-tuples
+    ``("uniform", lo, hi)`` and ``("loguniform", lo, hi)`` draw continuous
+    values.  Seeded — the same ``(space, num_samples, seed)`` always
+    yields the same trial list, in the same order.
+    """
+    rng = np.random.default_rng(seed)
+    configs = []
+    for _ in range(num_samples):
+        cfg: Dict[str, Any] = {}
+        for k in sorted(space):
+            v = space[k]
+            if _is_range(v):
+                lo, hi = float(v[1]), float(v[2])
+                if lo > hi:
+                    raise ValueError(f"{k}: range lower bound {lo} exceeds "
+                                     f"upper bound {hi}")
+                if v[0] == "loguniform":
+                    if lo <= 0:
+                        raise ValueError(
+                            f"{k}: loguniform bounds must be positive, got "
+                            f"[{lo}, {hi}]")
+                    cfg[k] = float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+                else:
+                    cfg[k] = float(rng.uniform(lo, hi))
+            else:
+                options = list(v)
+                choice = options[int(rng.integers(len(options)))]
+                cfg[k] = choice.item() if hasattr(choice, "item") else choice
+        configs.append(cfg)
+    return configs
+
+
+# --------------------------------------------------------------------------- #
+# median early stopping
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class MedianStoppingRule:
+    """Stop a trial whose rung score falls below the median of its peers.
+
+    After rung ``r`` (0-indexed; rungs before ``min_rungs`` are always
+    survived), a trial stops when at least ``min_trials`` *other* trials
+    have recorded a score at the same rung and the trial's score is
+    strictly below their median.  With sequential execution the
+    comparators are previously-run trials (the classic asynchronous
+    rule); with stacked execution the whole group reaches the rung
+    together, so the comparison is synchronous.  Stopped trials keep
+    their last score and their state freezes (masked in the stacked
+    carry) — the round structure stays static, so no recompilation.
+    """
+
+    min_rungs: int = 1
+    min_trials: int = 3
+
+    def stop(self, rung: int, score: float, peer_scores: Sequence[float]) -> bool:
+        if rung < self.min_rungs:
+            return False
+        if len(peer_scores) < self.min_trials:
+            return False
+        return score < float(np.median(np.asarray(peer_scores, np.float64)))
+
+
+# --------------------------------------------------------------------------- #
+# results
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class TrialResult:
+    """Outcome of one trial: its config, the (higher-is-better) validation
+    score averaged over folds, the per-rung score history, the final
+    trained state of fold 0, and whether the median rule stopped it."""
+
+    index: int
+    config: Dict[str, Any]
+    score: float
+    rung_scores: List[float]
+    state: Any
+    stopped: bool = False
+    # the trial's trained Model (spec.finalize(state)); None for custom
+    # specs without a finalizer
+    model: Any = None
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """All trials in enumeration order, plus the winner."""
+
+    trials: List[TrialResult]
+
+    @property
+    def best(self) -> TrialResult:
+        """Highest score; ties break to the lowest trial index, so the
+        winner is deterministic under fp-equal scores."""
+        return max(self.trials, key=lambda t: (t.score, -t.index))
+
+    @property
+    def scores(self) -> List[float]:
+        return [t.score for t in self.trials]
+
+
+# --------------------------------------------------------------------------- #
+# the driver
+# --------------------------------------------------------------------------- #
+def _builtin_builder(algorithm: str, metric: Optional[str]
+                     ) -> Callable[[Dict[str, Any]], TrialSpec]:
+    """Resolve a registered algorithm name to its trial-spec builder
+    (imported lazily: core algorithms must not import tune at load)."""
+    if algorithm == "logreg":
+        from repro.core.algorithms.logistic_regression import \
+            LogisticRegressionAlgorithm as A
+        return lambda cfg: A.trial_spec(cfg, metric=metric or "accuracy")
+    if algorithm == "kmeans":
+        from repro.core.algorithms.kmeans import KMeans as A
+        return lambda cfg: A.trial_spec(cfg, metric=metric or "silhouette")
+    raise ValueError(
+        f"unknown algorithm {algorithm!r} — pass 'logreg', 'kmeans', or a "
+        f"spec-builder callable")
+
+
+def _window_source(window: np.ndarray) -> Callable[[int], Dict[str, np.ndarray]]:
+    """Stream source for a fold's train view: every epoch's window is the
+    view's rows (a pure function of the step — seekable, resume-exact)."""
+    def source(step: int) -> Dict[str, np.ndarray]:
+        return {"data": window}
+
+    return source
+
+
+@dataclasses.dataclass
+class ModelSearch:
+    """Grid/random model search over one algorithm and one table.
+
+    Parameters
+    ----------
+    algorithm:
+        ``"logreg"``, ``"kmeans"``, or a callable ``config -> TrialSpec``.
+    configs:
+        The candidate list (:func:`grid` / :func:`sample` output).
+    num_epochs / chunks_per_epoch:
+        Streaming-epoch budget per trial: each epoch scans the train
+        window in ``chunks_per_epoch`` minibatch rounds.
+    folds:
+        ``k >= 2`` for k-fold CV (scores averaged over folds); ``None``
+        for a single ``val_fraction`` holdout split.
+    execution:
+        ``"auto"`` (stack same-shape groups) | ``"stacked"`` |
+        ``"sequential"``.
+    early_stop / rung_epochs:
+        Optional :class:`MedianStoppingRule`, applied every
+        ``rung_epochs`` epochs (default 1 when a rule is set, else one
+        rung spanning the whole budget).
+    ckpt_dir:
+        Search-level checkpoint directory (snapshot after every completed
+        unit); ``run(resume=True)`` continues from it.
+    """
+
+    algorithm: Union[str, Callable[[Dict[str, Any]], TrialSpec]]
+    configs: List[Dict[str, Any]]
+    num_epochs: int = 8
+    chunks_per_epoch: int = 1
+    folds: Optional[int] = None
+    val_fraction: float = 0.25
+    metric: Optional[str] = None
+    schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+    execution: str = "auto"
+    seed: int = 0
+    early_stop: Optional[MedianStoppingRule] = None
+    rung_epochs: Optional[int] = None
+    ckpt_dir: Optional[str] = None
+    # observer called after every completed (and checkpointed) unit with
+    # (units_done, trial_indices) — progress lines, fault injection in the
+    # kill-and-resume tests.  Not part of the search fingerprint.
+    unit_callback: Optional[Callable[[int, List[int]], None]] = None
+
+    def __post_init__(self) -> None:
+        if not self.configs:
+            raise ValueError("configs must not be empty")
+        if self.folds is not None and self.folds < 2:
+            raise ValueError(f"folds must be >= 2, got {self.folds}")
+
+    # ------------------------------------------------------------------ #
+    def _rungs(self) -> List[Tuple[int, int]]:
+        """(start_epoch, end_epoch) segments: one per rung when early
+        stopping is on, else a single segment spanning the budget."""
+        step = self.rung_epochs or (1 if self.early_stop else self.num_epochs)
+        edges = list(range(0, self.num_epochs, step)) + [self.num_epochs]
+        return [(a, b) for a, b in zip(edges, edges[1:]) if b > a]
+
+    def _fingerprint(self, table: Any) -> str:
+        """Identity of this search INCLUDING the dataset shape — a resumed
+        search against a different table must refuse, not silently mix
+        scores computed on different data."""
+        name = (self.algorithm if isinstance(self.algorithm, str)
+                else getattr(self.algorithm, "__name__", "custom"))
+        return fingerprint({
+            "algorithm": name, "configs": self.configs,
+            "num_epochs": self.num_epochs,
+            "chunks_per_epoch": self.chunks_per_epoch,
+            "folds": self.folds, "val_fraction": self.val_fraction,
+            "metric": self.metric,
+            "schedule": CollectiveSchedule.parse(self.schedule).value,
+            "execution": self.execution, "seed": self.seed,
+            "rungs": self._rungs(),
+            "early_stop": (None if self.early_stop is None else
+                           [self.early_stop.min_rungs,
+                            self.early_stop.min_trials]),
+            "data_shape": [int(table.num_rows), int(table.num_cols)],
+        })
+
+    # ------------------------------------------------------------------ #
+    def run(self, table: Any, resume: bool = False) -> SearchResult:
+        """Execute the search over ``table`` and return every trial.
+
+        The table is split into folds; each unit's trials stream the
+        fold's train window for ``num_epochs`` epochs and are scored on
+        the fold's validation view with the configured schedule; scores
+        average over folds.  With ``resume=True`` (and ``ckpt_dir``),
+        completed units restore from the newest snapshot and execution
+        continues at the first unfinished unit.
+        """
+        schedule = CollectiveSchedule.parse(self.schedule)
+        builder = (self.algorithm if callable(self.algorithm)
+                   else _builtin_builder(self.algorithm, self.metric))
+        specs = [builder(dict(cfg)) for cfg in self.configs]
+
+        n = table.num_rows
+        if self.folds:
+            splits = list(KFold(n, self.folds, self.seed).splits())
+        else:
+            splits = [holdout_split(n, self.val_fraction, self.seed)]
+
+        # layout: keep the table's mesh whenever every train view can
+        # fill at least one (shards x chunks) window, else fall back to an
+        # emulated single shard.  MLI partitions are equal-sized by
+        # construction, so each train window is trimmed (deterministically,
+        # from the tail of the sorted index) to the largest multiple of
+        # shards * chunks_per_epoch — at most shards*chunks - 1 rows per
+        # fold sit out of training; validation views are never trimmed.
+        mesh, shards = table.mesh, table.num_shards
+        unit = shards * self.chunks_per_epoch
+        if any(len(tr) < unit for tr, _ in splits):
+            mesh, shards = None, 1
+            unit = self.chunks_per_epoch
+        runner = DistributedRunner(mesh=mesh, num_shards=shards,
+                                   schedule=schedule)
+
+        host_rows = np.asarray(table.data)
+        train_idx = [tr[: len(tr) - len(tr) % unit] for tr, _ in splits]
+        if any(len(tr) == 0 for tr in train_idx):
+            raise ValueError(
+                f"a train split is smaller than chunks_per_epoch="
+                f"{self.chunks_per_epoch} — nothing left to train on")
+        # one host copy per fold, shared by every execution unit
+        train_windows = [np.ascontiguousarray(host_rows[tr])
+                         for tr in train_idx]
+        init_tables = [fold_view(table, tr) for tr in train_idx]
+        val_tables = [fold_view(table, va) for _, va in splits]
+
+        groups = group_trials(specs, self.execution)
+        rungs = self._rungs()
+
+        done_states: Dict[int, Any] = {}
+        done_info: Dict[int, Dict[str, Any]] = {}
+        units_done = 0
+        ckpt = (SearchCheckpointer(self.ckpt_dir, self._fingerprint(table))
+                if self.ckpt_dir else None)
+        if resume:
+            if ckpt is None:
+                raise ValueError("resume=True requires ckpt_dir")
+            snap = ckpt.resume(lambda i: specs[i].init(init_tables[0]))
+            if snap is not None:
+                done_states, done_info, units_done = snap
+
+        for unit_no, group in enumerate(groups):
+            if unit_no < units_done:
+                continue  # restored from the snapshot
+            self._run_unit(runner, specs, group, train_windows,
+                           init_tables, val_tables, rungs, schedule,
+                           done_states, done_info)
+            units_done = unit_no + 1
+            if ckpt is not None:
+                ckpt.save(done_states, done_info, units_done)
+            if self.unit_callback is not None:
+                self.unit_callback(units_done, list(group))
+
+        trials = [
+            TrialResult(index=i, config=dict(self.configs[i]),
+                        score=done_info[i]["score"],
+                        rung_scores=list(done_info[i]["rung_scores"]),
+                        state=done_states[i],
+                        stopped=bool(done_info[i]["stopped"]),
+                        model=(specs[i].finalize(done_states[i])
+                               if specs[i].finalize else None))
+            for i in sorted(done_info)
+        ]
+        return SearchResult(trials=trials)
+
+    # ------------------------------------------------------------------ #
+    def _run_unit(self, runner: DistributedRunner, specs: List[TrialSpec],
+                  group: List[int], train_windows: List[np.ndarray],
+                  init_tables: List[Any],
+                  val_tables: List[Any], rungs: List[Tuple[int, int]],
+                  schedule: CollectiveSchedule,
+                  done_states: Dict[int, Any],
+                  done_info: Dict[int, Dict[str, Any]]) -> None:
+        """Advance one execution unit (a stacked group or a single trial)
+        through every rung of every fold, then record its trials."""
+        spec0 = specs[group[0]]
+        k = len(group)
+        hyper = tree_stack([specs[i].hyper for i in group])
+        states = [tree_stack([specs[i].init(t) for i in group])
+                  for t in init_tables]
+        streams = [BatchIterator(_window_source(w), mesh=runner.mesh)
+                   for w in train_windows]
+        active = np.ones(k, dtype=bool)
+        rung_scores: Dict[int, List[float]] = {i: [] for i in group}
+
+        for rung_no, (start, end) in enumerate(rungs):
+            if not active.any():
+                # every trial is frozen: later rungs would change no state
+                # and record no scores — the stopping rule's whole point
+                # is to skip this compute
+                break
+            mask = jnp.asarray(active)
+            for f, stream in enumerate(streams):
+                states[f] = runner.run_stacked_epochs(
+                    stream, states[f], hyper, spec0.local_step, end,
+                    combine=spec0.combine, update=spec0.update,
+                    active=mask, chunks_per_epoch=self.chunks_per_epoch,
+                    start_epoch=start)
+            fold_scores = np.stack([
+                np.asarray(spec0.score(val_tables[f], states[f], schedule),
+                           np.float64).reshape(k)
+                for f in range(len(val_tables))
+            ])                                     # (folds, K)
+            scores_now = fold_scores.mean(axis=0)  # (K,)
+            for j, i in enumerate(group):
+                if active[j]:
+                    rung_scores[i].append(float(scores_now[j]))
+            if self.early_stop is not None and rung_no < len(rungs) - 1:
+                self._apply_median_rule(group, active, rung_no, rung_scores,
+                                        done_info)
+
+        final_states = tree_unstack(states[0])
+        for j, i in enumerate(group):
+            done_states[i] = final_states[j]
+            done_info[i] = {
+                "score": rung_scores[i][-1],
+                "rung_scores": rung_scores[i],
+                "stopped": not bool(active[j]),
+            }
+
+    def _apply_median_rule(self, group: List[int], active: np.ndarray,
+                           rung_no: int,
+                           rung_scores: Dict[int, List[float]],
+                           done_info: Dict[int, Dict[str, Any]]) -> None:
+        """Freeze every active trial scoring below the median of its peers
+        at this rung (peers: completed trials with a score at the same
+        rung, plus the rest of the group)."""
+        def score_at(history: Sequence[float]) -> Optional[float]:
+            return history[rung_no] if len(history) > rung_no else None
+
+        peer_pool = {
+            i: score_at(info["rung_scores"])
+            for i, info in done_info.items()
+        }
+        peer_pool.update({i: score_at(rung_scores[i])
+                          for j, i in enumerate(group) if active[j]})
+        for j, i in enumerate(group):
+            if not active[j]:
+                continue
+            mine = peer_pool[i]
+            peers = [s for t, s in sorted(peer_pool.items())
+                     if t != i and s is not None]
+            if mine is not None and self.early_stop.stop(rung_no, mine, peers):
+                active[j] = False

@@ -1,0 +1,202 @@
+"""Trial execution for model search: device-stacked groups + checkpointing.
+
+A *trial* is one candidate configuration of an algorithm.  Algorithms
+describe a trial with a :class:`TrialSpec` — the same pure-local-function
+contract the :class:`repro.core.runner.DistributedRunner` already speaks,
+plus a per-trial ``hyper`` pytree of *traced scalar hyperparameters*.
+Because the hyperparameters are traced values (not Python constants baked
+into the jit), K same-shape trials can be stacked along a leading axis and
+advanced by ONE compiled round (``DistributedRunner.run_stacked_rounds`` /
+``run_stacked_epochs``): one jit dispatch and one collective per round for
+the whole group, instead of K of each.
+
+Trials whose compiled structure differs (different solver, local batch
+size, cluster count — anything in ``stack_key``) are *ragged* and cannot
+share a vmap; :func:`group_trials` deals every trial into the largest
+stackable groups (or all-singletons for sequential execution), in first-
+occurrence order so the grouping is deterministic and resumable.
+
+:class:`SearchCheckpointer` snapshots a search after every completed
+execution unit through :mod:`repro.checkpoint.store` — the same atomic
+store the PR-2 streaming path uses — so a SIGKILLed search resumes
+trial-for-trial (``tests/test_tune_resume.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runner import TrialStep, TrialUpdateFn
+
+__all__ = [
+    "TrialSpec",
+    "tree_stack",
+    "tree_unstack",
+    "group_trials",
+    "SearchCheckpointer",
+    "fingerprint",
+]
+
+
+def tree_stack(trees: Sequence[Any]) -> Any:
+    """Stack a list of identically-structured pytrees into one pytree whose
+    every leaf has a new leading (K,) trial axis."""
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *trees)
+
+
+def tree_unstack(stacked: Any) -> List[Any]:
+    """Inverse of :func:`tree_stack`: split the leading trial axis back
+    into a list of K pytrees."""
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return []
+    k = leaves[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(k)]
+
+
+@dataclasses.dataclass
+class TrialSpec:
+    """One candidate configuration, in runner form.
+
+    Within a stack group every spec's ``local_step`` / ``update`` /
+    ``score`` must be *interchangeable* (config differences expressed only
+    through ``hyper`` and ``init``); the executor uses the first spec's
+    functions for the whole group.  Algorithm builders guarantee this by
+    sharing one module-level step function per ``stack_key`` — which also
+    means repeated searches hit the runner's compiled-epoch cache.
+
+    Fields
+    ------
+    config:
+        The raw search-point dict (JSON-able; recorded in checkpoints).
+    hyper:
+        Pytree of scalar jnp values — the *traced* hyperparameters
+        (learning rate, regularizers, decay).  Stacked to (K,) leaves.
+    init:
+        ``init(train_table) -> state pytree`` — data-dependent state
+        init (zeros for logreg, seeded rows for k-means centroids).
+    local_step / combine / update:
+        The runner contract for one trial:
+        ``local_step(block, state, r, hyper) -> partial`` combined under
+        ``combine``, then ``update(state, combined, r, hyper)``.
+    stack_key:
+        Trials with equal ``stack_key`` share one compiled structure and
+        may be device-stacked; everything else is ragged.
+    score:
+        ``score(val_table, stacked_states, schedule) -> (K,)`` validation
+        scores, **higher is better** (losses negated).  Shard-aware via
+        :mod:`repro.eval.metrics`.
+    finalize:
+        ``finalize(state) -> Model`` for the winning trial.
+    """
+
+    config: Dict[str, Any]
+    hyper: Any
+    init: Callable[[Any], Any]
+    local_step: TrialStep
+    combine: str = "mean"
+    update: Optional[TrialUpdateFn] = None
+    stack_key: Hashable = ()
+    score: Optional[Callable[[Any, Any, Any], jnp.ndarray]] = None
+    finalize: Optional[Callable[[Any], Any]] = None
+
+
+def group_trials(specs: Sequence[TrialSpec], execution: str = "auto"
+                 ) -> List[List[int]]:
+    """Deal trial indices into execution units.
+
+    ``"stacked"``/``"auto"`` group by ``stack_key`` in first-occurrence
+    order (ragged configs land in their own groups — possibly singletons);
+    ``"sequential"`` forces one unit per trial.  Deterministic, so a
+    resumed search re-derives the identical unit order.
+    """
+    if execution == "sequential":
+        return [[i] for i in range(len(specs))]
+    if execution not in ("auto", "stacked"):
+        raise ValueError(f"unknown execution mode {execution!r}")
+    groups: Dict[Hashable, List[int]] = {}
+    order: List[Hashable] = []
+    for i, spec in enumerate(specs):
+        if spec.stack_key not in groups:
+            groups[spec.stack_key] = []
+            order.append(spec.stack_key)
+        groups[spec.stack_key].append(i)
+    return [groups[k] for k in order]
+
+
+def fingerprint(payload: Dict[str, Any]) -> str:
+    """Stable hash of the search definition (configs, schedule, epochs,
+    folds, seed…) — a resumed search must run the *same* search."""
+    blob = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+class SearchCheckpointer:
+    """Search-level checkpoint/resume at execution-unit granularity.
+
+    After every completed unit (one trial, or one stacked group) the
+    checkpointer writes ONE atomic snapshot through
+    :mod:`repro.checkpoint.store`: the final state pytree of every
+    completed trial (keyed by trial index) plus a JSON record of scores,
+    rung histories, and the search fingerprint.  ``resume`` restores the
+    newest snapshot, refuses a mismatched fingerprint, and hands back the
+    completed set so the driver skips straight to the first unfinished
+    unit — a SIGKILLed ``launch/tune.py`` continues trial-for-trial.
+    """
+
+    def __init__(self, ckpt_dir: str, search_fingerprint: str) -> None:
+        self.ckpt_dir = ckpt_dir
+        self.fingerprint = search_fingerprint
+
+    def save(self, states: Dict[int, Any], info: Dict[int, Dict[str, Any]],
+             units_done: int) -> None:
+        """Snapshot all completed trials (cumulative) at ``units_done``.
+
+        Each snapshot carries the *whole* completed set, so older steps are
+        fully redundant — ``keep=2`` prunes them (the newest plus one
+        published predecessor as insurance) instead of letting a long
+        search accumulate O(units²) trial-state storage.
+        """
+        from repro.checkpoint.store import save_checkpoint
+
+        tree = {"states": {str(i): states[i] for i in sorted(states)}}
+        meta = {
+            "fingerprint": self.fingerprint,
+            "units_done": units_done,
+            "trials": {str(i): info[i] for i in sorted(info)},
+        }
+        save_checkpoint(self.ckpt_dir, units_done, tree, metadata=meta,
+                        keep=2)
+
+    def resume(self, template_init: Callable[[int], Any]
+               ) -> Optional[Tuple[Dict[int, Any], Dict[int, Dict[str, Any]], int]]:
+        """Restore the newest search snapshot, if any.
+
+        ``template_init(trial_index) -> state pytree`` supplies the
+        restore template for each completed trial (values ignored, only
+        structure/shape/dtype matter).  Returns ``(states, info,
+        units_done)`` or ``None`` when the directory holds no snapshot.
+        """
+        from repro.checkpoint.store import latest_step, load_metadata, \
+            restore_checkpoint
+
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        meta = load_metadata(self.ckpt_dir, step)
+        if not meta or meta.get("fingerprint") != self.fingerprint:
+            raise ValueError(
+                f"checkpoint in {self.ckpt_dir} was written by a different "
+                f"search (fingerprint mismatch) — refusing to resume")
+        indices = sorted(int(i) for i in meta["trials"])
+        template = {"states": {str(i): template_init(i) for i in indices}}
+        tree, _ = restore_checkpoint(self.ckpt_dir, template, step)
+        states = {i: tree["states"][str(i)] for i in indices}
+        info = {i: meta["trials"][str(i)] for i in indices}
+        return states, info, int(meta["units_done"])

@@ -15,6 +15,7 @@ here own that boilerplate so test modules only supply the program text:
 """
 import json
 import os
+import signal
 import subprocess
 import sys
 
@@ -24,10 +25,31 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def describe_failure(out) -> str:
+    """Human-readable failure report for a subprocess: the exit status
+    (naming the killing signal where applicable) plus the stderr AND
+    stdout tails — a child that dies printing its error to stdout, or is
+    killed by a signal with empty stderr, must not surface as a bare
+    returncode."""
+    rc = out.returncode
+    status = f"exit code {rc}"
+    if rc < 0:
+        try:
+            status += f" (killed by {signal.Signals(-rc).name})"
+        except ValueError:
+            status += " (killed by signal)"
+    parts = [f"subprocess failed with {status}"]
+    for name, text in (("stderr", out.stderr), ("stdout", out.stdout)):
+        tail = (text or "").strip()[-2000:]
+        parts.append(f"--- {name} (tail) ---\n{tail if tail else '<empty>'}")
+    return "\n".join(parts)
+
+
 def run_devices_subprocess(program: str, devices: int = 8, timeout: int = 540,
                            env: dict = None, check: bool = True):
     """Run ``program`` via ``python -c`` with ``devices`` emulated host
-    devices.  Asserts a clean exit unless ``check=False``."""
+    devices.  Asserts a clean exit unless ``check=False``, with the
+    child's stderr/stdout tails in the assertion message."""
     full_env = dict(
         os.environ,
         PYTHONPATH=os.path.join(REPO, "src"),
@@ -38,7 +60,7 @@ def run_devices_subprocess(program: str, devices: int = 8, timeout: int = 540,
     out = subprocess.run([sys.executable, "-c", program], capture_output=True,
                          text=True, env=full_env, timeout=timeout, cwd=REPO)
     if check:
-        assert out.returncode == 0, out.stderr[-2000:]
+        assert out.returncode == 0, describe_failure(out)
     return out
 
 

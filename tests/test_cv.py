@@ -1,0 +1,139 @@
+"""Property tests for `tune/cv`: the splitter invariants model search
+stands on.
+
+  * folds are pairwise disjoint and cover every row exactly once;
+  * fold sizes are balanced (differ by at most one row);
+  * the assignment is a pure function of (num_rows, k, seed) — re-seeding
+    with the same seed reproduces it exactly;
+  * the resident-table view (`fold_view`) and the stream view
+    (`BatchIterator.restrict`) select the same rows in the same order;
+  * holdout splits obey the same cover/disjoint/determinism contract.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.numeric_table import MLNumericTable
+from repro.data import BatchIterator
+from repro.tune.cv import KFold, fold_view, holdout_split
+
+
+@settings(max_examples=30, deadline=None)
+@given(num_rows=st.integers(4, 200), k=st.integers(2, 8),
+       seed=st.integers(0, 2**16))
+def test_folds_disjoint_and_cover_exactly_once(num_rows, k, seed):
+    k = min(k, num_rows)
+    kf = KFold(num_rows, k, seed)
+    seen = np.concatenate([kf.val_indices(i) for i in range(k)])
+    # exact cover: every row in exactly one fold
+    assert sorted(seen.tolist()) == list(range(num_rows))
+    for i in range(k):
+        tr, va = kf.split(i)
+        assert np.intersect1d(tr, va).size == 0
+        joined = np.sort(np.concatenate([tr, va]))
+        assert np.array_equal(joined, np.arange(num_rows))
+        # views preserve row order: indices are sorted
+        assert np.array_equal(tr, np.sort(tr))
+        assert np.array_equal(va, np.sort(va))
+
+
+@settings(max_examples=30, deadline=None)
+@given(num_rows=st.integers(4, 200), k=st.integers(2, 8),
+       seed=st.integers(0, 2**16))
+def test_fold_sizes_balanced(num_rows, k, seed):
+    k = min(k, num_rows)
+    sizes = [len(KFold(num_rows, k, seed).val_indices(i)) for i in range(k)]
+    assert sum(sizes) == num_rows
+    assert max(sizes) - min(sizes) <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(num_rows=st.integers(4, 200), k=st.integers(2, 6),
+       seed=st.integers(0, 2**16))
+def test_folds_stable_under_reseeding(num_rows, k, seed):
+    k = min(k, num_rows)
+    a, b = KFold(num_rows, k, seed), KFold(num_rows, k, seed)
+    for i in range(k):
+        assert np.array_equal(a.val_indices(i), b.val_indices(i))
+        assert np.array_equal(a.train_indices(i), b.train_indices(i))
+
+
+@settings(max_examples=15, deadline=None)
+@given(num_rows=st.integers(8, 96), k=st.integers(2, 4),
+       seed=st.integers(0, 2**16))
+def test_resident_and_stream_views_agree(num_rows, k, seed):
+    """fold_view over a resident table and BatchIterator.restrict over a
+    stream of the same rows must select identical data, row for row."""
+    k = min(k, num_rows)
+    rows = np.arange(num_rows * 3, dtype=np.float32).reshape(num_rows, 3)
+    table = MLNumericTable.from_numpy(rows, num_shards=1)
+    kf = KFold(num_rows, k, seed)
+    for i in range(k):
+        for idx in kf.split(i):
+            resident = np.asarray(fold_view(table, idx).data)
+            stream = BatchIterator(lambda step: {"data": rows}).restrict(idx)
+            streamed = np.asarray(next(stream)["data"])
+            np.testing.assert_array_equal(resident, streamed)
+            np.testing.assert_array_equal(resident, rows[idx])
+
+
+def test_fold_view_keeps_shards_when_divisible():
+    rows = np.arange(64 * 2, dtype=np.float32).reshape(64, 2)
+    table = MLNumericTable.from_numpy(rows, num_shards=4)
+    view = fold_view(table, np.arange(16))          # 16 % 4 == 0
+    assert view.num_shards == 4
+    ragged = fold_view(table, np.arange(18))        # 18 % 4 != 0
+    assert ragged.num_shards == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(num_rows=st.integers(4, 200), seed=st.integers(0, 2**16),
+       frac=st.floats(0.1, 0.9))
+def test_holdout_split_properties(num_rows, seed, frac):
+    tr, va = holdout_split(num_rows, frac, seed)
+    assert np.intersect1d(tr, va).size == 0
+    assert np.array_equal(np.sort(np.concatenate([tr, va])),
+                          np.arange(num_rows))
+    assert len(va) >= 1 and len(tr) >= 1
+    tr2, va2 = holdout_split(num_rows, frac, seed)
+    assert np.array_equal(tr, tr2) and np.array_equal(va, va2)
+
+
+def test_restrict_passes_through_short_values():
+    """Per-window broadcast extras (leading dim too short to index) ride
+    through a restricted stream untouched."""
+    rows = np.arange(20, dtype=np.float32).reshape(10, 2)
+    extra = np.asarray([1.0, 2.0])
+    stream = BatchIterator(lambda step: {"data": rows, "extra": extra})
+    out = next(stream.restrict(np.asarray([7, 8, 9])))
+    np.testing.assert_array_equal(np.asarray(out["data"]), rows[[7, 8, 9]])
+    np.testing.assert_array_equal(np.asarray(out["extra"]), extra)
+
+
+def test_restrict_refuses_non_covering_window():
+    """A window too short for the fold indices must raise, never silently
+    skip the restriction (that would leak validation rows into training)."""
+    short = np.arange(16, dtype=np.float32).reshape(8, 2)
+    stream = BatchIterator(lambda step: {"data": short})
+    restricted = stream.restrict(np.asarray([0, 3, 12]))  # needs 13 rows
+    with pytest.raises(ValueError, match="cannot cover"):
+        next(restricted)
+    # even when SOME other value covers, a too-short 'data' must raise
+    mixed = BatchIterator(
+        lambda step: {"data": short, "mask": np.ones(32, np.float32)})
+    with pytest.raises(ValueError, match="'data' window"):
+        next(mixed.restrict(np.asarray([0, 3, 12])))
+    with pytest.raises(ValueError, match="zero rows"):
+        stream.restrict(np.asarray([], dtype=np.int64))
+
+
+def test_kfold_validates_arguments():
+    with pytest.raises(ValueError):
+        KFold(10, 1)
+    with pytest.raises(ValueError):
+        KFold(4, 8)
+    with pytest.raises(ValueError):
+        KFold(10, 3).val_indices(3)
+    with pytest.raises(ValueError):
+        holdout_split(10, 0.0)

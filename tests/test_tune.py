@@ -1,0 +1,339 @@
+"""`repro.tune` emulated-mode semantics: stacked == sequential == the
+existing single-model trainers, deterministic enumeration/grouping, the
+median stopping rule, ALS trial stacking, and in-process search
+checkpoint/resume.  (Mesh behavior — schedules x execution modes on a
+real 8-device mesh, and SIGKILL resume through the CLI — lives in
+`test_tune_determinism.py` / `test_tune_resume.py`.)"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.numeric_table import MLNumericTable
+from repro.core.runner import DistributedRunner
+from repro.tune import (
+    MedianStoppingRule,
+    ModelSearch,
+    grid,
+    sample,
+)
+from repro.tune.trials import SearchCheckpointer, group_trials, tree_stack, \
+    tree_unstack
+
+
+@pytest.fixture
+def clf_table(rng):
+    D = 6
+    X = rng.normal(size=(96, D)).astype(np.float32)
+    w = np.linspace(-1, 1, D).astype(np.float32)
+    y = (X @ w > 0).astype(np.float32)
+    return MLNumericTable.from_numpy(np.concatenate([y[:, None], X], 1),
+                                     num_shards=4)
+
+
+GRID = {"learning_rate": [0.05, 0.3], "l2": [0.0, 0.01]}
+
+
+# --------------------------------------------------------------------------- #
+# enumeration + grouping
+# --------------------------------------------------------------------------- #
+def test_grid_enumeration_deterministic():
+    a, b = grid(GRID), grid(GRID)
+    assert a == b
+    assert len(a) == 4
+    # sorted-key cartesian order: l2-major, then learning_rate
+    assert a[0] == {"l2": 0.0, "learning_rate": 0.05}
+    assert a[-1] == {"l2": 0.01, "learning_rate": 0.3}
+
+
+def test_grid_rejects_continuous_ranges():
+    with pytest.raises(ValueError, match="sample"):
+        grid({"learning_rate": ("loguniform", 0.01, 0.5)})
+
+
+def test_sample_validates_range_bounds():
+    with pytest.raises(ValueError, match="positive"):
+        sample({"lr": ("loguniform", 0.0, 0.5)}, 2)
+    with pytest.raises(ValueError, match="exceeds"):
+        sample({"lr": ("uniform", 1.0, 0.5)}, 2)
+
+
+def test_sample_deterministic_and_ranged():
+    space = {"learning_rate": ("loguniform", 1e-3, 1.0), "l2": [0.0, 0.01]}
+    a = sample(space, 8, seed=3)
+    b = sample(space, 8, seed=3)
+    assert a == b
+    assert len(a) == 8
+    for cfg in a:
+        assert 1e-3 <= cfg["learning_rate"] <= 1.0
+        assert cfg["l2"] in (0.0, 0.01)
+    assert sample(space, 8, seed=4) != a
+
+
+def test_group_trials_stacks_by_key_and_sequential_splits():
+    from repro.core.algorithms.logistic_regression import \
+        LogisticRegressionAlgorithm as LR
+
+    configs = [{"learning_rate": 0.1},
+               {"learning_rate": 0.3, "local_batch_size": 8},
+               {"learning_rate": 0.2},
+               {"l2": 0.01}]
+    specs = [LR.trial_spec(c) for c in configs]
+    groups = group_trials(specs, "auto")
+    # batch-size-8 config is ragged; the rest share one stack
+    assert groups == [[0, 2, 3], [1]]
+    assert group_trials(specs, "sequential") == [[0], [1], [2], [3]]
+    with pytest.raises(ValueError):
+        group_trials(specs, "bogus")
+
+
+def test_tree_stack_roundtrip():
+    trees = [{"w": jnp.arange(3.0) * i, "b": jnp.asarray(float(i))}
+             for i in range(4)]
+    stacked = tree_stack(trees)
+    assert stacked["w"].shape == (4, 3)
+    back = tree_unstack(stacked)
+    for orig, rec in zip(trees, back):
+        np.testing.assert_array_equal(np.asarray(orig["w"]),
+                                      np.asarray(rec["w"]))
+
+
+# --------------------------------------------------------------------------- #
+# stacked == sequential == the single-model trainer
+# --------------------------------------------------------------------------- #
+def test_stacked_matches_sequential_and_single_model(clf_table):
+    """The acceptance property, emulated: every stacked trial's weights
+    match both the sequential execution of the same search AND training
+    that config alone through LogisticRegressionAlgorithm.train."""
+    from repro.core.algorithms.logistic_regression import (
+        LogisticRegressionAlgorithm, LogisticRegressionParameters)
+    from repro.tune.cv import fold_view, holdout_split
+
+    configs = grid(GRID)
+    kw = dict(num_epochs=3, chunks_per_epoch=1, folds=None,
+              val_fraction=0.25, seed=0)
+    stacked = ModelSearch("logreg", configs, execution="stacked", **kw
+                          ).run(clf_table)
+    seq = ModelSearch("logreg", configs, execution="sequential", **kw
+                      ).run(clf_table)
+
+    assert [t.config for t in stacked.trials] == configs
+    assert [t.config for t in seq.trials] == configs
+    assert stacked.best.config == seq.best.config
+
+    tr, _ = holdout_split(clf_table.num_rows, 0.25, seed=0)
+    train_view = fold_view(clf_table, tr)
+    for t_st, t_sq in zip(stacked.trials, seq.trials):
+        assert t_st.score == pytest.approx(t_sq.score, abs=1e-5)
+        np.testing.assert_allclose(np.asarray(t_st.state),
+                                   np.asarray(t_sq.state), atol=1e-5)
+        # one window, chunks_per_epoch=1: each epoch is exactly one
+        # resident round, so the search reproduces .train() on the view
+        solo = LogisticRegressionAlgorithm.train(
+            train_view, LogisticRegressionParameters(
+                max_iter=3, schedule="allreduce", **t_st.config))
+        np.testing.assert_allclose(np.asarray(t_st.state),
+                                   np.asarray(solo.weights), atol=1e-5)
+
+
+def test_kmeans_search_with_ragged_k(rng):
+    pts = np.concatenate([rng.normal(size=(48, 4)),
+                          4 + rng.normal(size=(48, 4))]).astype(np.float32)
+    table = MLNumericTable.from_numpy(pts, num_shards=4)
+    configs = [{"k": 2, "seed": 0}, {"k": 2, "seed": 1}, {"k": 4, "seed": 0}]
+    res = ModelSearch("kmeans", configs, num_epochs=5, folds=None,
+                      seed=0).run(table)
+    assert [t.config for t in res.trials] == configs
+    # two well-separated blobs: k=2 wins on silhouette
+    assert res.best.config["k"] == 2
+    assert res.trials[0].state.shape == (2, 4)
+    assert res.trials[2].state.shape == (4, 4)
+
+
+def test_l1_config_stacks_with_unregularized(clf_table):
+    """l1 rides as a traced soft-threshold — one stack group, and the
+    l1=0 identity reproduces the prox-free single-model path."""
+    configs = [{"learning_rate": 0.3}, {"learning_rate": 0.3, "l1": 0.05}]
+    from repro.core.algorithms.logistic_regression import \
+        LogisticRegressionAlgorithm as LR
+
+    specs = [LR.trial_spec(c) for c in configs]
+    assert group_trials(specs, "auto") == [[0, 1]]
+    res = ModelSearch("logreg", configs, num_epochs=3, folds=None,
+                      seed=0).run(clf_table)
+    w_plain, w_l1 = (np.asarray(t.state) for t in res.trials)
+    assert not np.allclose(w_plain, w_l1)
+    # L1 shrinks: strictly smaller weight mass
+    assert np.sum(np.abs(w_l1)) < np.sum(np.abs(w_plain))
+
+
+# --------------------------------------------------------------------------- #
+# median stopping
+# --------------------------------------------------------------------------- #
+def test_median_rule_unit():
+    rule = MedianStoppingRule(min_rungs=1, min_trials=3)
+    assert not rule.stop(0, 0.1, [0.9, 0.9, 0.9])     # warmup rung
+    assert not rule.stop(1, 0.1, [0.9, 0.9])          # too few peers
+    assert rule.stop(1, 0.1, [0.2, 0.5, 0.9])
+    assert not rule.stop(1, 0.5, [0.2, 0.5, 0.9])     # at median: keep
+
+
+def test_median_stopping_freezes_weak_trials(clf_table):
+    configs = grid({"learning_rate": [1e-4, 1e-3, 0.3, 0.5]})
+    res = ModelSearch("logreg", configs, num_epochs=4, folds=None,
+                      execution="stacked", seed=0, rung_epochs=1,
+                      early_stop=MedianStoppingRule(min_rungs=1, min_trials=2)
+                      ).run(clf_table)
+    by_lr = {t.config["learning_rate"]: t for t in res.trials}
+    assert by_lr[1e-4].stopped and by_lr[1e-3].stopped
+    assert not by_lr[0.3].stopped and not by_lr[0.5].stopped
+    # stopped trials record fewer rungs and keep their last score
+    assert len(by_lr[1e-4].rung_scores) < len(by_lr[0.3].rung_scores)
+    assert by_lr[1e-4].score == by_lr[1e-4].rung_scores[-1]
+    assert res.best.config["learning_rate"] in (0.3, 0.5)
+
+
+# --------------------------------------------------------------------------- #
+# search checkpoint/resume (in-process; SIGKILL variant in
+# test_tune_resume.py)
+# --------------------------------------------------------------------------- #
+def test_search_resumes_trial_for_trial(clf_table, tmp_ckpt_dir):
+    configs = grid({"learning_rate": [0.05, 0.1, 0.3], "l2": [0.0, 0.01]})
+    kw = dict(num_epochs=3, folds=None, execution="sequential", seed=0)
+    full = ModelSearch("logreg", configs, **kw).run(clf_table)
+
+    class Interrupt(Exception):
+        pass
+
+    def bomb(units_done, trial_indices):
+        if units_done == 2:
+            raise Interrupt
+
+    partial = ModelSearch("logreg", configs, ckpt_dir=tmp_ckpt_dir,
+                          unit_callback=bomb, **kw)
+    with pytest.raises(Interrupt):
+        partial.run(clf_table)
+
+    resumed = ModelSearch("logreg", configs, ckpt_dir=tmp_ckpt_dir, **kw
+                          ).run(clf_table, resume=True)
+    assert [t.config for t in resumed.trials] == [t.config for t in full.trials]
+    for a, b in zip(full.trials, resumed.trials):
+        assert a.score == pytest.approx(b.score, abs=1e-6)
+        np.testing.assert_allclose(np.asarray(a.state), np.asarray(b.state),
+                                   atol=1e-6)
+    assert full.best.config == resumed.best.config
+
+
+def test_resume_refuses_mismatched_search(clf_table, tmp_ckpt_dir):
+    kw = dict(num_epochs=2, folds=None, execution="sequential", seed=0)
+    configs = grid({"learning_rate": [0.1, 0.3]})
+    ModelSearch("logreg", configs, ckpt_dir=tmp_ckpt_dir, **kw).run(clf_table)
+    other = ModelSearch("logreg", grid({"learning_rate": [0.1, 0.5]}),
+                        ckpt_dir=tmp_ckpt_dir, **kw)
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.run(clf_table, resume=True)
+    # the same search against DIFFERENT data must refuse too — resuming
+    # would silently mix scores computed on incomparable tables
+    bigger = MLNumericTable.from_numpy(
+        np.concatenate([np.asarray(clf_table.data)] * 2), num_shards=4)
+    with pytest.raises(ValueError, match="fingerprint"):
+        ModelSearch("logreg", configs, ckpt_dir=tmp_ckpt_dir, **kw
+                    ).run(bigger, resume=True)
+
+
+def test_trials_carry_trained_models(clf_table):
+    from repro.core.algorithms.logistic_regression import \
+        LogisticRegressionModel
+
+    res = ModelSearch("logreg", grid({"learning_rate": [0.1, 0.3]}),
+                      num_epochs=2, folds=None, seed=0).run(clf_table)
+    for t in res.trials:
+        assert isinstance(t.model, LogisticRegressionModel)
+        np.testing.assert_array_equal(np.asarray(t.model.weights),
+                                      np.asarray(t.state))
+
+
+def test_checkpointer_roundtrip(tmp_ckpt_dir):
+    ck = SearchCheckpointer(tmp_ckpt_dir, "fp")
+    states = {0: jnp.arange(3.0), 2: jnp.ones(3)}
+    info = {0: {"score": 0.5, "rung_scores": [0.5], "stopped": False},
+            2: {"score": 0.7, "rung_scores": [0.7], "stopped": True}}
+    ck.save(states, info, units_done=2)
+    got_states, got_info, units = ck.resume(lambda i: jnp.zeros(3))
+    assert units == 2
+    assert set(got_states) == {0, 2}
+    np.testing.assert_array_equal(np.asarray(got_states[0]),
+                                  np.arange(3.0))
+    assert got_info[2]["stopped"] is True
+    with pytest.raises(ValueError, match="fingerprint"):
+        SearchCheckpointer(tmp_ckpt_dir, "fp2").resume(lambda i: jnp.zeros(3))
+
+
+# --------------------------------------------------------------------------- #
+# ALS trial stacking
+# --------------------------------------------------------------------------- #
+def test_als_stacked_matches_sequential(rng):
+    from repro.core.algorithms.als import (ALSParameters, BroadcastALS,
+                                           pack_csr_table)
+
+    m, n, nnz = 24, 16, 120
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    packed = pack_csr_table(rows, cols, vals, m, max_nnz=12, num_shards=4)
+    packedT = pack_csr_table(cols, rows, vals, n, max_nnz=16, num_shards=4)
+    ps = [ALSParameters(rank=4, lam=lam, max_iter=3, seed=seed)
+          for lam, seed in [(0.01, 0), (0.1, 0), (0.01, 1)]]
+    stacked = BroadcastALS.train_stacked(packed, ps, packedT)
+    assert len(stacked) == 3
+    for p, model in zip(ps, stacked):
+        ref = BroadcastALS.train(packed, p, packedT)
+        # vmapped solves reorder fp ops vs the solo path; 1e-3 is tight
+        # for iterated normal-equation solves on random ratings
+        np.testing.assert_allclose(np.asarray(model.U), np.asarray(ref.U),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(model.V), np.asarray(ref.V),
+                                   atol=1e-3, rtol=1e-3)
+    # differing lams produce genuinely different factorizations
+    assert not np.allclose(np.asarray(stacked[0].U), np.asarray(stacked[1].U))
+
+
+def test_als_stacked_rejects_ragged_structure(rng):
+    from repro.core.algorithms.als import (ALSParameters, BroadcastALS,
+                                           pack_csr_table)
+
+    packed = pack_csr_table(np.asarray([0]), np.asarray([0]),
+                            np.asarray([1.0], np.float32), 4, max_nnz=2)
+    with pytest.raises(ValueError, match="rank"):
+        BroadcastALS.train_stacked(
+            packed, [ALSParameters(rank=2), ALSParameters(rank=3)], packed)
+
+
+# --------------------------------------------------------------------------- #
+# runner-level stacked entry points
+# --------------------------------------------------------------------------- #
+def test_run_stacked_rounds_matches_per_trial_rounds(clf_table):
+    import jax
+
+    def trial_step(block, w, r, h):
+        X, y = block[:, 1:], block[:, 0]
+        g = X.T @ (jax.nn.sigmoid(X @ w) - y) / X.shape[0]
+        return w - h["lr"] * g
+
+    runner = DistributedRunner(num_shards=4)
+    d = clf_table.num_cols - 1
+    lrs = jnp.asarray([0.05, 0.2, 0.4], jnp.float32)
+    stacked = runner.run_stacked_rounds(
+        clf_table, jnp.zeros((3, d)), {"lr": lrs}, trial_step, 6)
+    for i in range(3):
+        solo = runner.run_rounds(
+            clf_table, jnp.zeros(d),
+            lambda b, s, r, i=i: trial_step(b, s, r, {"lr": lrs[i]}), 6)
+        np.testing.assert_allclose(np.asarray(stacked[i]), np.asarray(solo),
+                                   atol=1e-6)
+    # the active mask freezes exactly the masked trials
+    frozen = runner.run_stacked_rounds(
+        clf_table, jnp.zeros((3, d)), {"lr": lrs}, trial_step, 6,
+        active=jnp.asarray([True, False, True]))
+    assert np.allclose(np.asarray(frozen[1]), 0.0)
+    np.testing.assert_allclose(np.asarray(frozen[0]), np.asarray(stacked[0]),
+                               atol=1e-6)

@@ -1,0 +1,110 @@
+"""Search determinism on a real 8-device mesh (ISSUE 3 acceptance).
+
+One subprocess runs the same 8-config logreg grid (seeded) under every
+combination of {3 collective schedules} x {stacked, sequential}; the host
+then asserts:
+
+  * **identical trial ordering** — every run enumerates the same configs
+    in the same order (a pure function of the seed);
+  * **identical best config** — exact equality across all six runs
+    (fp tolerance on scores, exact on the choice);
+  * **stacked == sequential** per schedule — scores and trained weights
+    to fp tolerance;
+  * **stacked == per-config single-model training** — each device-stacked
+    trial's weights match `LogisticRegressionAlgorithm.train` of that
+    config alone on the same train view, same mesh, same schedule (the
+    grid-of-8 acceptance criterion).
+"""
+import numpy as np
+import pytest
+
+from conftest import result_json, run_devices_subprocess
+
+pytestmark = pytest.mark.slow
+
+_PROGRAM = """
+import json
+import numpy as np
+import jax
+
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm, LogisticRegressionParameters)
+from repro.core.collectives import CollectiveSchedule
+from repro.core.compat import make_mesh
+from repro.core.numeric_table import MLNumericTable
+from repro.tune import ModelSearch, fold_view, grid, holdout_split
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = make_mesh((8,), ("data",))
+
+ROWS, D, EPOCHS = 128, 8, 3
+rng = np.random.default_rng(42)
+X = rng.normal(size=(ROWS, D)).astype(np.float32)
+w = np.linspace(-1, 1, D).astype(np.float32)
+y = (X @ w > 0).astype(np.float32)
+table = MLNumericTable.from_numpy(np.concatenate([y[:, None], X], 1),
+                                  mesh=mesh)
+
+CONFIGS = grid({"learning_rate": [0.05, 0.1, 0.2, 0.3], "l2": [0.0, 0.01]})
+assert len(CONFIGS) == 8
+
+out = {"runs": {}, "solo": {}}
+for sched in CollectiveSchedule:
+    for mode in ("stacked", "sequential"):
+        res = ModelSearch("logreg", CONFIGS, num_epochs=EPOCHS,
+                          chunks_per_epoch=1, folds=None, val_fraction=0.25,
+                          schedule=sched, execution=mode, seed=0).run(table)
+        out["runs"][sched.value + "/" + mode] = {
+            "order": [t.config for t in res.trials],
+            "scores": [t.score for t in res.trials],
+            "weights": [np.asarray(t.state).tolist() for t in res.trials],
+            "best": res.best.config,
+        }
+
+# per-config single-model training on the identical train view
+tr, _ = holdout_split(ROWS, 0.25, seed=0)
+train_view = fold_view(table, tr)
+for i, cfg in enumerate(CONFIGS):
+    model = LogisticRegressionAlgorithm.train(
+        train_view, LogisticRegressionParameters(
+            max_iter=EPOCHS, schedule="allreduce", **cfg))
+    out["solo"][str(i)] = np.asarray(model.weights).tolist()
+
+print("RESULT::" + json.dumps(out))
+"""
+
+
+def test_search_deterministic_across_schedules_and_execution():
+    out = result_json(run_devices_subprocess(_PROGRAM))
+    runs = out["runs"]
+    assert len(runs) == 6
+
+    ref_key = "allreduce/stacked"
+    ref = runs[ref_key]
+    for key, run in runs.items():
+        # identical trial ordering everywhere
+        assert run["order"] == ref["order"], key
+        # identical best config, exactly
+        assert run["best"] == ref["best"], key
+
+    # stacked == sequential per schedule: scores and weights to fp tolerance
+    for sched in ("allreduce", "gather_broadcast", "reduce_scatter"):
+        st, sq = runs[f"{sched}/stacked"], runs[f"{sched}/sequential"]
+        np.testing.assert_allclose(st["scores"], sq["scores"], atol=1e-5,
+                                   err_msg=sched)
+        np.testing.assert_allclose(np.asarray(st["weights"]),
+                                   np.asarray(sq["weights"]), atol=1e-5,
+                                   err_msg=sched)
+
+    # schedules agree with each other to fp tolerance
+    for key, run in runs.items():
+        np.testing.assert_allclose(run["scores"], ref["scores"], atol=1e-4,
+                                   err_msg=key)
+
+    # the acceptance grid: every device-stacked trial matches training
+    # that config alone on the same 8-device mesh
+    stacked_w = np.asarray(ref["weights"])
+    for i in range(8):
+        np.testing.assert_allclose(
+            stacked_w[i], np.asarray(out["solo"][str(i)]), atol=1e-5,
+            err_msg=f"stacked trial {i} diverged from single-model training")

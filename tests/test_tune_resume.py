@@ -1,0 +1,76 @@
+"""Kill-and-resume for a mid-search checkpoint, through the real CLI
+(extends the `test_streaming_resume` subprocess fixtures).
+
+Three `launch/tune.py` subprocesses over the identical seeded search:
+
+  1. **straight** — the full 6-trial grid, no checkpointing;
+  2. **killed** — same search with `--ckpt-dir`, fault-injected via
+     `--kill-after-trial 3`: the process SIGKILLs itself right after
+     trial 3's snapshot is published (an uncatchable preemption);
+  3. **resumed** — same command line plus `--resume`: restores the three
+     completed trials from the snapshot and runs only the rest.
+
+The resumed search must match the uninterrupted one **trial-for-trial**:
+same configs in the same order, fp-equal scores and trained weights, and
+the same winner.
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from conftest import describe_failure, result_json, run_devices_subprocess
+
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(not hasattr(signal, "SIGKILL"),
+                       reason="POSIX-only kill semantics"),
+]
+
+_GRID = "learning_rate=0.05,0.1,0.3;l2=0.0,0.01"
+_COMMON = (f"--algorithm logreg --grid {_GRID} --rows 64 --features 6 "
+           "--epochs 3 --chunks-per-epoch 2 --folds 2 --exec sequential "
+           "--seed 0 --json")
+
+_PROG = """
+import repro.launch.tune as tune
+tune.main({args!r}.split())
+"""
+
+
+def _run(args: str, devices: int = 4, check: bool = True):
+    return run_devices_subprocess(_PROG.format(args=args), devices=devices,
+                                  check=check)
+
+
+def test_tune_cli_kill_and_resume_matches_uninterrupted(tmp_path):
+    straight = result_json(_run(_COMMON))
+    assert len(straight["trials"]) == 6
+
+    ckpt = tmp_path / "search-ckpt"
+    killed = _run(f"{_COMMON} --ckpt-dir {ckpt} --kill-after-trial 3",
+                  check=False)
+    assert killed.returncode == -signal.SIGKILL, describe_failure(killed)
+    # the snapshot for three completed trials is on disk
+    assert (ckpt / "step_3.npz").exists()
+
+    resumed_proc = _run(f"{_COMMON} --ckpt-dir {ckpt} --resume")
+    assert "resuming from unit 3" in resumed_proc.stdout
+    resumed = result_json(resumed_proc)
+
+    assert len(resumed["trials"]) == 6
+    for want, got in zip(straight["trials"], resumed["trials"]):
+        assert got["config"] == want["config"]
+        assert got["score"] == pytest.approx(want["score"], abs=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(got["state"]), np.asarray(want["state"]), atol=1e-6,
+            err_msg=f"trial {want['index']} diverged after resume")
+    assert resumed["best"]["config"] == straight["best"]["config"]
+    assert resumed["best"]["index"] == straight["best"]["index"]
+
+
+def test_tune_cli_resume_without_checkpoint_starts_fresh(tmp_path):
+    out = _run(f"{_COMMON} --ckpt-dir {tmp_path / 'empty'} --resume",
+               devices=1)
+    assert "no checkpoint found; starting fresh" in out.stdout
+    assert len(result_json(out)["trials"]) == 6
