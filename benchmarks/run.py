@@ -9,9 +9,10 @@
   kernel_bench          (beyond paper)  kernel traffic models
   roofline              (beyond paper)  per-arch dry-run roofline table
   model_search          (beyond paper)  stacked vs sequential trials/sec
+  serving_throughput    (beyond paper)  continuous vs static batching
 
-(streaming_throughput and model_search can also run standalone:
-``python -m benchmarks.<name>``.)
+(streaming_throughput, model_search, and serving_throughput can also run
+standalone: ``python -m benchmarks.<name>``.)
 """
 from __future__ import annotations
 
@@ -29,7 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (als_scaling, collective_schedules, kernel_bench,
-                            loc_table, logreg_scaling, model_search, roofline)
+                            loc_table, logreg_scaling, model_search, roofline,
+                            serving_throughput)
 
     devices = "1,2,4" if args.fast else "1,2,4,8"
     jobs = [
@@ -40,6 +42,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench.main, []),
         ("roofline", roofline.main, []),
         ("model_search", model_search.main, []),
+        ("serving_throughput", serving_throughput.main, []),
     ]
     failures = 0
     for name, fn, argv in jobs:

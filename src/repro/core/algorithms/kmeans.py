@@ -33,6 +33,23 @@ class KMeansParameters:
     max_iter: int = 20
     seed: int = 0
     schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
+    use_kernel: bool = False  # route assignment through the Pallas kernel
+
+
+def _assign(block: jnp.ndarray, centroids: jnp.ndarray,
+            use_kernel: bool = False) -> jnp.ndarray:
+    """Nearest-centroid assignment — THE Lloyd hot path (O(rows·k·d) per
+    round).  ``use_kernel`` routes it through the fused pairwise-distance
+    Pallas kernel (``repro.kernels.kmeans_assign``: one streamed matmul,
+    centroid-norm add and argmin fused into the epilogue, no (rows, k, d)
+    broadcast in HBM); the default is the jnp form, which the kernel's
+    oracle matches (fp-parity tested in ``tests/test_kernels.py``)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.kmeans_assign(block, centroids)
+    d2 = jnp.sum((block[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=-1)
 
 
 class KMeansModel(Model):
@@ -41,18 +58,18 @@ class KMeansModel(Model):
         self.params = params
 
     def predict(self, x: jnp.ndarray) -> jnp.ndarray:
-        d2 = jnp.sum((x[:, None, :] - self.centroids[None, :, :]) ** 2, axis=-1)
-        return jnp.argmin(d2, axis=-1)
+        return _assign(x, self.centroids,
+                       getattr(self.params, "use_kernel", False))
 
     def inertia(self, x: jnp.ndarray) -> jnp.ndarray:
         d2 = jnp.sum((x[:, None, :] - self.centroids[None, :, :]) ** 2, axis=-1)
         return jnp.sum(jnp.min(d2, axis=-1))
 
 
-def _local_stats(block: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+def _local_stats(block: jnp.ndarray, centroids: jnp.ndarray,
+                 use_kernel: bool = False) -> jnp.ndarray:
     """Pure local function: per-partition (k, d+1) [cluster sums | counts]."""
-    d2 = jnp.sum((block[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
-    assign = jnp.argmin(d2, axis=-1)                              # (rows,)
+    assign = _assign(block, centroids, use_kernel)                # (rows,)
     onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=block.dtype)
     sums = onehot.T @ block                                       # (k, d)
     counts = jnp.sum(onehot, axis=0)[:, None]                     # (k, 1)
@@ -112,7 +129,7 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
         centroids = jnp.take(data.data, perm, axis=0)
 
         def local_step(block, centroids, r):
-            return _local_stats(block, centroids)
+            return _local_stats(block, centroids, p.use_kernel)
 
         def update(centroids, tot, r):
             return _centroid_update(centroids, tot)
@@ -137,6 +154,9 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
         p = _dc.replace(cls.default_parameters(), **config)
         if metric != "silhouette":
             raise ValueError(f"unknown kmeans metric {metric!r} (silhouette)")
+        if p.use_kernel:
+            raise ValueError("model search does not stack the Pallas-kernel "
+                             "assignment (trials vmap over one jnp round)")
 
         def init(table) -> jnp.ndarray:
             if p.k > table.num_rows:
@@ -182,7 +202,7 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
             init_centroids = jnp.asarray(first[: p.k])
 
         def local_step(block, centroids, r):
-            return _local_stats(block, centroids)
+            return _local_stats(block, centroids, p.use_kernel)
 
         def update(centroids, tot, r):
             return _centroid_update(centroids, tot)

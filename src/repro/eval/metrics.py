@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core.collectives import CollectiveSchedule
 from repro.core.runner import DistributedRunner
 
-__all__ = ["accuracy", "log_loss", "rmse", "silhouette_lite"]
+__all__ = ["accuracy", "log_loss", "rmse", "silhouette_lite", "predictions"]
 
 #: predict(X_block) -> (rows,) predictions, or (K, rows) for K stacked trials
 PredictFn = Callable[[jnp.ndarray], jnp.ndarray]
@@ -43,6 +43,26 @@ def _sum_stats(table: Any, local_fn: Callable[[jnp.ndarray], Any],
     globally summed under ``schedule``."""
     runner = DistributedRunner.for_table(table, schedule=schedule)
     return runner.run_once(table, local_fn, combine="sum")
+
+
+def predictions(table: Any, predict: PredictFn, *,
+                schedule: Schedule = CollectiveSchedule.GATHER_BROADCAST
+                ) -> jnp.ndarray:
+    """Shard-aware batched predict: run ``predict`` on every partition's
+    feature block and concatenate the per-partition outputs in row order
+    (``combine="concat"``, so the wire pattern is the configured
+    schedule's broadcast form).
+
+    Unlike the metrics above, the whole table is treated as features — no
+    label column is stripped; callers serving supervised models slice it
+    themselves.  The serving-side
+    :class:`repro.serve.predictor.ModelPredictor` microbatcher compiles
+    this same one-pass pattern once per service; one pass serves a whole
+    microbatch without ever gathering *rows* to one host.
+    """
+    runner = DistributedRunner.for_table(table, schedule=schedule)
+    return runner.partition_apply(
+        table.data, lambda block: jnp.asarray(predict(block)), (), "concat")
 
 
 def accuracy(table: Any, predict: PredictFn, *,

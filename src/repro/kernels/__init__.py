@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the compute hot spots (validated interpret=True).
 
     flash_attention — online-softmax attention (causal/SWA/chunked, GQA)
+    kmeans_assign   — fused pairwise-distance Lloyd assignment argmin
     logreg_grad     — the paper's §IV-A fused gradient  Xᵀ(σ(Xw) − y)
     rmsnorm         — single-pass fused RMSNorm
     ssd_scan        — Mamba-2 SSD chunked dual-form scan (state in VMEM)

@@ -15,12 +15,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.kernels.logreg_grad import logreg_grad_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_scan
 
-__all__ = ["flash_attention", "logreg_grad", "rmsnorm", "ssd_chunk_scan",
-           "on_tpu"]
+__all__ = ["flash_attention", "kmeans_assign", "logreg_grad", "rmsnorm",
+           "ssd_chunk_scan", "on_tpu"]
 
 
 @functools.lru_cache(None)
@@ -50,6 +51,21 @@ def flash_attention(q, k, v, *, causal: bool = True,
                                        chunk=chunk, scale=scale)
     return _flash(q, k, v, causal=causal, window=window, chunk=chunk,
                   scale=scale, block_q=bq, block_k=bk, interpret=_interp())
+
+
+def kmeans_assign(X, C, *, block_rows: int = 256,
+                  block_cols: int = 512) -> jnp.ndarray:
+    """Nearest-centroid assignment argmin_c ||x − c||² (fused pairwise
+    distances).  X: (n, d), C: (k, d) → (n,) int32."""
+    if X.ndim != 2 or C.ndim != 2 or X.shape[1] != C.shape[1]:
+        raise ValueError(f"shape mismatch: X{X.shape} C{C.shape}")
+    n, d = X.shape
+    br = min(block_rows, n)
+    bc = min(block_cols, d)
+    if n % br or d % bc:
+        return ref.kmeans_assign_ref(X, C)
+    return kmeans_assign_pallas(X, C, block_rows=br, block_cols=bc,
+                                interpret=_interp())
 
 
 def logreg_grad(X, y, w, *, block_rows: int = 256, block_cols: int = 512) -> jnp.ndarray:

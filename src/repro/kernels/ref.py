@@ -11,8 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "logreg_grad_ref", "rmsnorm_ref",
-           "ssd_chunk_scan_ref"]
+__all__ = ["flash_attention_ref", "kmeans_assign_ref", "logreg_grad_ref",
+           "rmsnorm_ref", "ssd_chunk_scan_ref"]
 
 NEG_INF = -2.0e38
 
@@ -52,6 +52,21 @@ def flash_attention_ref(
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def kmeans_assign_ref(X: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-centroid assignment: argmin_c ||x − c||².  X: (n, d),
+    C: (k, d) → (n,) int32.
+
+    Computed in the kernel's expanded form — ``||x||²`` is constant per row,
+    so ``argmin_c (||c||² − 2·x·c)`` is the same assignment — with the same
+    fp32 matmul accumulation, making this the *exact* oracle for the Pallas
+    kernel (bitwise-equal scores, not merely the same argmin on
+    well-separated data)."""
+    Xf = X.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    score = jnp.sum(Cf * Cf, axis=1)[None, :] - 2.0 * (Xf @ Cf.T)
+    return jnp.argmin(score, axis=1).astype(jnp.int32)
 
 
 def logreg_grad_ref(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

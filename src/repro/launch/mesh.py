@@ -18,7 +18,8 @@ import jax
 
 from repro.core.compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "serving_setup",
+           "host_serving_setup"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -55,6 +56,22 @@ def serving_setup(cfg, *, multi_pod: bool = False):
     if recurrent:
         return make_production_mesh(multi_pod=multi_pod), DEFAULT_RULES
     return make_serving_mesh(multi_pod=multi_pod), SERVE_RULES
+
+
+def host_serving_setup(cfg):
+    """:func:`serving_setup` sized to whatever host devices exist: the same
+    per-arch rules selection, but the mesh is (devices, 1) — the "data"
+    axis carries the serve engine's decode-slot sharding (cache batch dim),
+    "model" collapses to 1.  This is what ``launch/serve.py`` and the
+    serving tests run under on CPU; on a real pod use
+    :func:`serving_setup`.  Returns (mesh, rules)."""
+    from repro.models.config import BlockKind
+    from repro.sharding.rules import DEFAULT_RULES, SERVE_RULES
+
+    recurrent = any(k in (BlockKind.RGLRU, BlockKind.SSD)
+                    for k in cfg.pattern)
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    return mesh, (DEFAULT_RULES if recurrent else SERVE_RULES)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:

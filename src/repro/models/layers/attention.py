@@ -86,18 +86,25 @@ def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def _cache_write(cache: Dict[str, jnp.ndarray], slot: jnp.ndarray,
                  k_new: jnp.ndarray, v_new: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-    """Write one token (B, kv, hd) at ring slot (scalar int32)."""
+    """Write one token (B, kv, hd) at ring slot ``slot`` — a scalar (all
+    batch rows share the position) or a (B,) vector (continuous-batching
+    decode, where every slot sits at its own position)."""
     out = dict(cache)
+    slot = jnp.asarray(slot)
+    if slot.ndim == 0:
+        idx = (slice(None), slot)
+    else:
+        idx = (jnp.arange(k_new.shape[0]), slot)
     if "k_scale" in cache:
         kq, ks = _quantize(k_new)
         vq, vs = _quantize(v_new)
-        out["k"] = cache["k"].at[:, slot].set(kq)
-        out["v"] = cache["v"].at[:, slot].set(vq)
-        out["k_scale"] = cache["k_scale"].at[:, slot].set(ks)
-        out["v_scale"] = cache["v_scale"].at[:, slot].set(vs)
+        out["k"] = cache["k"].at[idx].set(kq)
+        out["v"] = cache["v"].at[idx].set(vq)
+        out["k_scale"] = cache["k_scale"].at[idx].set(ks)
+        out["v_scale"] = cache["v_scale"].at[idx].set(vs)
     else:
-        out["k"] = cache["k"].at[:, slot].set(k_new.astype(cache["k"].dtype))
-        out["v"] = cache["v"].at[:, slot].set(v_new.astype(cache["v"].dtype))
+        out["k"] = cache["k"].at[idx].set(k_new.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[idx].set(v_new.astype(cache["v"].dtype))
     return out
 
 
@@ -211,6 +218,7 @@ def attn_apply(
     kv_src: Optional[jnp.ndarray] = None,      # cross-attention source (B,Se,D)
     is_cross: bool = False,
     use_rope: bool = True,
+    lengths: Optional[jnp.ndarray] = None,     # (B,) ragged prefill lengths
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """Returns (output (B,S,D), updated_cache_or_None)."""
     B, S, D = x.shape
@@ -254,33 +262,41 @@ def attn_apply(
         if cache is not None:
             # write the (possibly windowed) tail of K/V into the cache for
             # subsequent decode
-            cache = _prefill_fill_cache(cache, k, v)
+            cache = _prefill_fill_cache(cache, k, v, lengths)
         out = _prefill_attend(q, _repeat_kv(k, groups), _repeat_kv(v, groups),
                               kind, cfg, pos_q)
         return _out_proj(out, params), cache
 
     # ---------------- decode: S == 1, attend to cache ---------------- #
+    # ``pos`` is a scalar (all rows at the same position) or a (B,) vector
+    # (continuous batching: every slot decodes at its own position).  The
+    # scalar form is the vector form with identical rows, so one code path
+    # serves both.
     assert mode == "decode" and cache is not None and pos is not None
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    pos_b = pos if per_slot else jnp.broadcast_to(pos, (B,))   # (B,)
     if rope_on:
-        q = apply_rope(q, pos[None, None], cfg.rope_base)
+        q = apply_rope(q, pos_b[:, None], cfg.rope_base)
     if not cross:
         if rope_on:
-            k = apply_rope(k, pos[None, None], cfg.rope_base)
+            k = apply_rope(k, pos_b[:, None], cfg.rope_base)
         slots = cache["k"].shape[1]
-        slot = pos % slots
-        cache = _cache_write(cache, slot, k[:, 0], v[:, 0])
+        cache = _cache_write(cache, (pos_b if per_slot else pos) % slots,
+                             k[:, 0], v[:, 0])
         kc, vc = _cache_read(cache)
         slot_ids = jnp.arange(slots)
-        # most recent position ≡ slot (mod slots) that is ≤ pos
-        slot_pos = pos - (pos - slot_ids) % slots
+        # most recent position ≡ slot (mod slots) that is ≤ pos, per row
+        pc = pos_b[:, None]                                    # (B, 1)
+        slot_pos = pc - (pc - slot_ids[None, :]) % slots       # (B, slots)
         valid = slot_pos >= 0
         if kind == BlockKind.ATTN_LOCAL:
-            valid &= slot_pos > pos - cfg.window
+            valid &= slot_pos > pc - cfg.window
         elif kind == BlockKind.ATTN_CHUNKED:
-            valid &= (slot_pos // cfg.attn_chunk) == (pos // cfg.attn_chunk)
+            valid &= (slot_pos // cfg.attn_chunk) == (pc // cfg.attn_chunk)
         else:
-            valid &= slot_pos <= pos
-        mask = valid[None, None, None, :]
+            valid &= slot_pos <= pc
+        mask = valid[:, None, None, :]
         new_cache = cache
     else:
         kc, vc = _cache_read(cache)
@@ -290,28 +306,56 @@ def attn_apply(
     return _out_proj(out, params), new_cache
 
 
-def _prefill_fill_cache(cache, k, v):
+def _prefill_fill_cache(cache, k, v, lengths=None):
     """Copy the last ``slots`` tokens of prefill K/V into the decode cache,
-    laid out so ring addressing (slot = pos % slots) stays consistent."""
+    laid out so ring addressing (slot = pos % slots) stays consistent.
+
+    ``lengths=None`` is the classic equal-length path.  With ``lengths``
+    (B,), the prompts are *right-padded* to a common S and slot b's real
+    tokens occupy columns 0..lengths[b]-1: each row keeps the last
+    ``min(lengths[b], slots)`` real columns and every pad / evicted column
+    is routed to an out-of-bounds destination and dropped by the scatter —
+    pad tokens never enter the cache, so the decode-side validity mask
+    (slot_pos ≤ pos) stays exact per slot."""
     B, S = k.shape[0], k.shape[1]
     slots = cache["k"].shape[1]
-    take = min(S, slots)
-    ks = k[:, S - take:]
-    vs = v[:, S - take:]
-    # position of ks[:, j] is (S - take + j); its slot is that mod slots
-    pos0 = S - take
-    dest = (pos0 + jnp.arange(take)) % slots
     out = dict(cache)
+    if lengths is None:
+        take = min(S, slots)
+        ks = k[:, S - take:]
+        vs = v[:, S - take:]
+        # position of ks[:, j] is (S - take + j); its slot is that mod slots
+        pos0 = S - take
+        dest = (pos0 + jnp.arange(take)) % slots
+        if "k_scale" in cache:
+            kq, ksc = _quantize(ks)
+            vq, vsc = _quantize(vs)
+            out["k"] = cache["k"].at[:, dest].set(kq)
+            out["v"] = cache["v"].at[:, dest].set(vq)
+            out["k_scale"] = cache["k_scale"].at[:, dest].set(ksc)
+            out["v_scale"] = cache["v_scale"].at[:, dest].set(vsc)
+        else:
+            out["k"] = cache["k"].at[:, dest].set(ks.astype(cache["k"].dtype))
+            out["v"] = cache["v"].at[:, dest].set(vs.astype(cache["v"].dtype))
+        return out
+
+    L = jnp.asarray(lengths, jnp.int32)[:, None]               # (B, 1)
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]                # (1, S)
+    keep = (j < L) & (j >= L - slots)     # last ≤slots real columns per row
+    dest = jnp.where(keep, j % slots, slots)     # ``slots`` is OOB → dropped
+    bidx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, S))
     if "k_scale" in cache:
-        kq, ksc = _quantize(ks)
-        vq, vsc = _quantize(vs)
-        out["k"] = cache["k"].at[:, dest].set(kq)
-        out["v"] = cache["v"].at[:, dest].set(vq)
-        out["k_scale"] = cache["k_scale"].at[:, dest].set(ksc)
-        out["v_scale"] = cache["v_scale"].at[:, dest].set(vsc)
+        kq, ksc = _quantize(k)
+        vq, vsc = _quantize(v)
+        out["k"] = cache["k"].at[bidx, dest].set(kq, mode="drop")
+        out["v"] = cache["v"].at[bidx, dest].set(vq, mode="drop")
+        out["k_scale"] = cache["k_scale"].at[bidx, dest].set(ksc, mode="drop")
+        out["v_scale"] = cache["v_scale"].at[bidx, dest].set(vsc, mode="drop")
     else:
-        out["k"] = cache["k"].at[:, dest].set(ks.astype(cache["k"].dtype))
-        out["v"] = cache["v"].at[:, dest].set(vs.astype(cache["v"].dtype))
+        out["k"] = cache["k"].at[bidx, dest].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        out["v"] = cache["v"].at[bidx, dest].set(
+            v.astype(cache["v"].dtype), mode="drop")
     return out
 
 

@@ -198,7 +198,7 @@ class TransformerLM:
     # ---------------- block application ---------------- #
     def _apply_block(self, cfg: ArchConfig, kind: BlockKind, bp: Dict, x, *,
                      mode: str, positions=None, pos=None, cache=None,
-                     memory=None):
+                     memory=None, lengths=None):
         aux = jnp.zeros((), jnp.float32)
         new_cache: Dict[str, Any] = {}
         if kind in ATTENTION_KINDS:
@@ -206,7 +206,7 @@ class TransformerLM:
             h, c = attn_apply(bp["attn"], h, cfg=cfg, kind=kind, mode=mode,
                               positions=positions, pos=pos,
                               cache=None if cache is None else cache.get("attn"),
-                              use_rope=cfg.use_rope)
+                              use_rope=cfg.use_rope, lengths=lengths)
             if c is not None:
                 new_cache["attn"] = c
             x = x + h
@@ -247,7 +247,7 @@ class TransformerLM:
         return x, new_cache, aux
 
     def _run_stack(self, params, x, *, mode, positions=None, pos=None,
-                   cache=None, memory=None):
+                   cache=None, memory=None, lengths=None):
         cfg = self.cfg
 
         def period_fn(carry, scanned):
@@ -261,7 +261,7 @@ class TransformerLM:
                 x, nc, aux = self._apply_block(
                     cfg, kind, pp[f"b{i}"], x, mode=mode, positions=positions,
                     pos=pos, cache=None if pc is None else pc[f"b{i}"],
-                    memory=memory)
+                    memory=memory, lengths=lengths)
                 new_pc[f"b{i}"] = nc
                 aux_tot = aux_tot + aux
             return (x, aux_tot), (new_pc if cache is not None else None)
@@ -339,13 +339,57 @@ class TransformerLM:
         x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
         return logits_from(params["embed"], x), new_cache
 
+    def prefill_ragged(self, params: Dict, tokens: jnp.ndarray,
+                       lengths: jnp.ndarray, cache: Dict):
+        """Mixed-length prefill for continuous batching: ``tokens`` is
+        (B, S) with slot b's prompt *right-padded* — real tokens in columns
+        0..lengths[b]-1, pad after.  Causal masking means a real token never
+        attends a pad column, and the cache fill drops pad columns entirely
+        (see ``_prefill_fill_cache``), so each slot's cache is exactly what
+        a lone batch-1 prefill of its prompt would have written.  Returns
+        (per-slot next-token logits (B, 1, V), cache).
+
+        Restricted to attention-only dense stacks: a recurrent state (RG-LRU
+        h, SSD h, conv taps) would absorb the pad tail, and MoE
+        capacity-factor routing couples slots through the shared token
+        budget — those architectures prefill per-request instead (the serve
+        engine handles the fallback).
+        """
+        cfg = self.cfg
+        if any(k not in ATTENTION_KINDS for k in cfg.pattern):
+            raise ValueError(f"{cfg.name}: prefill_ragged requires an "
+                             "attention-only pattern (recurrent state would "
+                             "absorb the pad tail)")
+        if cfg.num_experts or cfg.cross_attention or cfg.vision_tokens:
+            raise ValueError(f"{cfg.name}: prefill_ragged supports dense "
+                             "text-only decoders")
+        lengths = jnp.asarray(lengths, jnp.int32)
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens,
+                         jnp.arange(S) if cfg.learned_pos else None)
+        positions = jnp.arange(S)
+        x, aux, new_cache = self._run_stack(params, x, mode="prefill",
+                                            positions=positions, cache=cache,
+                                            lengths=lengths)
+        # gather each slot's last *real* token (right-padding puts it at
+        # column lengths[b]-1), then norm + LM head on (B, 1, D) only
+        x_last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+        x_last = _norm_apply(cfg, params["final_norm"], x_last)
+        return logits_from(params["embed"], x_last), new_cache
+
     def decode_step(self, params: Dict, token: jnp.ndarray, pos: jnp.ndarray,
                     cache: Dict):
-        """One decode step.  token: (B, 1) int32; pos: scalar int32 (position
-        of this token).  Returns (logits (B,1,V), new_cache)."""
+        """One decode step.  token: (B, 1) int32; pos: scalar int32 (all
+        rows at the same position) or (B,) int32 (continuous batching:
+        per-slot positions).  Returns (logits (B,1,V), new_cache)."""
         cfg = self.cfg
-        x = embed_tokens(params["embed"], token,
-                         pos[None] if cfg.learned_pos else None)
+        pos = jnp.asarray(pos, jnp.int32)
+        if cfg.learned_pos:
+            emb_pos = pos[:, None] if pos.ndim == 1 else pos[None]
+        else:
+            emb_pos = None
+        x = embed_tokens(params["embed"], token, emb_pos)
         x, aux, new_cache = self._run_stack(params, x, mode="decode", pos=pos,
                                             cache=cache)
         x = _norm_apply(cfg, params["final_norm"], x)

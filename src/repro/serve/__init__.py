@@ -1,4 +1,8 @@
 from repro.serve.step import make_prefill_step, make_decode_step, cache_axes
+from repro.serve.scheduler import Request, SlotScheduler
 from repro.serve.engine import ServeEngine
+from repro.serve.predictor import ModelPredictor, PredictRequest
 
-__all__ = ["make_prefill_step", "make_decode_step", "cache_axes", "ServeEngine"]
+__all__ = ["make_prefill_step", "make_decode_step", "cache_axes",
+           "Request", "SlotScheduler", "ServeEngine",
+           "ModelPredictor", "PredictRequest"]

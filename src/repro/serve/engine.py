@@ -1,83 +1,254 @@
-"""Batched serving engine: static-batch continuous decode over a request
-queue (the serving-side analogue of the paper §III-C 'Model makes
-predictions' contract, scaled from one ``predict`` call to a request
-stream).
+"""Continuous-batching decode engine: one shared KV cache, per-slot
+positions, mid-decode backfill.
 
-This engine is deliberately simple but real: it admits requests into fixed
-batch slots, prefills per request, then steps all active slots together with
-one fused decode step per token, retiring slots on EOS/max-tokens.  Slot
-admission is host-side; all device work is two jitted functions.
+The serving-side analogue of the paper §III-C 'Model makes predictions'
+contract, scaled from one ``predict`` call to a request stream.  Device
+work is three jitted functions:
 
-See ``docs/architecture.md`` for where serving sits next to the training
-stack and ``docs/benchmarks.md`` for the serving-mesh measurements; the
-mesh/rules selection the engine runs under is
-:func:`repro.launch.mesh.serving_setup`.
+  * **ragged prefill** — newly admitted prompts of *mixed* lengths are
+    right-padded and prefilled together (``TransformerLM.prefill_ragged``);
+    pad columns never enter the shared cache, so each slot's cache is
+    exactly what a lone batch-1 prefill would have written.  Architectures
+    whose state a pad tail would corrupt (recurrent blocks, MoE capacity
+    routing, encoder/vision frontends) prefill per-request into a batch-1
+    cache that is scattered into the slot instead.
+  * **fused decode** — ONE masked decode step advances every busy slot
+    regardless of where each sits in its sequence: ``pos`` is a (B,)
+    vector and the attention mask is per-slot (``models/layers/attention``).
+  * **cache scatter** — drops a prefilled request into its slot of the
+    shared cache.
+
+Slot admission, retirement, and backfill are host-side and owned by
+:class:`repro.serve.scheduler.SlotScheduler`; the engine is the device
+half.  ``run_static`` keeps the pre-refactor behavior (equal-length
+grouping, no backfill) as the reference baseline — greedy token streams
+from both paths are identical per request (asserted in
+``tests/test_serve_continuous.py``; measured in
+``benchmarks/serving_throughput.py``).
+
+The mesh/rules the engine runs under come from
+:func:`repro.launch.mesh.serving_setup` (or its host-sized twin); passing
+``mesh=`` shards the cache's slot axis over the mesh data axes via the
+same logical-rule machinery as params (``serve/step.py`` +
+``sharding/rules``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import ArchConfig
+from repro.models.config import ATTENTION_KINDS, ArchConfig
 from repro.models.transformer import TransformerLM
+from repro.serve.scheduler import Request, SlotScheduler
 
 __all__ = ["Request", "ServeEngine"]
 
 
-@dataclasses.dataclass
-class Request:
-    """One generation request: a prompt plus decode limits.
-
-    The streaming unit of the paper's Model contract (§III-C): where the
-    paper's ``Model.predict`` maps one feature vector to one prediction,
-    serving maps one ``Request`` to a token stream.  ``out_tokens`` is
-    filled in place by the engine; ``done`` flips when the request retires
-    (EOS or ``max_new_tokens``).
-    """
-
-    prompt: np.ndarray                 # (S,) int32
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+def _now_zero() -> float:
+    return 0.0
 
 
 class ServeEngine:
-    """Fixed-slot batched decode engine over a request list.
+    """Fixed-slot continuous-batching engine over a request stream.
 
-    Two jitted device functions (prefill, decode-step) plus host-side slot
-    management.  Requests with equal prompt lengths are decoded together
-    through one fused step per token; greedy outputs are identical to the
-    slot-at-a-time path (asserted in ``tests/test_serve.py``).  See
-    ``docs/architecture.md`` (serving section) for how this relates to the
-    training-side DistributedRunner.
+    ``batch_size`` decode slots share one KV cache with a real batch
+    dimension; requests are admitted into free slots (backfilled
+    mid-decode as others retire) and every busy slot advances through one
+    fused per-slot-position decode step per token.  Greedy outputs are
+    identical to the slot-at-a-time path (tested).
     """
 
     def __init__(self, cfg: ArchConfig, params, batch_size: int, max_seq: int,
-                 greedy: bool = True):
+                 greedy: bool = True, mesh=None, rules=None, param_axes=None):
         self.cfg = cfg
-        self.params = params
         self.model = TransformerLM(cfg)
-        self.batch = batch_size
-        self.max_seq = max_seq
-        # one cache per slot (batch=1) so per-request positions stay
-        # independent; decode steps run vmapped over slots
+        self.batch = int(batch_size)
+        self.max_seq = int(max_seq)
+        self.greedy = greedy
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding.rules import DEFAULT_RULES, shardings_for
+            self.rules = rules if rules is not None else DEFAULT_RULES
+            if param_axes is not None:
+                params = jax.device_put(
+                    params, shardings_for(param_axes, params, mesh, self.rules))
+        self.params = params
+        # ragged (batched mixed-length) prefill is exact only when no
+        # cross-slot or sequential state exists; everything else prefills
+        # per-request and scatters into its slot
+        self.ragged_ok = (
+            all(k in ATTENTION_KINDS for k in cfg.pattern)
+            and not cfg.num_experts and not cfg.cross_attention
+            and not cfg.vision_tokens)
         self._prefill = jax.jit(
             lambda p, t, c: self.model.prefill(p, t, c))
+        self._prefill_ragged = jax.jit(
+            lambda p, t, n, c: self.model.prefill_ragged(p, t, n, c))
         self._decode = jax.jit(
             lambda p, t, pos, c: self.model.decode_step(p, t, pos, c))
-        self.greedy = greedy
+        self._scatter = jax.jit(self._scatter_impl)
 
+    # ------------------------------------------------------------------ #
+    # shared-cache plumbing
+    # ------------------------------------------------------------------ #
+    def init_shared_cache(self):
+        """The engine's one KV cache: batch dim = decode slots.  With a
+        mesh, the slot axis is sharded over the mesh data axes ("slot
+        sharding") through the same logical-rule table as params."""
+        cache = self.model.init_cache(self.batch, self.max_seq)
+        if self.mesh is not None:
+            from repro.serve.step import cache_axes
+            from repro.sharding.rules import shardings_for
+            cache = jax.device_put(
+                cache, shardings_for(cache_axes(self.cfg), cache, self.mesh,
+                                     self.rules))
+        return cache
+
+    @staticmethod
+    def _scatter_impl(cache, sub_cache, slots: jnp.ndarray):
+        """Drop ``sub_cache`` (batch = len(slots)) into ``cache`` at slot
+        indices ``slots`` along the batch axis (axis 1 — axis 0 is the
+        stacked-periods axis).  Out-of-range slot indices are dropped: the
+        ragged prefill pads its admission wave to a fixed batch with dummy
+        rows routed to slot ``num_slots``."""
+        return jax.tree.map(
+            lambda full, sub: full.at[:, slots].set(sub, mode="drop"),
+            cache, sub_cache)
+
+    # ------------------------------------------------------------------ #
+    # admission → prefill
+    # ------------------------------------------------------------------ #
+    def _prefill_into(self, cache, admits: List[Tuple[int, Request]],
+                      pad_to: int = 8) -> Tuple[Any, np.ndarray]:
+        """Prefill the admitted requests and scatter them into their slots.
+        Returns (cache, first greedy token per admit).
+
+        Mixed lengths go through ONE ragged right-padded prefill when the
+        architecture allows it (``prefill_ragged``).  The admission wave is
+        padded along *both* axes to keep compiled shapes stable across
+        waves: sequence to a ``pad_to`` bucket, batch to the engine's slot
+        count with dummy length-1 rows whose scatter destination is
+        out-of-range (dropped).  One compiled prefill per sequence bucket,
+        whatever the wave size — so a 1-request backfill and a full
+        admission wave share a program.  Architectures the ragged path
+        excludes prefill per-request (one compile per distinct prompt
+        length) and scatter batch-1 caches.
+        """
+        slots = np.asarray([s for s, _ in admits], np.int32)
+        reqs = [r for _, r in admits]
+        lens = np.asarray([len(r.prompt) for r in reqs], np.int32)
+        if np.any(lens + np.asarray([r.max_new_tokens for r in reqs]) >
+                  self.max_seq):
+            raise ValueError("prompt + max_new_tokens exceeds max_seq")
+        if self.ragged_ok:
+            n, B = len(reqs), self.batch
+            S = min(int(-(-int(lens.max()) // pad_to) * pad_to), self.max_seq)
+            padded = np.zeros((B, S), np.int32)
+            full_lens = np.ones(B, np.int32)      # dummy rows: 1 real token
+            full_slots = np.full(B, B, np.int32)  # dummy rows: OOB → dropped
+            for i, r in enumerate(reqs):
+                padded[i, : lens[i]] = r.prompt
+                full_lens[i] = lens[i]
+                full_slots[i] = slots[i]
+            sub = self.model.init_cache(B, self.max_seq)
+            logits, sub = self._prefill_ragged(
+                self.params, jnp.asarray(padded), jnp.asarray(full_lens), sub)
+            cache = self._scatter(cache, sub, jnp.asarray(full_slots))
+            first = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            return cache, first[:n]
+        first = np.zeros(len(reqs), np.int32)
+        for i, r in enumerate(reqs):
+            sub = self.model.init_cache(1, self.max_seq)
+            logits, sub = self._prefill(
+                self.params, jnp.asarray(r.prompt, jnp.int32)[None, :], sub)
+            cache = self._scatter(cache, sub, jnp.asarray(slots[i : i + 1]))
+            first[i] = int(jnp.argmax(logits[0, -1]))
+        return cache, first
+
+    # ------------------------------------------------------------------ #
+    # continuous-batching loop
+    # ------------------------------------------------------------------ #
+    def run(self, requests: List[Request],
+            scheduler: Optional[SlotScheduler] = None,
+            now_fn=None) -> List[Request]:
+        """Serve ``requests`` with continuous batching: admit into free
+        slots, advance all busy slots through one fused decode step per
+        token, retire on EOS/``max_new_tokens``, and backfill freed slots
+        from the queue mid-decode.  ``now_fn`` supplies the clock for the
+        scheduler's latency accounting (default: a frozen 0 clock, which
+        keeps unit tests deterministic); requests whose ``arrival`` lies in
+        the future are held back until the clock reaches them."""
+        sched = scheduler or SlotScheduler(self.batch)
+        now = now_fn or _now_zero
+        if now is _now_zero and any(r.arrival > 0 for r in requests):
+            raise ValueError("requests with a future arrival need an "
+                             "advancing clock: pass now_fn="
+                             "time.perf_counter (or rebase arrivals to 0)")
+        for r in requests:
+            sched.submit(r)
+
+        B = self.batch
+        cache = self.init_shared_cache()
+        toks = np.zeros(B, np.int32)     # pending (unemitted) token per slot
+        pos = np.zeros(B, np.int32)      # decode position per slot
+        while sched.has_work():
+            t = now()
+            admits = sched.admit(t)
+            if not admits and sched.busy == 0:
+                # nothing running and nothing admissible yet: the next
+                # arrival is in the future — let the clock catch up
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break  # defensive; has_work() should have said no
+                time.sleep(min(max(nxt - now(), 0.0), 0.001))
+                continue
+            if admits:
+                cache, first = self._prefill_into(cache, admits)
+                for (slot, req), tok in zip(admits, first):
+                    toks[slot] = tok
+                    pos[slot] = len(req.prompt)
+            # emit one token per busy slot; retire EOS / exhausted slots
+            t = now()
+            for slot in range(B):
+                req = sched.slots[slot]
+                if req is None:
+                    continue
+                if req.max_new_tokens == 0:
+                    sched.retire(slot, t)
+                    continue
+                req.out_tokens.append(int(toks[slot]))
+                if len(req.out_tokens) >= req.max_new_tokens or (
+                        req.eos_id is not None and toks[slot] == req.eos_id):
+                    sched.retire(slot, t)
+            if sched.busy == 0:
+                continue  # all retired; backfill (or finish) next iteration
+            # ONE fused masked step advances every slot, each at its own pos
+            logits, cache = self._decode(
+                self.params, jnp.asarray(toks[:, None], jnp.int32),
+                jnp.asarray(pos, jnp.int32), cache)
+            step_toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                                   np.int32)
+            for slot in range(B):
+                if sched.slots[slot] is not None:
+                    toks[slot] = step_toks[slot]
+                    pos[slot] += 1
+        return requests
+
+    # ------------------------------------------------------------------ #
+    # reference paths (parity + benchmark baseline)
+    # ------------------------------------------------------------------ #
     def _run_one(self, req: Request) -> Request:
-        """Slot-at-a-time fallback: prefill one request, then greedy-decode
-        token by token with a batch-1 cache."""
+        """Slot-at-a-time reference: prefill one request, then greedy-decode
+        token by token with a batch-1 cache.  The parity oracle for the
+        continuous path."""
         S = len(req.prompt)
         cache = self.model.init_cache(1, self.max_seq)
-        logits, cache = self._prefill(self.params, jnp.asarray(req.prompt)[None, :], cache)
+        logits, cache = self._prefill(
+            self.params, jnp.asarray(req.prompt, jnp.int32)[None, :], cache)
         pos = S
         tok = int(jnp.argmax(logits[0, -1]))
         for _ in range(req.max_new_tokens):
@@ -92,11 +263,13 @@ class ServeEngine:
         req.done = True
         return req
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests: requests with equal prompt length are
-        grouped and decoded TOGETHER through one fused decode step per token
-        (batched continuous decode); odd lengths fall back to slot-at-a-time.
-        Greedy outputs are identical either way (tested)."""
+    def run_static(self, requests: List[Request]) -> List[Request]:
+        """The pre-refactor static engine, kept as the benchmark baseline:
+        requests with equal prompt length group into one shared-position
+        batch; every other request decodes slot-at-a-time.  No admission
+        queue, no backfill — on a mixed-length workload this degenerates
+        toward slot-at-a-time, which is exactly what
+        ``benchmarks/serving_throughput.py`` measures against."""
         groups: Dict[int, List[int]] = {}
         for i, r in enumerate(requests):
             groups.setdefault(len(r.prompt), []).append(i)
@@ -114,7 +287,7 @@ class ServeEngine:
         prompts = jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)
         cache = self.model.init_cache(B, self.max_seq)
         logits, cache = self._prefill(self.params, prompts, cache)
-        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)  # (B,)
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         pos = plen
         max_new = max(r.max_new_tokens for r in reqs)
         active = np.ones(B, bool)
@@ -136,3 +309,35 @@ class ServeEngine:
             pos += 1
         for r in reqs:
             r.done = True
+
+    # ------------------------------------------------------------------ #
+    # warmup (perf reporting excludes compile time)
+    # ------------------------------------------------------------------ #
+    def warmup(self, prompt_lens: Sequence[int] = (), pad_to: int = 8) -> None:
+        """Compile the fused decode step, the cache scatter, and every
+        prefill shape the given prompt lengths will hit, so serving (and
+        the launcher's perf report) never pays compile time mid-stream.
+
+        On the ragged path the compiled prefill shape depends only on the
+        sequence *bucket* (batch is always padded to the slot count), so
+        one warm prefill per distinct bucket covers admission waves of any
+        size; the per-request fallback path compiles one prefill per
+        distinct prompt length instead.
+        """
+        lens = sorted(set(int(n) for n in prompt_lens))
+        cache = self.init_shared_cache()
+        if lens and self.ragged_ok:
+            buckets = sorted(set(
+                min(-(-n // pad_to) * pad_to, self.max_seq) for n in lens))
+            for b in buckets:
+                req = Request(prompt=np.zeros(min(b, self.max_seq - 1),
+                                              np.int32), max_new_tokens=1)
+                cache, _ = self._prefill_into(cache, [(0, req)], pad_to=pad_to)
+        elif lens:
+            for n in lens:
+                req = Request(prompt=np.zeros(n, np.int32), max_new_tokens=1)
+                cache, _ = self._prefill_into(cache, [(0, req)], pad_to=pad_to)
+        _ = self._decode(self.params,
+                         jnp.asarray(np.zeros((self.batch, 1), np.int32)),
+                         jnp.asarray(np.zeros(self.batch, np.int32)), cache)
+        jax.block_until_ready(_)

@@ -1,0 +1,173 @@
+"""Microbatching prediction service for the paper's Model contract.
+
+The LM engine next door serves token streams; this module serves the
+*classic* side of §III-C — any trained :class:`repro.core.interfaces.Model`
+(logistic regression, k-means, ALS factors, …) — behind the same
+queue-then-batch shape:
+
+    submit (n_i, d) feature blocks  →  pack into fixed-size microbatches
+    →  ONE compiled predict per microbatch  →  split outputs per request
+
+Microbatches have a *static* row count (``max_batch``, short final batch
+right-padded with zeros and sliced off), so the whole service runs on one
+compiled program — the serving twin of the training side's static-shape
+discipline.  With ``num_shards``/``mesh`` that program is a shard-aware
+one-pass ``combine="concat"`` predict through ``DistributedRunner``
+under the configured :class:`CollectiveSchedule` — the same plumbing as
+:func:`repro.eval.metrics.predictions`, jitted once for the service's
+lifetime — so rows never gather to one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collectives import CollectiveSchedule
+
+__all__ = ["PredictRequest", "ModelPredictor"]
+
+
+@dataclasses.dataclass
+class PredictRequest:
+    """One prediction request: a block of feature rows.
+
+    ``result`` is filled by the service (shape ``(n,)`` or ``(n, …)``
+    matching the model's per-row output); ``done`` flips on completion.
+    """
+
+    features: np.ndarray               # (n, d) — or (d,), treated as (1, d)
+    result: Optional[np.ndarray] = None
+    done: bool = False
+    arrival: float = 0.0
+    finished_at: Optional[float] = None
+
+    def __post_init__(self):
+        self.features = np.asarray(self.features)
+        if self.features.ndim == 1:
+            self.features = self.features[None, :]
+        if self.features.ndim != 2:
+            raise ValueError("features must be (n, d) rows")
+
+
+class ModelPredictor:
+    """Queue + microbatcher around ``model.predict``.
+
+    Rows from queued requests are packed greedily into ``max_batch``-row
+    microbatches — a request larger than one microbatch spans several, and
+    one microbatch can serve many small requests (rows are independent
+    under the Model contract).  Each microbatch is served by one compiled
+    predict; the final short batch is zero-padded to the same shape and
+    the pad rows sliced off before results are scattered back.
+    """
+
+    def __init__(self, model: Any, *, max_batch: int = 256,
+                 num_shards: int = 1, mesh=None,
+                 schedule: Union[str, CollectiveSchedule]
+                 = CollectiveSchedule.GATHER_BROADCAST,
+                 predict_fn: Optional[Callable] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be positive")
+        if num_shards > 1 and max_batch % num_shards:
+            raise ValueError(f"max_batch {max_batch} must divide over "
+                             f"{num_shards} shards")
+        self.model = model
+        self.max_batch = int(max_batch)
+        self.num_shards = int(num_shards)
+        self.mesh = mesh
+        self.schedule = schedule
+        self._predict = predict_fn if predict_fn is not None else model.predict
+        self._compiled = None
+        self._queue: Deque[PredictRequest] = deque()
+        # stats
+        self.batches = 0
+        self.rows_served = 0
+        self.rows_padded = 0
+
+    # ------------------------------------------------------------------ #
+    # service surface
+    # ------------------------------------------------------------------ #
+    def submit(self, req: PredictRequest) -> PredictRequest:
+        self._queue.append(req)
+        return req
+
+    def flush(self, now: float = 0.0) -> List[PredictRequest]:
+        """Serve everything queued; returns the completed requests."""
+        reqs = list(self._queue)
+        self._queue.clear()
+        if not reqs:
+            return []
+        rows = np.concatenate([r.features for r in reqs], axis=0)
+        outs: List[np.ndarray] = []
+        for start in range(0, rows.shape[0], self.max_batch):
+            chunk = rows[start : start + self.max_batch]
+            pad = self.max_batch - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((pad,) + chunk.shape[1:], chunk.dtype)])
+                self.rows_padded += pad
+            outs.append(np.asarray(self._predict_batch(chunk))[
+                : self.max_batch - pad])
+            self.batches += 1
+        flat = np.concatenate(outs, axis=0)
+        self.rows_served += rows.shape[0]
+        ofs = 0
+        for r in reqs:
+            n = r.features.shape[0]
+            r.result = flat[ofs : ofs + n]
+            r.done = True
+            r.finished_at = now
+            ofs += n
+        return reqs
+
+    def predict_many(self, blocks: List[np.ndarray],
+                     now: float = 0.0) -> List[np.ndarray]:
+        """Convenience: submit + flush a list of feature blocks, returning
+        results in submission order."""
+        reqs = [self.submit(PredictRequest(features=b)) for b in blocks]
+        self.flush(now)
+        return [r.result for r in reqs]
+
+    # ------------------------------------------------------------------ #
+    # device path
+    # ------------------------------------------------------------------ #
+    def _predict_batch(self, chunk: np.ndarray) -> jnp.ndarray:
+        """One microbatch through ONE compiled program (the zero-padding
+        exists exactly so every batch shares it) — shard-aware when the
+        service has shards/mesh, the plain predict otherwise."""
+        return self._jitted()(jnp.asarray(chunk))
+
+    def _jitted(self):
+        if self._compiled is None:
+            if self.mesh is not None or self.num_shards > 1:
+                # one runner, one jit, built once: the same one-pass
+                # combine="concat" plumbing as eval.metrics.predictions,
+                # without rebuilding a table/runner per microbatch
+                from repro.core.runner import DistributedRunner
+
+                runner = DistributedRunner(mesh=self.mesh,
+                                           num_shards=self.num_shards,
+                                           schedule=self.schedule)
+                self._compiled = jax.jit(lambda X: runner.partition_apply(
+                    X, lambda b: jnp.asarray(self._predict(b)), (), "concat"))
+            else:
+                self._compiled = jax.jit(lambda X: self._predict(X))
+        return self._compiled
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    def report(self) -> dict:
+        served = max(self.rows_served, 1)
+        return {
+            "batches": self.batches,
+            "rows_served": self.rows_served,
+            "rows_padded": self.rows_padded,
+            "pad_fraction": self.rows_padded / (served + self.rows_padded),
+            "max_batch": self.max_batch,
+            "shards": self.num_shards if self.mesh is None else "mesh",
+        }

@@ -1,0 +1,183 @@
+"""Continuous-batching admission scheduler.
+
+The host-side half of the serving stack (the device half is
+``serve/engine.py``): a FIFO request queue plus a fixed table of decode
+*slots*.  The engine asks the scheduler, between decode steps, which
+requests to admit into free slots (**backfill** — a retirement mid-decode
+frees a slot and the next queued request takes it without draining the
+batch) and tells it when a slot retires.  The scheduler never touches
+device state; it owns arrival release, FIFO order, and the queue-depth /
+latency accounting the launcher reports.
+
+Petuum (Xing et al., 2013) is the precedent this layer follows: a real
+scheduler between the request stream and the device work is what turns a
+fixed-batch decoder into a serving system.  See ``docs/architecture.md``
+(serving section).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Request", "SlotScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt plus decode limits.
+
+    The streaming unit of the paper's Model contract (§III-C): where the
+    paper's ``Model.predict`` maps one feature vector to one prediction,
+    serving maps one ``Request`` to a token stream.  ``out_tokens`` is
+    filled in place by the engine; ``done`` flips when the request retires
+    (EOS or ``max_new_tokens``).  ``arrival`` is the request's release time
+    on the launcher's clock (0 = available immediately); the ``*_at``
+    fields are stamped by the scheduler for the latency report.
+    """
+
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    arrival: float = 0.0
+    # scheduler-stamped accounting
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class SlotScheduler:
+    """FIFO queue + slot table with mid-decode backfill.
+
+    Protocol (driven by the engine loop):
+
+        sched.submit(req)                  # any time; respects req.arrival
+        while sched.has_work():
+            for slot, req in sched.admit(now):   # fills every free slot
+                ... prefill req into slot ...
+            ... one fused decode step ...
+            sched.retire(slot, now)        # when a request finishes
+
+    ``admit`` releases arrivals whose ``arrival <= now``, then fills free
+    slots in FIFO order.  Admissions that land while other slots are
+    mid-decode are counted as ``backfills`` — the statistic that
+    distinguishes continuous batching from static batching (a static
+    engine's count is always 0).
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        self.num_slots = int(num_slots)
+        self.slots: List[Optional[Request]] = [None] * self.num_slots
+        self._pending: Deque[Request] = deque()   # not yet arrived
+        self._queue: Deque[Request] = deque()     # arrived, awaiting a slot
+        # accounting
+        self.submitted = 0
+        self.admitted = 0
+        self.retired = 0
+        self.backfills = 0
+        # queue-depth running aggregates (one sample per admit call — i.e.
+        # per decode step; a raw sample list would grow one entry per
+        # generated token for the scheduler's lifetime)
+        self._depth_max = 0
+        self._depth_sum = 0
+        self._depth_samples = 0
+        self._finished: List[Request] = []
+
+    # ------------------------------------------------------------------ #
+    # queue side
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        """Add one request; it becomes admissible once ``now >= arrival``.
+        Submission order is preserved within equal arrival times."""
+        self.submitted += 1
+        self._pending.append(req)
+
+    def release(self, now: float) -> None:
+        """Move arrived requests from pending into the admission queue."""
+        still = deque()
+        for r in self._pending:
+            (self._queue if r.arrival <= now else still).append(r)
+        self._pending = still
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest arrival time still pending (None when all released)."""
+        return min((r.arrival for r in self._pending), default=None)
+
+    # ------------------------------------------------------------------ #
+    # slot side
+    # ------------------------------------------------------------------ #
+    @property
+    def busy(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def queued(self) -> int:
+        return len(self._queue) + len(self._pending)
+
+    def has_work(self) -> bool:
+        return bool(self._queue or self._pending or self.busy)
+
+    def admit(self, now: float = 0.0) -> List[Tuple[int, Request]]:
+        """Fill every free slot from the queue (FIFO); returns the
+        (slot, request) pairs admitted this call and stamps their wait."""
+        self.release(now)
+        mid_decode = self.busy > 0
+        admits: List[Tuple[int, Request]] = []
+        for slot in range(self.num_slots):
+            if self.slots[slot] is not None or not self._queue:
+                continue
+            req = self._queue.popleft()
+            req.admitted_at = now
+            self.slots[slot] = req
+            admits.append((slot, req))
+            self.admitted += 1
+            if mid_decode:
+                self.backfills += 1
+        depth = len(self._queue)
+        self._depth_max = max(self._depth_max, depth)
+        self._depth_sum += depth
+        self._depth_samples += 1
+        return admits
+
+    def retire(self, slot: int, now: float = 0.0) -> Request:
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        req.done = True
+        req.finished_at = now
+        self.slots[slot] = None
+        self.retired += 1
+        self._finished.append(req)
+        return req
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    def report(self) -> dict:
+        """Queue/latency summary for the launcher (all times on the clock
+        the engine passed to ``admit``/``retire``)."""
+        waits = [r.admitted_at - r.arrival
+                 for r in self._finished if r.admitted_at is not None]
+        totals = [r.finished_at - r.arrival
+                  for r in self._finished if r.finished_at is not None]
+        return {
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "retired": self.retired,
+            "backfills": self.backfills,
+            "queue_depth_max": self._depth_max,
+            "queue_depth_mean": (self._depth_sum / self._depth_samples
+                                 if self._depth_samples else 0.0),
+            "wait_p50": _pct(waits, 50),
+            "wait_p95": _pct(waits, 95),
+            "latency_p50": _pct(totals, 50),
+            "latency_p95": _pct(totals, 95),
+        }
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(xs, q)) if xs else 0.0

@@ -7,6 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.kernels.logreg_grad import logreg_grad_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
@@ -122,6 +123,75 @@ class TestRMSNorm:
                                    atol=1e-5)
 
 
+class TestKMeansAssign:
+    """Fused pairwise-distance assignment vs its oracle — the oracle uses
+    the identical expanded form (||c||² − 2·x·c), so the comparison is
+    exact fp parity, not just same-argmin on separated data."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n,d,k", [
+        (256, 512, 8),        # single tile
+        (512, 1024, 5),       # multi-tile both axes, odd k
+        (256, 512, 16),
+    ])
+    def test_sweep(self, n, d, k, dtype):
+        X = _rand((n, d), dtype)
+        C = _rand((k, d), dtype)
+        got = kmeans_assign_pallas(X, C, interpret=True)
+        want = ref.kmeans_assign_ref(X, C)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_full_distance_argmin(self):
+        """The expanded form must produce the same assignment as the naive
+        (n, k, d) broadcast argmin on generic float data."""
+        X = _rand((256, 512), jnp.float32)
+        C = _rand((6, 512), jnp.float32)
+        got = kmeans_assign_pallas(X, C, interpret=True)
+        d2 = jnp.sum((X[:, None, :] - C[None, :, :]) ** 2, axis=-1)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jnp.argmin(d2, axis=-1)))
+
+    def test_block_shape_independence(self):
+        X = _rand((512, 1024), jnp.float32)
+        C = _rand((8, 1024), jnp.float32)
+        a = kmeans_assign_pallas(X, C, block_rows=256, block_cols=512,
+                                 interpret=True)
+        b = kmeans_assign_pallas(X, C, block_rows=128, block_cols=256,
+                                 interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_tie_breaks_to_lowest_index(self):
+        """Duplicate centroids: the fused argmin must keep jnp.argmin's
+        first-wins tie rule (the manual iota/min reduction inside the
+        kernel exists exactly for this)."""
+        X = _rand((256, 512), jnp.float32)
+        C0 = _rand((4, 512), jnp.float32)
+        C = jnp.concatenate([C0, C0], axis=0)        # every row ties 2-way
+        got = kmeans_assign_pallas(X, C, interpret=True)
+        want = ref.kmeans_assign_ref(X, C)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(jnp.max(got)) < 4                 # always the first copy
+
+    def test_routed_training_matches_oracle_path(self):
+        """KMeansParameters(use_kernel=True) must train bitwise-identical
+        centroids to the default path (same assignments → same sums)."""
+        from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+        from repro.core.numeric_table import MLNumericTable
+
+        rng = np.random.default_rng(0)
+        X = (rng.normal(size=(128, 16)).astype(np.float32)
+             + np.repeat(np.eye(4, 16, dtype=np.float32) * 6.0, 32, axis=0))
+        table = MLNumericTable.from_numpy(X, num_shards=2)
+        base = KMeans.train(table, KMeansParameters(k=4, max_iter=5))
+        fused = KMeans.train(table, KMeansParameters(k=4, max_iter=5,
+                                                     use_kernel=True))
+        np.testing.assert_array_equal(np.asarray(base.centroids),
+                                      np.asarray(fused.centroids))
+        np.testing.assert_array_equal(
+            np.asarray(base.predict(jnp.asarray(X))),
+            np.asarray(fused.predict(jnp.asarray(X))))
+
+
 class TestOpsWrappers:
     def test_fallback_on_indivisible_shapes(self):
         from repro.kernels import ops
@@ -139,6 +209,16 @@ class TestOpsWrappers:
             ops.logreg_grad(jnp.zeros((4, 4)), jnp.zeros((5,)), jnp.zeros((4,)))
         with pytest.raises(ValueError):
             ops.rmsnorm(jnp.zeros((4, 8)), jnp.zeros((9,)))
+        with pytest.raises(ValueError):
+            ops.kmeans_assign(jnp.zeros((8, 4)), jnp.zeros((2, 5)))
+
+    def test_kmeans_assign_fallback_on_indivisible_shapes(self):
+        from repro.kernels import ops
+        X = _rand((37, 9), jnp.float32)              # tiles nothing
+        C = _rand((3, 9), jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.kmeans_assign(X, C)),
+            np.asarray(ref.kmeans_assign_ref(X, C)))
 
 
 class TestSSDChunkScan:

@@ -96,9 +96,10 @@ def test_engine_serves_batch():
 
 
 def test_batched_group_decode_matches_sequential():
-    """The batched continuous-decode path (equal-length prompt groups share
-    one fused decode step per token) must emit exactly the sequential
-    slot-at-a-time outputs."""
+    """The continuous-batching path (all slots share one fused per-slot-
+    position decode step per token) must emit exactly the sequential
+    slot-at-a-time outputs.  (The full mixed-length/backfill matrix lives
+    in tests/test_serve_continuous.py.)"""
     cfg = get_smoke("qwen2-1.5b")
     params, _ = init_model(KEY, cfg)
     engine = ServeEngine(cfg, params, batch_size=4, max_seq=96)
@@ -113,13 +114,13 @@ def test_batched_group_decode_matches_sequential():
         assert b.out_tokens == s.out_tokens
 
 
-def test_mixed_length_requests_grouped_correctly():
+def test_mixed_length_requests_served_continuously():
     cfg = get_smoke("qwen2-1.5b")
     params, _ = init_model(KEY, cfg)
     engine = ServeEngine(cfg, params, batch_size=4, max_seq=96)
     rng = np.random.default_rng(3)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
                     max_new_tokens=4)
-            for n in (8, 16, 8, 16, 24)]          # two groups + a singleton
+            for n in (8, 16, 8, 16, 24)]          # 5 mixed lengths, 4 slots
     done = engine.run(reqs)
     assert all(r.done and len(r.out_tokens) == 4 for r in done)
