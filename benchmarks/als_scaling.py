@@ -49,10 +49,10 @@ def _worker() -> None:
     p = ALSParameters(rank=RANK, lam=LAM, max_iter=ITERS)
 
     def run():
-        return BroadcastALS.train(data, p, data_transposed=data_t).U
+        return BroadcastALS(p).fit(data, data_transposed=data_t).U
 
     t = timeit(run, warmup=1, iters=3)
-    model = BroadcastALS.train(data, p, data_transposed=data_t)
+    model = BroadcastALS(p).fit(data, data_transposed=data_t)
     rmse = float(model.rmse(r, c, v))
     print(json.dumps({"devices": devices, "seconds": t, "rmse": rmse,
                       "nnz": int(len(v))}))

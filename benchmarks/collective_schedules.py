@@ -66,12 +66,13 @@ def _worker_walltime() -> None:
             assert drift < 1e-4, f"{name} {sched}: schedules disagree by {drift}"
         return rows
 
-    logreg_rows = sweep("logreg", lambda sched: LogisticRegressionAlgorithm.train(
-        table, LogisticRegressionParameters(learning_rate=0.5, max_iter=5,
-                                            local_batch_size=32,
-                                            schedule=sched)).weights)
-    kmeans_rows = sweep("kmeans", lambda sched: KMeans.train(
-        tX, KMeansParameters(k=8, max_iter=5, seed=0, schedule=sched)).centroids)
+    logreg_rows = sweep("logreg", lambda sched: LogisticRegressionAlgorithm(
+        LogisticRegressionParameters(learning_rate=0.5, max_iter=5,
+                                     local_batch_size=32,
+                                     schedule=sched)).fit(table).weights)
+    kmeans_rows = sweep("kmeans", lambda sched: KMeans(
+        KMeansParameters(k=8, max_iter=5, seed=0,
+                         schedule=sched)).fit(tX).centroids)
     print(json.dumps({"devices": devices, "logreg": logreg_rows,
                       "kmeans": kmeans_rows}))
 

@@ -53,10 +53,10 @@ def _worker() -> None:
         schedule=cfgj.get("schedule", "gather_broadcast"))
 
     def run():
-        return LogisticRegressionAlgorithm.train(table, params).weights
+        return LogisticRegressionAlgorithm(params).fit(table).weights
 
     t = timeit(run, warmup=1, iters=3)
-    model = LogisticRegressionAlgorithm.train(table, params)
+    model = LogisticRegressionAlgorithm(params).fit(table)
     acc = float((np.asarray(model.predict(jnp.asarray(X))).ravel() == y).mean())
     print(json.dumps({"devices": devices, "seconds": t, "acc": acc}))
 

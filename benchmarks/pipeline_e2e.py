@@ -1,0 +1,120 @@
+"""End-to-end text-pipeline benchmark: fit and predict rows/sec for the
+Fig. A2 program (rawText → NGrams → TfIdf → Standardizer → logreg) as ONE
+``repro.pipeline.Pipeline`` object, swept across the three §IV-A
+collective schedules on an 8-device mesh (subprocess — the device count
+must be fixed before jax initializes).
+
+Reported per schedule:
+
+  * ``fit_rows_per_s``    — whole-pipeline fit (featurizer statistics via
+    the table's shared-nothing reduces + logreg SGD rounds through the
+    DistributedRunner) over the corpus;
+  * ``predict_rows_per_s`` — served prediction throughput: raw-text rows
+    through the fitted host featurizer + the compiled device chain
+    (tf-idf → standardize → predict) via the ModelPredictor microbatcher.
+
+The schedules must agree on the model itself (asserted to fp tolerance) —
+the sweep reads the *wire pattern* cost off an invariant computation.
+Each schedule's fit is a fresh trace, so the first row pays the shared
+jit warm-up; the predict rows are measured on a warmed service.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks._util import emit, run_with_devices
+
+DEVICES = 8
+DOCS = 512
+WORDS = 20
+TOP = 64
+EPOCHS = 5
+MAX_BATCH = 64
+SERVE_ROWS = 512
+
+
+def _worker() -> None:
+    import time
+
+    import numpy as np
+
+    from benchmarks._util import timeit
+    from repro.core.algorithms.logistic_regression import \
+        LogisticRegressionAlgorithm
+    from repro.core.collectives import CollectiveSchedule
+    from repro.core.compat import make_mesh
+    from repro.core.mltable import MLTable
+    from repro.data import synth_labeled_text
+    from repro.features import NGrams, Standardizer, TfIdf
+    from repro.pipeline import Pipeline
+    from repro.serve import ModelPredictor
+
+    mesh = make_mesh((DEVICES,), ("data",))
+    rows = synth_labeled_text(n_docs=DOCS, words_per_doc=WORDS, seed=0)
+    raw = MLTable.from_rows(rows, names=["label", "text"], num_partitions=8)
+    texts = [t for _, t in rows][:SERVE_ROWS]
+
+    out = []
+    weights = {}
+    for sched in CollectiveSchedule:
+        def make_pipe():
+            return Pipeline([
+                NGrams(n=1, top=TOP, column="text"),
+                TfIdf(),
+                Standardizer(),
+                LogisticRegressionAlgorithm(learning_rate=0.5,
+                                            max_iter=EPOCHS,
+                                            local_batch_size=8,
+                                            schedule=sched),
+            ], mesh=mesh)
+
+        # fit throughput: featurization + training, the whole artifact
+        t0 = time.perf_counter()
+        fitted = make_pipe().fit(raw)
+        fit_s = time.perf_counter() - t0
+        weights[sched.value] = np.asarray(fitted.model.weights)
+
+        # serve throughput: raw text through the microbatcher (jit warmed
+        # by the first flush; timed flushes reuse the compiled program)
+        service = ModelPredictor(fitted, max_batch=MAX_BATCH)
+        service.predict_many([texts[:MAX_BATCH]])        # warm the jit
+
+        def serve_pass():
+            import jax
+
+            outs = service.predict_many([np.asarray(t, object)
+                                         for t in texts])
+            return jax.numpy.zeros(())  # timeit blocks on this
+
+        serve_s = timeit(serve_pass, warmup=1, iters=3)
+        out.append({
+            "schedule": sched.value,
+            "fit_rows_per_s": round(DOCS / fit_s, 1),
+            "predict_rows_per_s": round(len(texts) / serve_s, 1),
+        })
+
+    vals = list(weights.values())
+    agree = all(np.allclose(vals[0], v, rtol=1e-5, atol=1e-6)
+                for v in vals[1:])
+    print(json.dumps({"rows": out, "schedules_agree": bool(agree)}))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--_worker", action="store_true")
+    args = ap.parse_args(argv)
+    if args._worker:
+        _worker()
+        return
+    res = run_with_devices("benchmarks.pipeline_e2e", DEVICES, {})
+    emit("pipeline_e2e", res["rows"])
+    if not res["schedules_agree"]:
+        print("FAIL: collective schedules disagree on the trained model")
+        sys.exit(1)
+    print(f"pipeline_e2e: {DOCS} docs, top={TOP}; all schedules agree")
+
+
+if __name__ == "__main__":
+    main()

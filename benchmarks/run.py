@@ -10,6 +10,7 @@
   roofline              (beyond paper)  per-arch dry-run roofline table
   model_search          (beyond paper)  stacked vs sequential trials/sec
   serving_throughput    (beyond paper)  continuous vs static batching
+  pipeline_e2e          (beyond paper)  Fig. A2 pipeline fit+serve rows/sec
 
 (streaming_throughput, model_search, and serving_throughput can also run
 standalone: ``python -m benchmarks.<name>``.)
@@ -30,8 +31,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (als_scaling, collective_schedules, kernel_bench,
-                            loc_table, logreg_scaling, model_search, roofline,
-                            serving_throughput)
+                            loc_table, logreg_scaling, model_search,
+                            pipeline_e2e, roofline, serving_throughput)
 
     devices = "1,2,4" if args.fast else "1,2,4,8"
     jobs = [
@@ -43,6 +44,7 @@ def main() -> None:
         ("roofline", roofline.main, []),
         ("model_search", model_search.main, []),
         ("serving_throughput", serving_throughput.main, []),
+        ("pipeline_e2e", pipeline_e2e.main, []),
     ]
     failures = 0
     for name, fn, argv in jobs:

@@ -24,7 +24,7 @@ def main() -> None:
 
     # paper hyperparameters
     params = ALSParameters(rank=10, lam=0.01, max_iter=10, seed=0)
-    model = BroadcastALS.train(data, params, data_transposed=data_t)
+    model = BroadcastALS(params).fit(data, data_transposed=data_t)
     rmse = float(model.rmse(r, c, v))
     print(f"train RMSE after {params.max_iter} ALS sweeps: {rmse:.4f}")
     assert rmse < 0.5

@@ -38,7 +38,7 @@ def main() -> None:
             learning_rate=2.0 / n, max_iter=50, solver="gd"), 0.5),
     ]:
         t0 = time.time()
-        model = LogisticRegressionAlgorithm.train(table, params)
+        model = LogisticRegressionAlgorithm(params).fit(table)
         dt = time.time() - t0
         pred = np.asarray(model.predict(jnp.asarray(X))).ravel()
         acc = float((pred == y).mean())

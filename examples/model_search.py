@@ -72,11 +72,11 @@ def main() -> None:
 
     # -- the stacked winner matches training that config alone -----------
     tr, va = holdout_split(table.num_rows, 0.25, seed=0)
-    solo = LogisticRegressionAlgorithm.train(
-        fold_view(table, tr),
+    solo = LogisticRegressionAlgorithm(
         LogisticRegressionParameters(
             learning_rate=best.config["learning_rate"],
-            l2=best.config["l2"], max_iter=6, schedule="allreduce"))
+            l2=best.config["l2"], max_iter=6,
+            schedule="allreduce")).fit(fold_view(table, tr))
     val = fold_view(table, va)
     acc = float(metrics.accuracy(
         val, lambda Xb: solo.predict(Xb), schedule="allreduce"))

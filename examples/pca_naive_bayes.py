@@ -27,7 +27,7 @@ def main() -> None:
 
     # PCA on the unlabeled features
     feats = MLNumericTable.from_numpy(X, num_shards=4)
-    pca = PCA.train(feats, PCAParameters(n_components=4))
+    pca = PCA(PCAParameters(n_components=4)).fit(feats)
     print(f"explained variance: "
           f"{np.asarray(pca.explained_variance).round(2).tolist()}")
     Z = np.asarray(pca.transform(jnp.asarray(X)))
@@ -35,7 +35,7 @@ def main() -> None:
     # Naive Bayes in the reduced space
     table = MLNumericTable.from_numpy(
         np.concatenate([y[:, None], Z], 1).astype(np.float32), num_shards=4)
-    nb = GaussianNaiveBayes.train(table, NaiveBayesParameters(num_classes=C))
+    nb = GaussianNaiveBayes(NaiveBayesParameters(num_classes=C)).fit(table)
     pred = np.asarray(nb.predict(jnp.asarray(Z)))
     acc = float((pred == y).mean())
     print(f"PCA({d}->{4}) + GaussianNB accuracy: {acc:.3f}")

@@ -1,20 +1,25 @@
-"""Quickstart — the paper's Fig. A2 pipeline, end to end:
+"""Quickstart — the paper's Fig. A2 pipeline as ONE fitted object:
 
-    load text -> nGrams(2, top=...) -> tfIdf -> KMeans(k)
+    Pipeline([NGrams(2, top=…), TfIdf(), KMeans(k)]).fit(rawTextTable)
 
-All training is executed by the shared DistributedRunner (see
-docs/architecture.md) on a real 4-device data-parallel mesh (emulated host
-devices, forced below before jax initializes).  The k-means schedule knob
-selects the §IV-A collective schedule the runner uses for the per-round
-combine — each schedule lowers to different HLO collectives on the mesh —
-and switching it must not change the model, which this script demonstrates
-by training under all three schedules and comparing inertia.
+The pipeline is the unit of everything downstream (docs/architecture.md,
+"one contract, five execution modes"): the same object fits resident or
+streaming through the shared DistributedRunner on a real 4-device mesh
+(emulated host devices, forced below before jax initializes), its
+featurizer statistics are fit ONCE and replayed on any rows, and its
+checkpoint is one atomic artifact (vocabulary + IDF weights + centroids +
+stream position).
 
-The second half shows the streaming + fault-tolerance path: the same
-k-means trained from per-epoch minibatch windows (data never fully
-resident), checkpointed every epoch, "preempted" half-way, and resumed
-from the snapshot — the resumed model matches the uninterrupted one
-exactly.
+Three demonstrations:
+  1. the k-means schedule knob selects the §IV-A collective schedule —
+     switching it must not change the model (inertia compared across all
+     three);
+  2. fitted-transformer replay: transforming the corpus row-by-row equals
+     transforming it as one table (no hidden corpus refit);
+  3. streaming + fault tolerance: the same pipeline trained from per-epoch
+     minibatch windows, checkpointed every epoch, "preempted" half-way,
+     and resumed — bit-for-bit equal to the uninterrupted run, featurizers
+     restored from the snapshot rather than refit.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -27,13 +32,14 @@ if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
 
 import numpy as np
 
-from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+from repro.core.algorithms.kmeans import KMeans
 from repro.core.collectives import CollectiveSchedule
 from repro.core.compat import make_mesh
 from repro.core.mltable import MLTable
 from repro.core.runner import CheckpointPolicy, DistributedRunner
-from repro.data import BatchIterator, synth_text_corpus
-from repro.features.text import n_grams, tf_idf
+from repro.data import synth_text_corpus
+from repro.features import NGrams, TfIdf
+from repro.pipeline import Pipeline
 
 
 def main() -> None:
@@ -42,64 +48,63 @@ def main() -> None:
     raw = MLTable.from_text(docs, num_partitions=4)
     print(f"loaded {raw.num_rows} docs in {raw.num_partitions} partitions")
 
-    # feature extraction: top-64 bigram counts -> tf-idf
-    featurized = tf_idf(n_grams(raw, n=2, top=64))
-    print(f"featurized: {featurized.num_rows} x {featurized.num_cols}")
-
-    # commit to the device tier on a 4-device data mesh; the runner owns
-    # partitioning + combination
     mesh = make_mesh((4,), ("data",))
-    table = featurized.to_numeric(mesh=mesh)
-    print(f"execution layer: {DistributedRunner.for_table(table)}")
 
     # the schedule is a knob, not an algorithm change: all three collective
     # schedules lower to different mesh collectives but must produce the
     # same clustering
-    inertia, model = {}, None
+    inertia, fitted, table = {}, None, None
     for sched in CollectiveSchedule:
-        params = KMeansParameters(k=4, max_iter=10, seed=0, schedule=sched)
-        trained = KMeans.train(table, params)
-        if model is None:                       # schedules agree: keep one
-            model = trained
-        inertia[sched.value] = float(trained.inertia(table.data))
+        pipe = Pipeline([NGrams(n=2, top=64), TfIdf(),
+                         KMeans(k=4, max_iter=10, seed=0, schedule=sched)],
+                        mesh=mesh)
+        trained = pipe.fit(raw)
+        featurized = trained.transform(raw)
+        if fitted is None:                      # schedules agree: keep one
+            fitted, table = trained, featurized
+        inertia[sched.value] = float(trained.model.inertia(featurized.data))
         print(f"k-means[{sched.value:>16}] inertia: {inertia[sched.value]:.4f}")
     spread = max(inertia.values()) - min(inertia.values())
     assert spread < 1e-3 * max(1.0, max(inertia.values())), inertia
+    print(f"execution layer: {DistributedRunner.for_table(table)}")
 
-    labels = np.asarray(model.predict(table.data))
-    sizes = np.bincount(labels, minlength=4)
-    print(f"k-means cluster sizes: {sizes.tolist()}")
-    assert sizes.sum() == 64
+    # fitted replay: featurizing the corpus row-by-row (the serving path)
+    # equals featurizing it as one table — the vocabulary and IDF weights
+    # were fit once and only replayed
+    row_preds = np.asarray(fitted.predict(docs))
+    tab_preds = np.asarray(fitted.model.predict(table.data))
+    assert np.array_equal(row_preds, tab_preds)
+    sizes = np.bincount(tab_preds, minlength=4)
+    print(f"k-means cluster sizes: {sizes.tolist()} "
+          f"(row-by-row == whole-table: True)")
 
     # ---- streaming + fault tolerance -----------------------------------
-    # The same clustering fed as per-epoch minibatch windows: the table
-    # never needs to be resident; each epoch the runner pulls one sharded
-    # window and scans its chunks on-device.  A CheckpointPolicy snapshots
-    # (state, epoch, stream step) each epoch, so a killed run resumes
-    # bit-for-bit.
-    X = np.asarray(table.data)
-
-    def window_source(step: int) -> dict:
-        # replay the featurized rows as the stream; a production source
-        # would read shard files keyed by step
-        return {"data": X}
+    # The same pipeline fed as per-epoch minibatch windows: each epoch the
+    # runner pulls one sharded window of the featurized table and scans its
+    # chunks on-device.  Every snapshot is ONE atomic file carrying the
+    # featurizer statistics + centroids + stream position, so a killed run
+    # resumes bit-for-bit with the featurizers *restored*, never refit.
+    def make_pipe():
+        return Pipeline([NGrams(n=2, top=64), TfIdf(),
+                         KMeans(k=4, max_iter=6, seed=0)], mesh=mesh)
 
     epochs, half = 6, 3
-    params = KMeansParameters(k=4, max_iter=epochs, seed=0)
-    straight = KMeans.train_stream(BatchIterator(window_source, mesh=mesh),
-                                   params, chunks_per_epoch=2)
+    straight = make_pipe().fit_stream(raw, num_epochs=epochs,
+                                      chunks_per_epoch=2)
     with tempfile.TemporaryDirectory() as ckpt_dir:
-        policy = CheckpointPolicy(ckpt_dir, every_epochs=1)
         # "preemption": the first run only survives to the half-way epoch
-        KMeans.train_stream(BatchIterator(window_source, mesh=mesh), params,
-                            num_epochs=half, chunks_per_epoch=2,
-                            checkpoint=policy)
-        resumed = KMeans.train_stream(BatchIterator(window_source, mesh=mesh),
-                                      params, checkpoint=policy, resume=True)
-    drift = float(np.abs(np.asarray(straight.centroids)
-                         - np.asarray(resumed.centroids)).max())
+        make_pipe().fit_stream(raw, num_epochs=half, chunks_per_epoch=2,
+                               checkpoint=CheckpointPolicy(ckpt_dir,
+                                                           every_epochs=1))
+        resumed = make_pipe().fit_stream(
+            raw, num_epochs=epochs, chunks_per_epoch=2,
+            checkpoint=CheckpointPolicy(ckpt_dir, every_epochs=1),
+            resume=True)
+    drift = float(np.abs(np.asarray(straight.model.centroids)
+                         - np.asarray(resumed.model.centroids)).max())
     print(f"streaming kill+resume drift vs uninterrupted: {drift:.2e}")
     assert drift == 0.0, "resume must be bit-for-bit on the same mesh"
+    assert resumed["ngrams"].vocab == straight["ngrams"].vocab
     print("quickstart OK")
 
 

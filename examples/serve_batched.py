@@ -56,8 +56,8 @@ def main() -> None:
     from repro.core.algorithms.kmeans import KMeans, KMeansParameters
     from repro.core.numeric_table import MLNumericTable
     X = rng.normal(size=(64, 8)).astype(np.float32)
-    model = KMeans.train(MLNumericTable.from_numpy(X, num_shards=4),
-                         KMeansParameters(k=4, max_iter=4))
+    model = KMeans(KMeansParameters(k=4, max_iter=4)).fit(
+        MLNumericTable.from_numpy(X, num_shards=4))
     service = ModelPredictor(model, max_batch=16, num_shards=4)
     outs = service.predict_many([X[:10], X[10:40], X[40:]])
     assert sum(len(o) for o in outs) == 64

@@ -1,13 +1,16 @@
 from repro.checkpoint.store import (
     latest_step,
+    load_artifact,
     load_metadata,
     prune_checkpoints,
     restore_checkpoint,
     restore_with_metadata,
+    save_artifact,
     save_checkpoint,
 )
 
 __all__ = [
     "save_checkpoint", "restore_checkpoint", "restore_with_metadata",
     "load_metadata", "latest_step", "prune_checkpoints",
+    "save_artifact", "load_artifact",
 ]

@@ -42,6 +42,8 @@ __all__ = [
     "load_metadata",
     "latest_step",
     "prune_checkpoints",
+    "save_artifact",
+    "load_artifact",
 ]
 
 # anchored on both ends: "step_3.npz.tmp", "xstep_3.npz", "notes.txt" never match
@@ -233,6 +235,28 @@ def restore_with_metadata(ckpt_dir: str, tree: Any, step: Optional[int] = None
     ``metadata`` dict the checkpoint was saved with (None for checkpoints
     written without one)."""
     return _restore(ckpt_dir, tree, step)
+
+
+#: step id under which one-shot artifacts (fitted models/pipelines — no
+#: training-loop counter) are published
+ARTIFACT_STEP = 0
+
+
+def save_artifact(ckpt_dir: str, tree: Any,
+                  metadata: Optional[Dict[str, Any]] = None) -> str:
+    """Publish a *fitted artifact* (a trained model or pipeline: array
+    state tree + JSON host state) as one atomic checkpoint file.  Same
+    crash-safety as :func:`save_checkpoint`; artifacts use a dedicated
+    directory and the fixed step :data:`ARTIFACT_STEP`."""
+    return save_checkpoint(ckpt_dir, ARTIFACT_STEP, tree, metadata=metadata)
+
+
+def load_artifact(ckpt_dir: str, tree: Any
+                  ) -> Tuple[Any, Optional[Dict[str, Any]]]:
+    """Restore an artifact written by :func:`save_artifact` into the
+    structure of ``tree``; returns ``(restored_tree, metadata)``."""
+    restored, _, meta = _restore(ckpt_dir, tree, ARTIFACT_STEP)
+    return restored, meta
 
 
 def load_metadata(ckpt_dir: str, step: Optional[int] = None

@@ -23,7 +23,17 @@ from repro.core.optimizer import (
     StochasticGradientDescentParameters,
     soft_threshold,
 )
-from repro.core.interfaces import Algorithm, Model, NumericAlgorithm
+from repro.core.interfaces import (
+    Algorithm,
+    Estimator,
+    FittedEstimator,
+    FittedTransformer,
+    Model,
+    NumericAlgorithm,
+    Searchable,
+    StreamFitable,
+    Transformer,
+)
 
 __all__ = [
     "EMPTY", "Column", "ColumnType", "MLRow", "Schema",
@@ -36,4 +46,6 @@ __all__ = [
     "MinibatchSGD", "MinibatchSGDParameters",
     "soft_threshold",
     "Algorithm", "Model", "NumericAlgorithm",
+    "Estimator", "FittedEstimator", "Transformer", "FittedTransformer",
+    "StreamFitable", "Searchable",
 ]

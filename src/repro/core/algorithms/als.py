@@ -92,6 +92,10 @@ class MatrixFactorizationModel(Model):
         pred = self.predict(pairs)
         return jnp.sqrt(jnp.mean((pred - jnp.asarray(vals)) ** 2))
 
+    @property
+    def partial(self):
+        return {"U": self.U, "V": self.V}
+
 
 def _local_als(block: jnp.ndarray, Y: jnp.ndarray, lam: float) -> jnp.ndarray:
     """Fig. A9 ``localALS`` as a pure local function: for each packed CSR row
@@ -123,11 +127,13 @@ def _local_als_stacked(block: jnp.ndarray, Ys: jnp.ndarray,
 
 
 class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
-    """train(packed_ratings, packed_ratings_T, params) -> (U, V) model."""
+    """Instance-based Estimator: ``BroadcastALS(rank=10).fit(packed,
+    data_transposed=packed_T) -> (U, V) model`` (the legacy ``train``
+    classmethod is an inherited deprecation shim passing
+    ``data_transposed`` through)."""
 
-    @classmethod
-    def default_parameters(cls) -> ALSParameters:
-        return ALSParameters()
+    Parameters = ALSParameters
+    supervised = False
 
     @classmethod
     def compute_factor(cls, train_data: MLNumericTable, fixed_factor: jnp.ndarray,
@@ -141,15 +147,13 @@ class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
         return runner.partition_apply(train_data.data, _local_als,
                                       (fixed_factor, lam), combine="concat")
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[ALSParameters] = None,
-              data_transposed: Optional[MLNumericTable] = None,
-              ) -> MatrixFactorizationModel:
+    def fit(self, data: MLNumericTable,
+            data_transposed: Optional[MLNumericTable] = None,
+            ) -> MatrixFactorizationModel:
         if data_transposed is None:
-            raise ValueError("BroadcastALS.train requires the transposed ratings "
+            raise ValueError("BroadcastALS.fit requires the transposed ratings "
                              "table (the paper distributes both M and Mᵀ)")
-        p = params or cls.default_parameters()
+        p = self.params
         m, n = data.num_rows, data_transposed.num_rows
         key_u, key_v = jax.random.split(jax.random.PRNGKey(p.seed))
         # paper: LocalMatrix.rand init
@@ -179,6 +183,25 @@ class BroadcastALS(NumericAlgorithm[ALSParameters, MatrixFactorizationModel]):
 
         U, V = run(data.data, data_transposed.data, U, V)
         return MatrixFactorizationModel(U, V, p)
+
+    def rebuild(self, partial) -> MatrixFactorizationModel:
+        return MatrixFactorizationModel(jnp.asarray(partial["U"]),
+                                        jnp.asarray(partial["V"]),
+                                        self.params)
+
+    @classmethod
+    def train(cls, data: MLNumericTable,
+              params: Optional[ALSParameters] = None,
+              data_transposed: Optional[MLNumericTable] = None,
+              ) -> MatrixFactorizationModel:
+        """Deprecated positional-``data_transposed`` spelling; delegates to
+        ``cls(params).fit(data, data_transposed=…)`` (bit-identical)."""
+        from repro.core.interfaces import _warn_deprecated
+
+        _warn_deprecated(
+            f"{cls.__name__}.train(data, params, data_transposed)",
+            f"{cls.__name__}(params).fit(data, data_transposed=…)")
+        return cls(params).fit(data, data_transposed=data_transposed)
 
     @classmethod
     def train_stacked(cls, data: MLNumericTable,

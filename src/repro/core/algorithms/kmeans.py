@@ -20,7 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.collectives import CollectiveSchedule
-from repro.core.interfaces import Model, NumericAlgorithm
+from repro.core.interfaces import (
+    Model,
+    NumericAlgorithm,
+    Searchable,
+    StreamFitable,
+)
 from repro.core.numeric_table import MLNumericTable
 from repro.core.runner import CheckpointPolicy, DistributedRunner
 
@@ -64,6 +69,10 @@ class KMeansModel(Model):
     def inertia(self, x: jnp.ndarray) -> jnp.ndarray:
         d2 = jnp.sum((x[:, None, :] - self.centroids[None, :, :]) ** 2, axis=-1)
         return jnp.sum(jnp.min(d2, axis=-1))
+
+    @property
+    def partial(self):
+        return {"centroids": self.centroids}
 
 
 def _local_stats(block: jnp.ndarray, centroids: jnp.ndarray,
@@ -111,15 +120,17 @@ def _silhouette_score(val_table, centroids, schedule):
     return M.silhouette_lite(val_table, centroids, schedule=schedule)
 
 
-class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
-    @classmethod
-    def default_parameters(cls) -> KMeansParameters:
-        return KMeansParameters()
+class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel],
+             StreamFitable, Searchable):
+    """Instance-based Estimator: ``KMeans(k=4, seed=0).fit(table) ->
+    KMeansModel`` (the legacy ``train`` classmethod is an inherited
+    deprecation shim)."""
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[KMeansParameters] = None) -> KMeansModel:
-        p = params or cls.default_parameters()
+    Parameters = KMeansParameters
+    supervised = False
+
+    def fit(self, data: MLNumericTable) -> KMeansModel:
+        p = self.params
         n = data.num_rows
         if p.k > n:
             raise ValueError("k exceeds number of rows")
@@ -138,6 +149,14 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
         centroids = runner.run_rounds(data, centroids, local_step, p.max_iter,
                                       combine="sum", update=update)
         return KMeansModel(centroids, p)
+
+    def rebuild(self, partial) -> KMeansModel:
+        return KMeansModel(jnp.asarray(partial["centroids"]), self.params)
+
+    def stream_state_template(self, num_cols: int) -> jnp.ndarray:
+        """Shape/dtype template of the streaming-training carry (the
+        centroids) for a table with ``num_cols`` feature columns."""
+        return jnp.zeros((self.params.k, num_cols), jnp.float32)
 
     @classmethod
     def trial_spec(cls, config: dict, metric: str = "silhouette"):
@@ -171,14 +190,13 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
             stack_key=("kmeans", int(p.k)), score=_silhouette_score,
             finalize=lambda c: KMeansModel(c, p))
 
-    @classmethod
-    def train_stream(cls, stream, params: Optional[KMeansParameters] = None, *,
-                     num_epochs: Optional[int] = None, num_shards: int = 1,
-                     chunks_per_epoch: Optional[int] = None,
-                     checkpoint: Optional[CheckpointPolicy] = None,
-                     resume: bool = False,
-                     init_centroids: Optional[jnp.ndarray] = None
-                     ) -> KMeansModel:
+    def fit_stream(self, stream, *,
+                   num_epochs: Optional[int] = None, num_shards: int = 1,
+                   chunks_per_epoch: Optional[int] = None,
+                   checkpoint: Optional[CheckpointPolicy] = None,
+                   resume: bool = False,
+                   init_centroids: Optional[jnp.ndarray] = None
+                   ) -> KMeansModel:
         """Streaming Lloyd rounds over minibatch windows: every round
         re-assigns one window chunk to the current centroids, sums the
         per-partition (cluster sums, counts) statistics with the configured
@@ -192,7 +210,7 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel]):
         ``init_centroids`` is given; on resume the values are overwritten
         by the snapshot, so only the shape matters.
         """
-        p = params or cls.default_parameters()
+        p = self.params
         if init_centroids is None:
             if not hasattr(stream, "source"):
                 raise ValueError("pass init_centroids= for non-peekable streams")

@@ -29,8 +29,10 @@ __all__ = [
     "GeneralizedLinearModel",
     "LinearRegressionParameters",
     "LinearRegressionAlgorithm",
+    "LinearRegression",
     "LinearSVMParameters",
     "LinearSVMAlgorithm",
+    "LinearSVM",
 ]
 
 
@@ -52,6 +54,10 @@ class GeneralizedLinearModel(Model):
 
     def predict(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.link(x @ self.weights)
+
+    @property
+    def partial(self):
+        return {"weights": self.weights}
 
 
 def _train_glm(data: MLNumericTable, loss_grad, reg: Regularization,
@@ -89,15 +95,14 @@ class LinearRegressionParameters:
 class LinearRegressionAlgorithm(
     NumericAlgorithm[LinearRegressionParameters, GeneralizedLinearModel]
 ):
-    @classmethod
-    def default_parameters(cls) -> LinearRegressionParameters:
-        return LinearRegressionParameters()
+    """Instance-based Estimator: ``LinearRegressionAlgorithm(
+    learning_rate=0.1).fit(table)``."""
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[LinearRegressionParameters] = None
-              ) -> GeneralizedLinearModel:
-        p = params or cls.default_parameters()
+    Parameters = LinearRegressionParameters
+    supervised = True
+
+    def fit(self, data: MLNumericTable) -> GeneralizedLinearModel:
+        p = self.params
 
         def loss_grad(x, y, w):
             return x * (jnp.dot(x, w) - y)
@@ -105,6 +110,9 @@ class LinearRegressionAlgorithm(
         w = _train_glm(data, loss_grad, p.reg, p.learning_rate, p.max_iter,
                        p.local_batch_size, p.schedule)
         return GeneralizedLinearModel(w)
+
+    def rebuild(self, partial) -> GeneralizedLinearModel:
+        return GeneralizedLinearModel(jnp.asarray(partial["weights"]))
 
 
 # --------------------------------------------------------------------------- #
@@ -124,15 +132,11 @@ class LinearSVMAlgorithm(
 ):
     """Labels are expected in {-1, +1} in column 0."""
 
-    @classmethod
-    def default_parameters(cls) -> LinearSVMParameters:
-        return LinearSVMParameters()
+    Parameters = LinearSVMParameters
+    supervised = True
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[LinearSVMParameters] = None
-              ) -> GeneralizedLinearModel:
-        p = params or cls.default_parameters()
+    def fit(self, data: MLNumericTable) -> GeneralizedLinearModel:
+        p = self.params
 
         def loss_grad(x, y, w):
             margin = y * jnp.dot(x, w)
@@ -141,3 +145,12 @@ class LinearSVMAlgorithm(
         w = _train_glm(data, loss_grad, p.reg, p.learning_rate, p.max_iter,
                        p.local_batch_size, p.schedule)
         return GeneralizedLinearModel(w, link=jnp.sign)
+
+    def rebuild(self, partial) -> GeneralizedLinearModel:
+        return GeneralizedLinearModel(jnp.asarray(partial["weights"]),
+                                      link=jnp.sign)
+
+
+#: estimator-style aliases
+LinearRegression = LinearRegressionAlgorithm
+LinearSVM = LinearSVMAlgorithm

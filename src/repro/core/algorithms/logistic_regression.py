@@ -21,7 +21,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.collectives import CollectiveSchedule
-from repro.core.interfaces import Model, NumericAlgorithm
+from repro.core.interfaces import (
+    Model,
+    NumericAlgorithm,
+    Searchable,
+    StreamFitable,
+)
 from repro.core.numeric_table import MLNumericTable
 from repro.core.optimizer import (
     GradientDescent,
@@ -36,6 +41,7 @@ __all__ = [
     "LogisticRegressionParameters",
     "LogisticRegressionModel",
     "LogisticRegressionAlgorithm",
+    "LogisticRegression",
 ]
 
 
@@ -71,6 +77,10 @@ class LogisticRegressionModel(Model):
         """Mean negative log likelihood."""
         logits = x @ self.weights
         return jnp.mean(jnp.logaddexp(0.0, logits) - y * logits)
+
+    @property
+    def partial(self):
+        return {"weights": self.weights}
 
 
 def _make_gradient(p: LogisticRegressionParameters):
@@ -147,17 +157,18 @@ def _scorer(metric: str):
 
 
 class LogisticRegressionAlgorithm(
-    NumericAlgorithm[LogisticRegressionParameters, LogisticRegressionModel]
+    NumericAlgorithm[LogisticRegressionParameters, LogisticRegressionModel],
+    StreamFitable, Searchable,
 ):
-    @classmethod
-    def default_parameters(cls) -> LogisticRegressionParameters:
-        return LogisticRegressionParameters()
+    """Instance-based Estimator: ``LogisticRegressionAlgorithm(
+    learning_rate=0.3).fit(table) -> LogisticRegressionModel`` (the legacy
+    ``train`` classmethod is an inherited deprecation shim)."""
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[LogisticRegressionParameters] = None
-              ) -> LogisticRegressionModel:
-        p = params or cls.default_parameters()
+    Parameters = LogisticRegressionParameters
+    supervised = True
+
+    def fit(self, data: MLNumericTable) -> LogisticRegressionModel:
+        p = self.params
         d = data.num_cols - 1
         gradient = _make_gradient(p)
         prox = soft_threshold(p.l1) if p.l1 else None
@@ -175,6 +186,16 @@ class LogisticRegressionAlgorithm(
                 lr_decay=p.lr_decay))
         weights = opt.apply(data, None)
         return LogisticRegressionModel(p, weights)
+
+    def rebuild(self, partial) -> LogisticRegressionModel:
+        return LogisticRegressionModel(self.params,
+                                       jnp.asarray(partial["weights"]))
+
+    def stream_state_template(self, num_cols: int) -> jnp.ndarray:
+        """Shape/dtype template of the streaming-training carry for a table
+        with ``num_cols`` columns (label included) — what a checkpointed
+        pipeline restores into."""
+        return jnp.zeros((num_cols - 1,), jnp.float32)
 
     @classmethod
     def trial_spec(cls, config: dict, metric: str = "accuracy"):
@@ -217,15 +238,13 @@ class LogisticRegressionAlgorithm(
             score=_scorer(metric),
             finalize=lambda w: LogisticRegressionModel(p, w))
 
-    @classmethod
-    def train_stream(cls, stream,
-                     params: Optional[LogisticRegressionParameters] = None, *,
-                     num_epochs: Optional[int] = None,
-                     num_features: Optional[int] = None,
-                     num_shards: int = 1,
-                     chunks_per_epoch: Optional[int] = None,
-                     checkpoint=None, resume: bool = False
-                     ) -> LogisticRegressionModel:
+    def fit_stream(self, stream, *,
+                   num_epochs: Optional[int] = None,
+                   num_features: Optional[int] = None,
+                   num_shards: int = 1,
+                   chunks_per_epoch: Optional[int] = None,
+                   checkpoint=None, resume: bool = False
+                   ) -> LogisticRegressionModel:
         """Streaming training over a :class:`repro.data.pipeline.
         BatchIterator` whose windows follow the library convention (label
         in column 0): one window per epoch, ``chunks_per_epoch`` SGD rounds
@@ -237,7 +256,7 @@ class LogisticRegressionAlgorithm(
         streams — full-batch GD needs the whole table resident by
         definition.
         """
-        p = params or cls.default_parameters()
+        p = self.params
         if p.solver != "sgd":
             raise ValueError(
                 f"streaming supports solver='sgd' only, got {p.solver!r} "
@@ -258,3 +277,7 @@ class LogisticRegressionAlgorithm(
             num_shards=num_shards, chunks_per_epoch=chunks_per_epoch,
             checkpoint=checkpoint, resume=resume)
         return LogisticRegressionModel(p, weights)
+
+
+#: estimator-style name for the paper's Fig. A2 terminal stage
+LogisticRegression = LogisticRegressionAlgorithm

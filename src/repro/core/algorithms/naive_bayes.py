@@ -58,16 +58,21 @@ class NaiveBayesModel(Model):
     def predict(self, x: jnp.ndarray) -> jnp.ndarray:
         return jnp.argmax(self.predict_log_proba(x), axis=-1)
 
+    @property
+    def partial(self):
+        return {"priors": self.priors, "means": self.means,
+                "variances": self.variances}
+
 
 class GaussianNaiveBayes(NumericAlgorithm[NaiveBayesParameters, NaiveBayesModel]):
-    @classmethod
-    def default_parameters(cls) -> NaiveBayesParameters:
-        return NaiveBayesParameters()
+    """Instance-based Estimator: ``GaussianNaiveBayes(num_classes=3)
+    .fit(table)``."""
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[NaiveBayesParameters] = None) -> NaiveBayesModel:
-        p = params or cls.default_parameters()
+    Parameters = NaiveBayesParameters
+    supervised = True
+
+    def fit(self, data: MLNumericTable) -> NaiveBayesModel:
+        p = self.params
         C = p.num_classes
         d = data.num_cols - 1
         n = data.num_rows
@@ -81,3 +86,8 @@ class GaussianNaiveBayes(NumericAlgorithm[NaiveBayesParameters, NaiveBayesModel]
         var = jnp.maximum(var, 0.0) + p.var_smoothing
         priors = cnt / n
         return NaiveBayesModel(priors, mean, var)
+
+    def rebuild(self, partial) -> NaiveBayesModel:
+        return NaiveBayesModel(jnp.asarray(partial["priors"]),
+                               jnp.asarray(partial["means"]),
+                               jnp.asarray(partial["variances"]))

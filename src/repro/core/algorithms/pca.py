@@ -53,16 +53,20 @@ class PCAModel(Model):
     def inverse_transform(self, z: jnp.ndarray) -> jnp.ndarray:
         return z @ self.components + self.mean
 
+    @property
+    def partial(self):
+        return {"components": self.components, "mean": self.mean,
+                "explained_variance": self.explained_variance}
+
 
 class PCA(NumericAlgorithm[PCAParameters, PCAModel]):
-    @classmethod
-    def default_parameters(cls) -> PCAParameters:
-        return PCAParameters()
+    """Instance-based Estimator: ``PCA(n_components=2).fit(table)``."""
 
-    @classmethod
-    def train(cls, data: MLNumericTable,
-              params: Optional[PCAParameters] = None) -> PCAModel:
-        p = params or cls.default_parameters()
+    Parameters = PCAParameters
+    supervised = False
+
+    def fit(self, data: MLNumericTable) -> PCAModel:
+        p = self.params
         n, d = data.num_rows, data.num_cols
 
         runner = DistributedRunner.for_table(data, schedule=p.schedule)
@@ -75,3 +79,8 @@ class PCA(NumericAlgorithm[PCAParameters, PCAModel]):
         order = jnp.argsort(evals)[::-1][: p.n_components]
         components = evecs[:, order].T                           # (k, d)
         return PCAModel(components, mean, evals[order])
+
+    def rebuild(self, partial) -> PCAModel:
+        return PCAModel(jnp.asarray(partial["components"]),
+                        jnp.asarray(partial["mean"]),
+                        jnp.asarray(partial["explained_variance"]))

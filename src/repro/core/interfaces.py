@@ -1,29 +1,83 @@
-"""Algorithm / Model interfaces (paper §III-C).
+"""Estimator / Model interfaces — the MLI contract (paper §III-C), redesigned
+around *fitted objects*.
 
-An Algorithm is a class with a ``train()`` method that accepts data and
-hyperparameters and produces a Model; a Model is an object that makes
-predictions.  These are deliberately thin — their value is the *uniform
-contract* across every algorithm in the library (and, in the paper, across
-the whole MLBASE system).
+The user-facing contract is one pair of objects:
+
+    est = SomeEstimator(learning_rate=0.3)     # hyperparameters in the ctor
+    fitted = est.fit(table)                    # -> FittedEstimator
+    fitted.predict(x) / fitted.transform(x)    # replayable on any rows
+
+Every algorithm and every featurizer in the library implements it, so the
+paper's Fig. A2 program — raw text → nGrams → tfIdf → train → predict — is
+one composable object (:class:`repro.pipeline.Pipeline`) that trains through
+:class:`repro.core.runner.DistributedRunner`, is searched by
+:class:`repro.tune.ModelSearch`, checkpoints through
+:mod:`repro.checkpoint.store`, and serves through
+:class:`repro.serve.ModelPredictor`.
+
+Capability mixins declare what an estimator can do beyond plain ``fit``:
+
+  * :class:`StreamFitable` — ``fit_stream(stream, …)`` trains from per-epoch
+    minibatch windows (never fully resident) with checkpoint/resume;
+  * :class:`Searchable` — ``trial_spec(config)`` describes one model-search
+    trial in the device-stackable form :mod:`repro.tune` executes;
+  * fitted objects expose ``partial`` — the checkpointable state pytree —
+    and estimators ``rebuild(partial)`` a fitted object from it, which is
+    how a whole pipeline round-trips through one atomic checkpoint.
+
+The seed-era classmethod spellings (``Algorithm.train(data, params)``,
+``defaultParameters``) keep working as thin deprecation shims delegating to
+the instances; they warn with :class:`DeprecationWarning` (carved out of the
+repo's warnings-as-errors filter) and are bit-identical to the new path
+(``tests/test_estimators.py``).
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Any, Generic, TypeVar
+import warnings
+from typing import Any, ClassVar, Generic, Optional, TypeVar
 
 import jax.numpy as jnp
 
 from repro.core.numeric_table import MLNumericTable
 
-__all__ = ["Algorithm", "NumericAlgorithm", "Model"]
+__all__ = [
+    "Estimator",
+    "FittedEstimator",
+    "Transformer",
+    "FittedTransformer",
+    "StreamFitable",
+    "Searchable",
+    "Algorithm",
+    "NumericAlgorithm",
+    "Model",
+]
 
 P_ = TypeVar("P_")  # hyperparameter dataclass
 M_ = TypeVar("M_", bound="Model")
 
 
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} — the instance-based Estimator "
+        f"contract (hyperparameters in the constructor, fit() returning a "
+        f"fitted model). The shim delegates and is bit-identical.",
+        DeprecationWarning, stacklevel=3)
+
+
+# --------------------------------------------------------------------------- #
+# fitted objects
+# --------------------------------------------------------------------------- #
 class Model(abc.ABC):
-    """An object which makes predictions (paper §III-C)."""
+    """A fitted estimator: an object which makes predictions (paper §III-C).
+
+    ``transform`` is the transformer-style spelling of the same replay
+    (identical for projection models like PCA); ``partial`` exposes the
+    checkpointable state pytree (arrays only) so fitted objects ride in
+    :mod:`repro.checkpoint.store` snapshots — rebuild one with
+    :meth:`Estimator.rebuild`.
+    """
 
     @abc.abstractmethod
     def predict(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -32,32 +86,205 @@ class Model(abc.ABC):
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.predict(x)
 
+    def transform(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Transformer spelling of the fitted replay (defaults to predict)."""
+        return self.predict(x)
 
-class Algorithm(abc.ABC, Generic[P_, M_]):
-    """train(data, hyperparameters) -> Model."""
+    @property
+    def partial(self) -> Any:
+        """The fitted state as a pytree of arrays (for checkpointing)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose partial state")
+
+
+#: the fitted half of the Estimator contract (predict/transform + partial)
+FittedEstimator = Model
+
+
+# --------------------------------------------------------------------------- #
+# estimators
+# --------------------------------------------------------------------------- #
+class Estimator(abc.ABC):
+    """fit(data) -> FittedEstimator; hyperparameters live in the instance."""
+
+    @abc.abstractmethod
+    def fit(self, data: Any) -> FittedEstimator:
+        ...
+
+    def rebuild(self, partial: Any) -> FittedEstimator:
+        """Reconstruct a fitted object from its ``partial`` state pytree
+        (the checkpoint-restore path)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support rebuild()")
+
+
+class StreamFitable(abc.ABC):
+    """Capability mixin: the estimator trains from a stream of per-epoch
+    minibatch windows (:class:`repro.data.pipeline.BatchIterator`) through
+    :meth:`repro.core.runner.DistributedRunner.run_epochs`, inheriting its
+    checkpoint/resume story."""
+
+    @abc.abstractmethod
+    def fit_stream(self, stream: Any, **kwargs: Any) -> FittedEstimator:
+        ...
+
+
+class Searchable(abc.ABC):
+    """Capability mixin: the estimator describes one model-search trial as
+    a :class:`repro.tune.trials.TrialSpec` (device-stackable where shapes
+    allow; see :mod:`repro.tune`)."""
 
     @classmethod
     @abc.abstractmethod
+    def trial_spec(cls, config: dict, metric: Optional[str] = None):
+        ...
+
+
+# --------------------------------------------------------------------------- #
+# transformers (featurizers)
+# --------------------------------------------------------------------------- #
+class FittedTransformer(abc.ABC):
+    """A fitted feature transformer: corpus statistics (vocabulary, IDF
+    weights, column means/stds) are computed once at ``fit`` and *replayed*
+    at ``transform`` on any table or raw serving row — never refit, so a
+    transformer fit on train folds cannot leak validation statistics.
+
+    ``tier`` declares where the transform runs: ``"host"`` stages are
+    schema-changing row programs (text → counts) executed on the MLTable
+    tier; ``"device"`` stages are pure numeric maps whose :meth:`apply`
+    is jax-traceable and runs inside the serving microbatch jit.
+    """
+
+    tier: ClassVar[str] = "device"
+
+    @abc.abstractmethod
+    def transform(self, table: Any) -> Any:
+        """Replay the fitted statistics over a whole table."""
+
+    def __call__(self, table: Any) -> Any:
+        return self.transform(table)
+
+    def apply(self, feats: jnp.ndarray) -> jnp.ndarray:
+        """Device-tier row replay on label-free feature rows (jittable).
+        Host-tier transformers raise; use :meth:`transform_rows`."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no device-tier apply()")
+
+    def transform_rows(self, rows: Any) -> Any:
+        """Host-tier row replay (e.g. raw text → count vectors)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no host-tier transform_rows()")
+
+    @property
+    def partial(self) -> Any:
+        """Fitted state as a pytree of arrays (may be empty)."""
+        return {}
+
+    def host_state(self) -> dict:
+        """Fitted state that is not arrays (vocabulary, column indices) as
+        a JSON-able dict; together with ``partial`` it fully determines the
+        fitted transformer (see ``from_state``)."""
+        return {}
+
+
+class Transformer(Estimator):
+    """An Estimator whose fitted form transforms tables (same contract as
+    the algorithms: statistics at fit, replay at transform)."""
+
+    tier: ClassVar[str] = "device"
+
+    def fit_transform(self, table: Any):
+        """Convenience: fit on ``table`` and transform it; returns
+        ``(fitted, transformed_table)``."""
+        fitted = self.fit(table)
+        return fitted, fitted.transform(table)
+
+    def clone_with(self, **overrides: Any) -> "Transformer":
+        """A new transformer of the same type with some constructor
+        hyperparameters replaced — how :class:`repro.tune.ModelSearch`
+        addresses nested stage params (``"tfidf.top"``)."""
+        cfg = dict(getattr(self, "_config", {}))
+        for k in overrides:
+            if k not in cfg:
+                raise ValueError(
+                    f"{type(self).__name__} has no hyperparameter {k!r} "
+                    f"(searchable: {sorted(cfg)})")
+        cfg.update(overrides)
+        return type(self)(**cfg)
+
+
+# --------------------------------------------------------------------------- #
+# parameters-carrying algorithms (the paper's Algorithm, instance-based)
+# --------------------------------------------------------------------------- #
+class Algorithm(Estimator, Generic[P_, M_]):
+    """An Estimator whose hyperparameters are a ``Parameters`` dataclass.
+
+    Instances are constructed either from a full dataclass or from field
+    overrides::
+
+        LogisticRegressionAlgorithm(learning_rate=0.3, max_iter=20)
+        KMeans(KMeansParameters(k=8, seed=1))
+
+    The legacy classmethod spellings (``train``, ``defaultParameters``) are
+    deprecation shims delegating to ``cls(params).fit(data)``.
+    """
+
+    #: the hyperparameter dataclass of this algorithm (set by subclasses)
+    Parameters: ClassVar[Optional[type]] = None
+    #: whether fit() expects the label in column 0 (library convention) —
+    #: pipelines use this to protect the label column from featurizers
+    supervised: ClassVar[bool] = False
+
+    def __init__(self, params: Optional[P_] = None, **overrides: Any) -> None:
+        cls = type(self)
+        if cls.Parameters is None:
+            raise TypeError(f"{cls.__name__} declares no Parameters class")
+        if params is None:
+            params = cls.Parameters(**overrides)
+        elif overrides:
+            params = dataclasses.replace(params, **overrides)
+        self.params: P_ = params
+
+    def overrides(self) -> dict:
+        """The hyperparameters that differ from the defaults — merged under
+        trial configs by the pipeline search path, so an instance's settings
+        are the baseline every trial overrides."""
+        base = type(self).Parameters()
+        return {f.name: getattr(self.params, f.name)
+                for f in dataclasses.fields(self.params)
+                if getattr(self.params, f.name) != getattr(base, f.name)}
+
+    @classmethod
     def default_parameters(cls) -> P_:
-        ...
+        return cls.Parameters()
+
+    # ------------------------------------------------------------------ #
+    # legacy classmethod contract (deprecation shims)
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def train(cls, data: Any, params: Optional[P_] = None, **kwargs: Any) -> M_:
+        """Deprecated: ``cls.train(data, params)`` → ``cls(params).fit(data)``.
+
+        Bit-identical to the new path (it *is* the new path)."""
+        _warn_deprecated(f"{cls.__name__}.train(data, params)",
+                         f"{cls.__name__}(params).fit(data)")
+        return cls(params).fit(data, **kwargs)
 
     @classmethod
-    @abc.abstractmethod
-    def train(cls, data: Any, params: P_) -> M_:
-        ...
+    def train_stream(cls, stream: Any, params: Optional[P_] = None,
+                     **kwargs: Any) -> M_:
+        """Legacy spelling of :meth:`StreamFitable.fit_stream` (kept quiet —
+        internal launchers routed through it until this release)."""
+        return cls(params).fit_stream(stream, **kwargs)
 
-    # paper spelling
     @classmethod
-    def defaultParameters(cls) -> P_:
+    def defaultParameters(cls) -> P_:  # paper spelling
+        _warn_deprecated(f"{cls.__name__}.defaultParameters()",
+                         f"{cls.__name__}.default_parameters()")
         return cls.default_parameters()
 
 
 class NumericAlgorithm(Algorithm[P_, M_]):
-    """An Algorithm whose ``train`` expects an MLNumericTable (each row is a
+    """An Algorithm whose ``fit`` expects an MLNumericTable (each row is a
     feature vector; by library convention column 0 is the label when the
     algorithm is supervised — matching Fig. A4's ``vec(0)``)."""
-
-    @classmethod
-    @abc.abstractmethod
-    def train(cls, data: MLNumericTable, params: P_) -> M_:
-        ...

@@ -92,11 +92,21 @@ class CheckpointPolicy:
     schedule) — everything :meth:`DistributedRunner.resume` needs to
     restart the run bit-for-bit.  ``keep`` bounds disk usage by pruning all
     but the newest ``keep`` snapshots after each publish.
+
+    ``extra_state`` (a pytree of arrays) and ``extra_metadata`` (a
+    JSON-able dict) ride in every snapshot *alongside* the training carry —
+    one atomic file, so a composite artifact (a fitted pipeline's
+    featurizer statistics + model state + stream position) can never be
+    torn apart by a crash.  On resume the restored extra tree replaces
+    ``extra_state`` in place, so the caller reads the snapshot's values
+    back off the policy.
     """
 
     ckpt_dir: str
     every_epochs: int = 1
     keep: Optional[int] = None
+    extra_state: Any = None
+    extra_metadata: Optional[dict] = None
 
     def __post_init__(self) -> None:
         if self.every_epochs < 1:
@@ -464,8 +474,16 @@ class DistributedRunner:
             "num_shards": self.num_shards,
             "every_epochs": policy.every_epochs,
             "keep": policy.keep,
+            "wrapped": policy.extra_state is not None,
         }
-        save_checkpoint(policy.ckpt_dir, epoch, state, metadata=meta,
+        tree = state
+        if policy.extra_state is not None:
+            # one atomic unit: the training carry plus the caller's extra
+            # state (e.g. a pipeline's fitted featurizer statistics)
+            tree = {"state": state, "extra": policy.extra_state}
+        if policy.extra_metadata is not None:
+            meta["extra"] = policy.extra_metadata
+        save_checkpoint(policy.ckpt_dir, epoch, tree, metadata=meta,
                         keep=policy.keep)
 
     def resume(self, ckpt_dir: str, stream: Any, init_state: Any,
@@ -487,9 +505,25 @@ class DistributedRunner:
         uninterrupted run bit-for-bit (asserted in
         ``tests/test_streaming_resume.py``).
         """
-        from repro.checkpoint.store import restore_with_metadata
+        from repro.checkpoint.store import load_metadata, \
+            restore_with_metadata
 
-        state, ck_step, meta = restore_with_metadata(ckpt_dir, init_state, step)
+        peek = load_metadata(ckpt_dir, step) or {}
+        wrapped = bool(peek.get("wrapped"))
+        template = init_state
+        if wrapped:
+            if checkpoint is None or checkpoint.extra_state is None:
+                raise ValueError(
+                    f"checkpoint under {ckpt_dir} carries extra (pipeline) "
+                    f"state — resume needs the CheckpointPolicy with an "
+                    f"extra_state template to restore it atomically")
+            template = {"state": init_state, "extra": checkpoint.extra_state}
+        state, ck_step, meta = restore_with_metadata(ckpt_dir, template, step)
+        if wrapped:
+            # hand the restored extra tree back through the policy (and
+            # keep re-saving it with every later snapshot)
+            checkpoint.extra_state = state["extra"]
+            state = state["state"]
         if meta is None:
             raise ValueError(
                 f"checkpoint step {ck_step} under {ckpt_dir} carries no "

@@ -3,11 +3,13 @@ from repro.data.synthetic import (
     synth_imagenet_features,
     synth_netflix_tiled,
     synth_text_corpus,
+    synth_labeled_text,
     SyntheticLMDataset,
 )
 from repro.data.pipeline import BatchIterator
 
 __all__ = [
     "synth_classification", "synth_imagenet_features", "synth_netflix_tiled",
-    "synth_text_corpus", "SyntheticLMDataset", "BatchIterator",
+    "synth_text_corpus", "synth_labeled_text", "SyntheticLMDataset",
+    "BatchIterator",
 ]

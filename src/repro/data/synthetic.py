@@ -20,7 +20,8 @@ from typing import Optional, Tuple
 import numpy as np
 
 __all__ = ["synth_classification", "synth_imagenet_features",
-           "synth_netflix_tiled", "synth_text_corpus", "SyntheticLMDataset"]
+           "synth_netflix_tiled", "synth_text_corpus", "synth_labeled_text",
+           "SyntheticLMDataset"]
 
 
 def synth_classification(n: int, d: int, seed: int = 0, noise: float = 0.05
@@ -91,6 +92,29 @@ def synth_text_corpus(n_docs: int = 64, words_per_doc: int = 30,
         p = topic_bias[i % n_topics]
         docs.append(" ".join(rng.choice(_WORDS, size=words_per_doc, p=p)))
     return docs
+
+
+def synth_labeled_text(n_docs: int = 64, words_per_doc: int = 20,
+                       seed: int = 0) -> list:
+    """Binary text-classification corpus for the Fig. A2 end-to-end story:
+    ``(label, text)`` rows whose word distributions are class-biased (each
+    class favors half the vocabulary), so a served text pipeline has
+    signal to learn.  Pure function of the arguments — a resumed run sees
+    the identical table."""
+    rng = np.random.default_rng(seed)
+    half = len(_WORDS) // 2
+    bias = np.full(len(_WORDS), 0.25 / (len(_WORDS) - half))
+    p0, p1 = bias.copy(), bias.copy()
+    p0[:half] = 0.75 / half
+    p1[half:] = 0.75 / (len(_WORDS) - half)
+    p0, p1 = p0 / p0.sum(), p1 / p1.sum()
+    rows = []
+    for i in range(n_docs):
+        label = i % 2
+        p = p1 if label else p0
+        rows.append((float(label),
+                     " ".join(rng.choice(_WORDS, size=words_per_doc, p=p))))
+    return rows
 
 
 @dataclasses.dataclass

@@ -1,24 +1,57 @@
-"""Text featurization transforms (paper §III-A, Fig. A2).
+"""Text featurization (paper §III-A, Fig. A2) — fitted transformers.
 
-Data transformations are functions MLTable -> MLTable (potentially of a
-different schema).  ``n_grams`` produces per-document n-gram counts for the
-``top`` most frequent grams in the corpus; ``tf_idf`` converts the count
-table to TF-IDF; ``hashing_vectorizer`` is the streaming-friendly variant
-(beyond-paper convenience, same contract).
+The paper's pipeline ``nGrams(rawText, n=2, top=30000) → tfIdf(...)`` is
+expressed here as :class:`repro.core.interfaces.Transformer` objects whose
+corpus statistics are computed once at ``fit`` and *replayed* at
+``transform``:
+
+  * :class:`NGrams` — fits the vocabulary (the corpus's ``top`` most
+    frequent n-grams); transform maps any table (or raw serving row) onto
+    that fixed vocabulary.  Fitting on the train view only and replaying on
+    validation/serving rows is what closes the seed-era train/test-leakage
+    trap (the one-shot ``n_grams`` function refit its vocabulary on
+    whatever table it was handed).
+  * :class:`TfIdf` — fits document frequencies (→ IDF weights) with one
+    shared-nothing reduce; transform is the pure per-row map
+    ``tf * idf`` and runs on the device tier (inside the serving jit).
+  * :class:`HashingVectorizer` — the stateless streaming-friendly variant
+    (fit records only configuration; the hash is a stable CRC so replay is
+    identical across processes — a fitted transformer must survive
+    checkpoint/restore into a fresh interpreter).
+
+Non-target columns (labels) pass through in their original order ahead of
+the generated feature columns, so the library's label-in-column-0
+convention survives featurization.  The seed-era one-shot functions
+(``n_grams``, ``tf_idf``, ``hashing_vectorizer``) remain as fit+transform
+shims.
 """
 from __future__ import annotations
 
-import math
 import re
+import zlib
 from collections import Counter
-from typing import List
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.interfaces import FittedTransformer, Transformer
 from repro.core.mltable import MLTable
-from repro.core.schema import ColumnType, MLRow, Schema
+from repro.core.numeric_table import MLNumericTable
+from repro.core.schema import Column, ColumnType, MLRow, Schema
+from repro.features.scaling import (
+    SkipSpec,
+    _feature_cols,
+    resolve_labels,
+    resolve_skip,
+)
 
-__all__ = ["n_grams", "tf_idf", "hashing_vectorizer"]
+__all__ = [
+    "NGrams", "FittedNGrams",
+    "TfIdf", "FittedTfIdf",
+    "HashingVectorizer", "FittedHashingVectorizer",
+    "n_grams", "tf_idf", "hashing_vectorizer",
+]
 
 _TOKEN = re.compile(r"[a-z0-9']+")
 
@@ -29,65 +62,323 @@ def _tokens(text: str) -> List[str]:
 
 def _grams(text: str, n: int) -> List[str]:
     toks = _tokens(text)
-    return [" ".join(toks[i : i + n]) for i in range(len(toks) - n + 1)]
+    return [" ".join(toks[i: i + n]) for i in range(len(toks) - n + 1)]
 
 
-def n_grams(table: MLTable, n: int = 2, top: int = 30000, column: int = 0) -> MLTable:
-    """Per-document frequency of the corpus's ``top`` n-grams (Fig. A2
-    ``nGrams(rawTextTable, n=2, top=30000)``).
+def _stable_hash(gram: str) -> int:
+    """Process-independent gram hash (python's ``hash`` is salted per
+    interpreter, which would break checkpoint-restore replay)."""
+    return zlib.crc32(gram.encode("utf-8"))
 
-    Input: a table with a STRING column.  Output schema: one SCALAR column per
-    selected gram (named by the gram), rows aligned with input rows.
-    """
-    col = table.schema.index_of(column) if isinstance(column, str) else column
-    corpus = Counter()
-    per_doc: List[Counter] = []
-    for row in table.rows():
-        g = Counter(_grams(str(row[col]), n))
-        per_doc.append(g)
-        corpus.update(g)
-    vocab = [g for g, _ in corpus.most_common(top)]
-    index = {g: i for i, g in enumerate(vocab)}
-    schema = Schema.of(*([ColumnType.SCALAR] * len(vocab)), names=vocab)
-    rows = []
-    for g in per_doc:
-        vec = [0.0] * len(vocab)
-        for gram, c in g.items():
-            j = index.get(gram)
+
+def _text_col(table: MLTable, column: Union[int, str]) -> int:
+    return (table.schema.index_of(column) if isinstance(column, str)
+            else int(column))
+
+
+def _passthrough_idx(table: MLTable, col: int, keep_columns: bool
+                     ) -> Tuple[int, ...]:
+    if not keep_columns:
+        return ()
+    return tuple(i for i in range(table.num_cols) if i != col)
+
+
+def _vectorized_table(table: MLTable, col: int, passthrough: Tuple[int, ...],
+                      feat_names: Sequence[str],
+                      row_vec) -> MLTable:
+    """Rebuild a table: passthrough columns (original order) + generated
+    feature columns, preserving the partition layout."""
+    in_cols = table.schema.columns
+    schema = Schema(
+        tuple(in_cols[i] for i in passthrough)
+        + tuple(Column(ColumnType.SCALAR, n) for n in feat_names))
+    parts = []
+    for p in table.partitions:
+        out = []
+        for row in p:
+            vec = row_vec(str(row[col]))
+            out.append(MLRow(tuple(row[i] for i in passthrough) + tuple(vec),
+                             schema))
+        parts.append(out)
+    return MLTable(parts, schema)
+
+
+class FittedNGrams(FittedTransformer):
+    """Replay a fitted n-gram vocabulary over tables or raw text rows."""
+
+    tier = "host"
+
+    def __init__(self, vocab: Sequence[str], n: int, column: Union[int, str],
+                 keep_columns: bool = True) -> None:
+        self.vocab = list(vocab)
+        self.n = int(n)
+        self.column = column
+        self.keep_columns = bool(keep_columns)
+        self._index = {g: i for i, g in enumerate(self.vocab)}
+
+    def _vec(self, text: str) -> List[float]:
+        vec = [0.0] * len(self.vocab)
+        for gram, c in Counter(_grams(text, self.n)).items():
+            j = self._index.get(gram)
             if j is not None:
                 vec[j] = float(c)
-        rows.append(MLRow(vec, schema))
-    from repro.core.mltable import _chunk  # same partitioning policy
+        return vec
 
-    return MLTable(_chunk(rows, table.num_partitions), schema)
+    def transform(self, table: MLTable) -> MLTable:
+        col = _text_col(table, self.column)
+        passthrough = _passthrough_idx(table, col, self.keep_columns)
+        # generated columns are namespaced (``ng:<gram>``) so a corpus that
+        # happens to contain the token "label" or "bias" can never collide
+        # with the auto-skip names of the passthrough columns; the seed
+        # shim (keep_columns=False) keeps raw gram names for fidelity
+        names = ([f"ng:{g}" for g in self.vocab] if self.keep_columns
+                 else list(self.vocab))
+        return _vectorized_table(table, col, passthrough, names, self._vec)
+
+    def transform_rows(self, rows: Any) -> np.ndarray:
+        """Raw serving rows (a str or sequence of str) → (n, |vocab|)
+        count matrix — the vocab-lookup step of a served pipeline."""
+        if isinstance(rows, str):
+            rows = [rows]
+        return np.asarray([self._vec(str(r)) for r in rows], np.float32)
+
+    def host_state(self) -> dict:
+        return {"kind": "ngrams", "vocab": list(self.vocab), "n": self.n,
+                "column": self.column, "keep_columns": self.keep_columns}
+
+    @staticmethod
+    def partial_template(host_state: dict):
+        return {}
+
+    @classmethod
+    def from_state(cls, host_state: dict, partial: dict) -> "FittedNGrams":
+        return cls(host_state["vocab"], host_state["n"], host_state["column"],
+                   host_state["keep_columns"])
+
+
+class NGrams(Transformer):
+    """Fit the corpus's ``top`` most frequent n-grams of one STRING column
+    (Fig. A2 ``nGrams(rawTextTable, n=2, top=30000)``); transform emits one
+    SCALAR count column per vocabulary gram, after the passthrough columns.
+    """
+
+    tier = "host"
+
+    def __init__(self, n: int = 2, top: int = 30000,
+                 column: Union[int, str] = 0, keep_columns: bool = True
+                 ) -> None:
+        self.n = int(n)
+        self.top = int(top)
+        self.column = column
+        self.keep_columns = bool(keep_columns)
+        self._config = {"n": n, "top": top, "column": column,
+                        "keep_columns": keep_columns}
+
+    def fit(self, table: MLTable, default_skip: Sequence[int] = ()
+            ) -> FittedNGrams:
+        col = _text_col(table, self.column)
+        corpus: Counter = Counter()
+        for row in table.rows():
+            corpus.update(Counter(_grams(str(row[col]), self.n)))
+        vocab = [g for g, _ in corpus.most_common(self.top)]
+        return FittedNGrams(vocab, self.n, self.column, self.keep_columns)
+
+
+class FittedHashingVectorizer(FittedTransformer):
+    """Replay feature hashing (stateless statistics, fixed configuration)."""
+
+    tier = "host"
+
+    def __init__(self, num_features: int, n: int, column: Union[int, str],
+                 keep_columns: bool = True) -> None:
+        self.num_features = int(num_features)
+        self.n = int(n)
+        self.column = column
+        self.keep_columns = bool(keep_columns)
+
+    def _vec(self, text: str) -> List[float]:
+        vec = [0.0] * self.num_features
+        for gram in _grams(text, self.n):
+            vec[_stable_hash(gram) % self.num_features] += 1.0
+        return vec
+
+    def transform(self, table: MLTable) -> MLTable:
+        col = _text_col(table, self.column)
+        passthrough = _passthrough_idx(table, col, self.keep_columns)
+        names = [f"h{i}" for i in range(self.num_features)]
+        return _vectorized_table(table, col, passthrough, names, self._vec)
+
+    def transform_rows(self, rows: Any) -> np.ndarray:
+        if isinstance(rows, str):
+            rows = [rows]
+        return np.asarray([self._vec(str(r)) for r in rows], np.float32)
+
+    def host_state(self) -> dict:
+        return {"kind": "hashing", "num_features": self.num_features,
+                "n": self.n, "column": self.column,
+                "keep_columns": self.keep_columns}
+
+    @staticmethod
+    def partial_template(host_state: dict):
+        return {}
+
+    @classmethod
+    def from_state(cls, host_state: dict, partial: dict
+                   ) -> "FittedHashingVectorizer":
+        return cls(host_state["num_features"], host_state["n"],
+                   host_state["column"], host_state["keep_columns"])
+
+
+class HashingVectorizer(Transformer):
+    """Stateless n-gram → bucket counts (streaming-friendly; no corpus
+    pass, so ``fit`` only freezes the configuration)."""
+
+    tier = "host"
+
+    def __init__(self, num_features: int = 1024, n: int = 1,
+                 column: Union[int, str] = 0, keep_columns: bool = True
+                 ) -> None:
+        self.num_features = int(num_features)
+        self.n = int(n)
+        self.column = column
+        self.keep_columns = bool(keep_columns)
+        self._config = {"num_features": num_features, "n": n,
+                        "column": column, "keep_columns": keep_columns}
+
+    def fit(self, table: MLTable, default_skip: Sequence[int] = ()
+            ) -> FittedHashingVectorizer:
+        return FittedHashingVectorizer(self.num_features, self.n, self.column,
+                                       self.keep_columns)
+
+
+class FittedTfIdf(FittedTransformer):
+    """Replay fitted IDF weights: per row, ``tf = count / row_total`` over
+    the feature columns, output ``tf * idf``.  Skipped columns (labels,
+    bias) pass through; :meth:`apply` replays on label-free serving rows
+    inside a jit — only the *label* columns are absent there, other
+    skipped columns are present and pass through as identities."""
+
+    tier = "device"
+
+    def __init__(self, idf: jnp.ndarray, skip_idx: Tuple[int, ...],
+                 num_cols: int, label_idx: Tuple[int, ...] = ()) -> None:
+        self.idf = jnp.asarray(idf)          # full table width; skips carry 0
+        self.skip_idx = tuple(int(i) for i in skip_idx)
+        self.label_idx = tuple(int(i) for i in label_idx)
+        self.num_cols = int(num_cols)
+        # serving-row columns = everything except the labels
+        self._feat = _feature_cols(self.num_cols, self.label_idx)
+
+    def _mask_for(self, cols: np.ndarray, dtype) -> jnp.ndarray:
+        """1.0 at true feature columns of ``cols``, 0.0 at skips."""
+        skip = set(self.skip_idx)
+        return jnp.asarray([0.0 if int(c) in skip else 1.0 for c in cols],
+                           dtype)
+
+    def _apply_cols(self, data: jnp.ndarray, cols: np.ndarray) -> jnp.ndarray:
+        """tf-idf over the true feature columns of ``data`` (whose columns
+        are the table columns ``cols``); skipped columns pass through."""
+        mask = self._mask_for(cols, data.dtype)
+        counts = data * mask
+        tot = jnp.maximum(jnp.sum(counts, axis=-1, keepdims=True), 1.0)
+        tfidf = counts / tot * self.idf[np.asarray(cols)]
+        return jnp.where(mask > 0, tfidf, data)
+
+    def _apply_full(self, data: jnp.ndarray) -> jnp.ndarray:
+        return self._apply_cols(data, np.arange(self.num_cols))
+
+    def transform(self, table: Any) -> Any:
+        if isinstance(table, MLTable):
+            mat = np.asarray([r.to_floats() for r in table.rows()],
+                             np.float64)
+            out = np.asarray(self._apply_full(jnp.asarray(mat)), np.float32)
+            return MLTable.from_numpy(out, num_partitions=table.num_partitions,
+                                      names=table.schema.names)
+        if table.num_cols != self.num_cols:
+            raise ValueError(f"fitted on {self.num_cols} columns, table has "
+                             f"{table.num_cols}")
+        data = self._apply_full(table.data)
+        return MLNumericTable(data, num_shards=table.num_shards,
+                              mesh=table.mesh, names=table.names,
+                              data_axes=table.data_axes or None)
+
+    def apply(self, feats: jnp.ndarray) -> jnp.ndarray:
+        """(n, f) serving rows (label columns absent) → tf-idf rows."""
+        return self._apply_cols(feats, np.asarray(self._feat))
+
+    @property
+    def partial(self):
+        return {"idf": self.idf}
+
+    def host_state(self) -> dict:
+        return {"kind": "tfidf", "skip": list(self.skip_idx),
+                "label": list(self.label_idx), "num_cols": self.num_cols}
+
+    @staticmethod
+    def partial_template(host_state: dict):
+        return {"idf": jnp.zeros((int(host_state["num_cols"]),), jnp.float32)}
+
+    @classmethod
+    def from_state(cls, host_state: dict, partial: dict) -> "FittedTfIdf":
+        return cls(partial["idf"], tuple(host_state["skip"]),
+                   host_state["num_cols"],
+                   tuple(host_state.get("label", host_state["skip"])))
+
+
+class TfIdf(Transformer):
+    """Fit smooth IDF weights ``log((1 + N) / (1 + df)) ≥ 0`` over a count
+    table (Fig. A2 ``tfIdf(...)``) with one global reduce; transform is the
+    pure per-row ``tf * idf`` map."""
+
+    tier = "device"
+
+    def __init__(self, skip: SkipSpec = "auto") -> None:
+        self.skip = skip
+        self._config = {"skip": skip}
+
+    def fit(self, table: Any, default_skip: Sequence[int] = ()
+            ) -> FittedTfIdf:
+        if isinstance(table, MLTable):
+            data = jnp.asarray(
+                np.asarray([r.to_floats() for r in table.rows()], np.float64))
+        else:
+            data = table.data
+        skip_idx = resolve_skip(table, self.skip, default_skip)
+        label_idx = resolve_labels(table, default_skip)
+        n_docs = data.shape[0]
+        df = jnp.sum((data > 0).astype(jnp.float32), axis=0)
+        idf = jnp.log((1.0 + n_docs) / (1.0 + df)).astype(jnp.float32)
+        if skip_idx:
+            zero = np.ones(data.shape[1], np.float32)
+            zero[list(skip_idx)] = 0.0
+            idf = idf * jnp.asarray(zero)
+        return FittedTfIdf(idf, skip_idx, int(data.shape[1]), label_idx)
+
+
+# --------------------------------------------------------------------------- #
+# seed-era function shims (fit + transform on the same table)
+# --------------------------------------------------------------------------- #
+def n_grams(table: MLTable, n: int = 2, top: int = 30000,
+            column: Union[int, str] = 0) -> MLTable:
+    """One-shot corpus fit + transform (shim over :class:`NGrams` with
+    ``keep_columns=False`` — the seed behavior of emitting only the gram
+    columns).  Prefer the fitted class: fit on the train view, replay on
+    validation/serving rows."""
+    f, out = NGrams(n=n, top=top, column=column,
+                    keep_columns=False).fit_transform(table)
+    return out
 
 
 def tf_idf(table: MLTable) -> MLTable:
-    """TF-IDF over a count table (Fig. A2 ``tfIdf(...)``):
-    tf = count / doc_total, smooth idf = log((1 + N) / (1 + df)) ≥ 0."""
-    counts = np.asarray([r.to_floats() for r in table.rows()], dtype=np.float64)
-    n_docs = counts.shape[0]
-    doc_tot = np.maximum(counts.sum(axis=1, keepdims=True), 1.0)
-    tf = counts / doc_tot
-    df = (counts > 0).sum(axis=0)
-    idf = np.log((1.0 + n_docs) / (1.0 + df))
-    mat = (tf * idf).astype(np.float32)
-    out = MLTable.from_numpy(mat, num_partitions=table.num_partitions,
-                             names=table.schema.names)
+    """One-shot TF-IDF over a count table (shim over :class:`TfIdf`)."""
+    f, out = TfIdf(skip=None).fit_transform(table)
     return out
 
 
 def hashing_vectorizer(table: MLTable, num_features: int = 1024, n: int = 1,
-                       column: int = 0) -> MLTable:
-    """Feature hashing: stateless n-gram → bucket counts (streaming-friendly)."""
-    col = table.schema.index_of(column) if isinstance(column, str) else column
-    rows_out = []
-    schema = Schema.of(*([ColumnType.SCALAR] * num_features))
-    for row in table.rows():
-        vec = [0.0] * num_features
-        for gram in _grams(str(row[col]), n):
-            vec[hash(gram) % num_features] += 1.0
-        rows_out.append(MLRow(vec, schema))
-    from repro.core.mltable import _chunk
-
-    return MLTable(_chunk(rows_out, table.num_partitions), schema)
+                       column: Union[int, str] = 0) -> MLTable:
+    """Feature hashing (shim over :class:`HashingVectorizer` with
+    ``keep_columns=False``)."""
+    f, out = HashingVectorizer(num_features=num_features, n=n, column=column,
+                               keep_columns=False).fit_transform(table)
+    return out

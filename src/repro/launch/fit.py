@@ -39,7 +39,7 @@ from repro.core.optimizer import MinibatchSGD, MinibatchSGDParameters
 from repro.core.runner import CheckpointPolicy
 from repro.data import BatchIterator
 
-ALGORITHMS = ("logreg", "linreg", "kmeans")
+ALGORITHMS = ("logreg", "linreg", "kmeans", "pipeline")
 
 
 def make_source(algorithm: str, rows: int, features: int, seed: int):
@@ -69,6 +69,42 @@ def make_source(algorithm: str, rows: int, features: int, seed: int):
             X = centers[idx] + 0.3 * rng.normal(size=(rows, features))
             return {"data": X.astype(np.float32)}
     return source
+
+
+def run_pipeline(args, mesh, ckpt, resume) -> None:
+    """The Fig. A2 flagship scenario as ONE object: raw labeled text →
+    NGrams → TfIdf → Standardizer → logistic regression, trained from
+    streamed windows with the whole artifact (featurizer statistics +
+    model + stream position) in every atomic checkpoint."""
+    from repro.core.mltable import MLTable
+    from repro.data import synth_labeled_text
+    from repro.features import NGrams, Standardizer, TfIdf
+    from repro.pipeline import Pipeline
+    from repro.serve import ModelPredictor, PredictRequest
+
+    rows = synth_labeled_text(n_docs=args.rows_per_epoch, seed=args.seed)
+    raw = MLTable.from_rows(rows, names=["label", "text"], num_partitions=4)
+    pipe = Pipeline([
+        NGrams(n=1, top=args.features, column="text"),
+        TfIdf(),
+        Standardizer(),
+        LogisticRegressionAlgorithm(
+            learning_rate=args.lr, local_batch_size=args.local_batch_size,
+            schedule=args.schedule),
+    ], mesh=mesh, num_shards=None if mesh is not None else args.num_shards)
+    fitted = pipe.fit_stream(raw, num_epochs=args.epochs,
+                             chunks_per_epoch=args.chunks_per_epoch,
+                             checkpoint=ckpt, resume=resume)
+    table = fitted.transform(raw)
+    X = jnp.asarray(table.data)
+    acc = float(jnp.mean(fitted.model.predict(X[:, 1:]) == X[:, 0]))
+    print(f"done: pipeline train acc {acc:.3f} "
+          f"({table.num_rows} rows x {table.num_cols - 1} features)")
+    served = ModelPredictor(fitted, max_batch=8)
+    req = served.submit(PredictRequest(features=rows[0][1]))
+    served.flush()
+    print(f"served raw text -> class {float(req.result[0]):.0f} "
+          f"(label {rows[0][0]:.0f})")
 
 
 def main(argv=None) -> None:
@@ -114,6 +150,10 @@ def main(argv=None) -> None:
         print(f"resuming from step {latest_step(args.ckpt_dir)} "
               f"in {args.ckpt_dir}")
 
+    if args.algorithm == "pipeline":
+        run_pipeline(args, mesh, ckpt, resume)
+        return
+
     source = make_source(args.algorithm, args.rows_per_epoch, args.features,
                          args.seed)
     stream = BatchIterator(source, mesh=mesh)
@@ -126,7 +166,7 @@ def main(argv=None) -> None:
         p = LogisticRegressionParameters(
             learning_rate=args.lr, local_batch_size=args.local_batch_size,
             schedule=args.schedule)
-        model = LogisticRegressionAlgorithm.train_stream(stream, p, **common)
+        model = LogisticRegressionAlgorithm(p).fit_stream(stream, **common)
         X, y = jnp.asarray(holdout[:, 1:]), jnp.asarray(holdout[:, 0])
         acc = float(jnp.mean(model.predict(X) == y))
         print(f"done: holdout loss {float(model.loss(X, y)):.4f} "
@@ -145,7 +185,7 @@ def main(argv=None) -> None:
         print(f"done: holdout mse {mse:.5f}")
     else:
         p = KMeansParameters(k=args.k, seed=args.seed, schedule=args.schedule)
-        model = KMeans.train_stream(stream, p, **common)
+        model = KMeans(p).fit_stream(stream, **common)
         inertia = float(model.inertia(jnp.asarray(holdout)))
         print(f"done: holdout inertia {inertia:.2f}")
     print(f"stream position: step {stream.step}")

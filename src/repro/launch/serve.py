@@ -146,8 +146,7 @@ def run_model(args) -> dict:
         y = (X @ w > 0).astype(np.float32)
         table = MLNumericTable.from_numpy(
             np.concatenate([y[:, None], X], 1), num_shards=args.shards)
-        model = LogisticRegressionAlgorithm.train(
-            table, LogisticRegressionParameters(max_iter=5))
+        model = LogisticRegressionAlgorithm(max_iter=5).fit(table)
     else:
         from repro.core.algorithms.kmeans import KMeans, KMeansParameters
         k = 4
@@ -157,8 +156,8 @@ def run_model(args) -> dict:
              + 0.3 * rng.normal(size=(args.rows, args.features))
              ).astype(np.float32)
         table = MLNumericTable.from_numpy(X, num_shards=args.shards)
-        model = KMeans.train(table, KMeansParameters(
-            k=k, max_iter=5, use_kernel=args.kernel))
+        model = KMeans(KMeansParameters(
+            k=k, max_iter=5, use_kernel=args.kernel)).fit(table)
 
     service = ModelPredictor(model, max_batch=args.batch,
                              num_shards=args.shards)

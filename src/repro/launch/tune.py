@@ -40,7 +40,7 @@ from repro.core.compat import make_mesh
 from repro.core.numeric_table import MLNumericTable
 from repro.tune import MedianStoppingRule, ModelSearch, grid, sample
 
-ALGORITHMS = ("logreg", "kmeans")
+ALGORITHMS = ("logreg", "kmeans", "pipeline")
 
 
 def _literal(text: str) -> Any:
@@ -72,13 +72,36 @@ def parse_space(spec: str) -> Dict[str, Any]:
     return space
 
 
-def make_table(algorithm: str, rows: int, features: int, seed: int
-               ) -> MLNumericTable:
+def make_pipeline(features: int, mesh):
+    """The Fig. A2 text pipeline with nested-stage search keys
+    (``ngrams.top``, ``tfidf.*``, ``logreg.*``)."""
+    from repro.core.algorithms.logistic_regression import \
+        LogisticRegressionAlgorithm
+    from repro.features import NGrams, Standardizer, TfIdf
+    from repro.pipeline import Pipeline
+
+    return Pipeline([
+        NGrams(n=1, top=features, column="text"),
+        TfIdf(),
+        Standardizer(),
+        LogisticRegressionAlgorithm(),
+    ], mesh=mesh, num_shards=None if mesh is not None else 4)
+
+
+def make_table(algorithm: str, rows: int, features: int, seed: int):
     """Deterministic synthetic dataset (pure function of the arguments, so
-    a --resume relaunch sees the identical table)."""
+    a --resume relaunch sees the identical table).  The ``pipeline``
+    algorithm gets a *raw* labeled-text MLTable — featurization happens
+    inside the search, fit on each train fold only."""
     rng = np.random.default_rng(seed * 100_003 + 17)
     mesh = (make_mesh((len(jax.devices()),), ("data",))
             if len(jax.devices()) > 1 else None)
+    if algorithm == "pipeline":
+        from repro.core.mltable import MLTable
+        from repro.data import synth_labeled_text
+
+        return MLTable.from_rows(synth_labeled_text(n_docs=rows, seed=seed),
+                                 names=["label", "text"], num_partitions=4)
     if algorithm == "logreg":
         w = np.linspace(-1, 1, features).astype(np.float32)
         X = rng.normal(size=(rows, features)).astype(np.float32)
@@ -144,7 +167,15 @@ def main(argv=None) -> None:
         ap.error("pass --grid or --samples/--space")
 
     table = make_table(args.algorithm, args.rows, args.features, args.seed)
-    where = (f"{len(jax.devices())}-device mesh" if table.mesh is not None
+    algorithm = args.algorithm
+    if algorithm == "pipeline":
+        mesh = (make_mesh((len(jax.devices()),), ("data",))
+                if len(jax.devices()) > 1 else None)
+        algorithm = make_pipeline(args.features, mesh)
+    where = (f"{len(jax.devices())}-device mesh"
+             if getattr(table, "mesh", None) is not None
+             else "host table (featurized per fold)"
+             if args.algorithm == "pipeline"
              else f"{table.num_shards} emulated partitions")
     print(f"tune: {args.algorithm} | {len(configs)} trials | "
           f"{'%d-fold CV' % args.folds if args.folds else 'holdout'} | "
@@ -160,7 +191,7 @@ def main(argv=None) -> None:
                 os.kill(os.getpid(), signal.SIGKILL)
 
     search = ModelSearch(
-        algorithm=args.algorithm, configs=configs, num_epochs=args.epochs,
+        algorithm=algorithm, configs=configs, num_epochs=args.epochs,
         chunks_per_epoch=args.chunks_per_epoch, folds=args.folds,
         val_fraction=args.holdout, metric=args.metric,
         schedule=args.schedule, execution=args.execution, seed=args.seed,

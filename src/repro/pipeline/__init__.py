@@ -1,0 +1,13 @@
+"""One fitted-model contract from raw table to serving (paper Fig. A2).
+
+``Pipeline`` composes fitted transformers (:class:`repro.features.NGrams`,
+``TfIdf``, ``HashingVectorizer``, ``Standardizer``, ``BiasAdder``) and one
+terminal estimator (any of the six core algorithms) into a single object
+that fits through :class:`repro.core.runner.DistributedRunner` (resident or
+streaming), is searchable by :class:`repro.tune.ModelSearch` over nested
+stage params, checkpoint/resumes as one atomic artifact, and serves raw
+rows through :class:`repro.serve.ModelPredictor`.
+"""
+from repro.pipeline.pipeline import FittedPipeline, Pipeline
+
+__all__ = ["Pipeline", "FittedPipeline"]

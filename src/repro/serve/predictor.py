@@ -34,7 +34,9 @@ __all__ = ["PredictRequest", "ModelPredictor"]
 
 @dataclasses.dataclass
 class PredictRequest:
-    """One prediction request: a block of feature rows.
+    """One prediction request: a block of feature rows — or *raw* rows
+    (a str / sequence of str) when the service carries a featurizer (a
+    fitted pipeline's host-tier vocab lookup).
 
     ``result`` is filled by the service (shape ``(n,)`` or ``(n, …)``
     matching the model's per-row output); ``done`` flips on completion.
@@ -45,9 +47,19 @@ class PredictRequest:
     done: bool = False
     arrival: float = 0.0
     finished_at: Optional[float] = None
+    #: True when ``features`` holds raw (string) rows awaiting host-tier
+    #: featurization at flush time
+    raw: bool = dataclasses.field(default=False, init=False)
 
     def __post_init__(self):
-        self.features = np.asarray(self.features)
+        if isinstance(self.features, str):
+            self.features = np.asarray([self.features], object)
+        else:
+            self.features = np.asarray(self.features)
+        if self.features.dtype.kind in "OUS":
+            self.raw = True
+            self.features = self.features.reshape(-1)
+            return
         if self.features.ndim == 1:
             self.features = self.features[None, :]
         if self.features.ndim != 2:
@@ -69,7 +81,8 @@ class ModelPredictor:
                  num_shards: int = 1, mesh=None,
                  schedule: Union[str, CollectiveSchedule]
                  = CollectiveSchedule.GATHER_BROADCAST,
-                 predict_fn: Optional[Callable] = None):
+                 predict_fn: Optional[Callable] = None,
+                 featurize: Optional[Callable] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be positive")
         if num_shards > 1 and max_batch % num_shards:
@@ -81,6 +94,12 @@ class ModelPredictor:
         self.mesh = mesh
         self.schedule = schedule
         self._predict = predict_fn if predict_fn is not None else model.predict
+        # raw (string) requests run this host-tier map before packing —
+        # defaults to the model's own featurizer (a FittedPipeline's vocab
+        # lookup), so a raw-text request flows vocab lookup → device
+        # feature chain → predict inside the same microbatching path
+        self._featurize = (featurize if featurize is not None
+                           else getattr(model, "featurize_rows", None))
         self._compiled = None
         self._queue: Deque[PredictRequest] = deque()
         # stats
@@ -92,16 +111,32 @@ class ModelPredictor:
     # service surface
     # ------------------------------------------------------------------ #
     def submit(self, req: PredictRequest) -> PredictRequest:
+        if req.raw and self._featurize is None:
+            # fail fast, per request — a bad request must never poison the
+            # queued valid ones at flush time
+            raise ValueError(
+                "raw (string) request but the service has no featurizer — "
+                "serve a FittedPipeline or pass featurize=")
         self._queue.append(req)
         return req
 
     def flush(self, now: float = 0.0) -> List[PredictRequest]:
         """Serve everything queued; returns the completed requests."""
         reqs = list(self._queue)
-        self._queue.clear()
         if not reqs:
             return []
-        rows = np.concatenate([r.features for r in reqs], axis=0)
+        # featurize raw requests BEFORE popping the queue: a featurizer
+        # error leaves every queued request intact for a retry
+        blocks = []
+        for r in reqs:
+            if r.raw:
+                feats = np.asarray(self._featurize(list(r.features)),
+                                   np.float32)
+                r.features = feats          # (n, d): featurized once
+                r.raw = False
+            blocks.append(r.features)
+        self._queue.clear()
+        rows = np.concatenate(blocks, axis=0)
         outs: List[np.ndarray] = []
         for start in range(0, rows.shape[0], self.max_batch):
             chunk = rows[start : start + self.max_batch]

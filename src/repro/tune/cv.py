@@ -25,7 +25,7 @@ from typing import Any, Iterator, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["KFold", "fold_view", "holdout_split"]
+__all__ = ["KFold", "fold_view", "holdout_split", "take_rows"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +101,20 @@ def holdout_split(num_rows: int, val_fraction: float = 0.25, seed: int = 0
             f"splits of {num_rows}")
     perm = np.random.default_rng(seed).permutation(num_rows)
     return np.sort(perm[n_val:]), np.sort(perm[:n_val])
+
+
+def take_rows(table: Any, indices: np.ndarray) -> Any:
+    """Row view of *any* table tier: an :class:`repro.core.mltable.MLTable`
+    is gathered host-side (schema and partition count preserved) — the view
+    pipeline featurizers fit on during a fold-aware search — while numeric
+    tables delegate to :func:`fold_view`."""
+    from repro.core.mltable import MLTable, _chunk
+
+    if isinstance(table, MLTable):
+        rows = table.collect()
+        sel = [rows[int(i)] for i in np.asarray(indices)]
+        return MLTable(_chunk(sel, table.num_partitions), table.schema)
+    return fold_view(table, indices)
 
 
 def fold_view(table: Any, indices: np.ndarray) -> Any:

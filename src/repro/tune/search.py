@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
@@ -41,7 +42,7 @@ import numpy as np
 from repro.core.collectives import CollectiveSchedule
 from repro.core.runner import DistributedRunner
 from repro.data.pipeline import BatchIterator
-from repro.tune.cv import KFold, fold_view, holdout_split
+from repro.tune.cv import KFold, fold_view, holdout_split, take_rows
 from repro.tune.trials import (
     SearchCheckpointer,
     TrialSpec,
@@ -220,7 +221,13 @@ class ModelSearch:
     Parameters
     ----------
     algorithm:
-        ``"logreg"``, ``"kmeans"``, or a callable ``config -> TrialSpec``.
+        ``"logreg"``, ``"kmeans"``, a callable ``config -> TrialSpec``, or
+        a :class:`repro.pipeline.Pipeline` instance — then ``run`` takes
+        the *raw* table, config keys address nested stages
+        (``"tfidf.top"``, ``"logreg.learning_rate"``; bare keys go to the
+        estimator), and featurizers are fit per train fold only (no
+        validation leakage).  Trials sharing a featurizer config and the
+        estimator's stack key device-stack exactly as before.
     configs:
         The candidate list (:func:`grid` / :func:`sample` output).
     num_epochs / chunks_per_epoch:
@@ -273,12 +280,14 @@ class ModelSearch:
         edges = list(range(0, self.num_epochs, step)) + [self.num_epochs]
         return [(a, b) for a, b in zip(edges, edges[1:]) if b > a]
 
-    def _fingerprint(self, table: Any) -> str:
+    def _fingerprint(self, table: Any, pipeline: Any = None) -> str:
         """Identity of this search INCLUDING the dataset shape — a resumed
         search against a different table must refuse, not silently mix
         scores computed on different data."""
         name = (self.algorithm if isinstance(self.algorithm, str)
                 else getattr(self.algorithm, "__name__", "custom"))
+        if pipeline is not None:
+            name = {"pipeline": pipeline.describe()}
         return fingerprint({
             "algorithm": name, "configs": self.configs,
             "num_epochs": self.num_epochs,
@@ -305,6 +314,11 @@ class ModelSearch:
         completed units restore from the newest snapshot and execution
         continues at the first unfinished unit.
         """
+        from repro.pipeline import Pipeline
+
+        if isinstance(self.algorithm, Pipeline):
+            return self._run_pipeline(table, resume)
+
         schedule = CollectiveSchedule.parse(self.schedule)
         builder = (self.algorithm if callable(self.algorithm)
                    else _builtin_builder(self.algorithm, self.metric))
@@ -364,6 +378,143 @@ class ModelSearch:
             self._run_unit(runner, specs, group, train_windows,
                            init_tables, val_tables, rungs, schedule,
                            done_states, done_info)
+            units_done = unit_no + 1
+            if ckpt is not None:
+                ckpt.save(done_states, done_info, units_done)
+            if self.unit_callback is not None:
+                self.unit_callback(units_done, list(group))
+
+        trials = [
+            TrialResult(index=i, config=dict(self.configs[i]),
+                        score=done_info[i]["score"],
+                        rung_scores=list(done_info[i]["rung_scores"]),
+                        state=done_states[i],
+                        stopped=bool(done_info[i]["stopped"]),
+                        model=(specs[i].finalize(done_states[i])
+                               if specs[i].finalize else None))
+            for i in sorted(done_info)
+        ]
+        return SearchResult(trials=trials)
+
+    # ------------------------------------------------------------------ #
+    # pipeline search: featurizers fit per train fold, nested stage params
+    # ------------------------------------------------------------------ #
+    def _run_pipeline(self, table: Any, resume: bool = False) -> SearchResult:
+        """Search a :class:`repro.pipeline.Pipeline` over a *raw* table.
+
+        Each config splits into transformer overrides (``"tfidf.top"``)
+        and estimator params; trials sharing a featurizer config share one
+        featurization, and that featurization is fit on the fold's TRAIN
+        view only — validation rows are transformed with the train-fitted
+        statistics, never refit (the leakage rule the fitted-transformer
+        redesign exists to enforce).  Execution, stacking, early stopping,
+        and checkpoint/resume are the standard :meth:`run` machinery.
+        """
+        pipeline = self.algorithm
+        est = pipeline.estimator
+        if est is None or not hasattr(type(est), "trial_spec"):
+            raise ValueError(
+                "pipeline search needs a terminal estimator with a "
+                "trial_spec (Searchable)")
+        schedule = CollectiveSchedule.parse(self.schedule)
+        base_over = est.overrides()
+        metric_kw = {"metric": self.metric} if self.metric else {}
+
+        split_cfgs = [pipeline.split_config(dict(c)) for c in self.configs]
+        feat_keys = [json.dumps(fc, sort_keys=True, default=str)
+                     for fc, _ in split_cfgs]
+        specs: List[TrialSpec] = []
+        for (fc, ec), fk in zip(split_cfgs, feat_keys):
+            spec = type(est).trial_spec({**base_over, **ec}, **metric_kw)
+            prev = (spec.stack_key if isinstance(spec.stack_key, tuple)
+                    else (spec.stack_key,))
+            specs.append(dataclasses.replace(spec, stack_key=(fk,) + prev))
+
+        n = table.num_rows
+        if self.folds:
+            splits = list(KFold(n, self.folds, self.seed).splits())
+        else:
+            splits = [holdout_split(n, self.val_fraction, self.seed)]
+
+        # layout mirrors run(): keep the pipeline's mesh when every train
+        # window fills at least one (shards x chunks) unit, else emulate
+        mesh = pipeline.mesh
+        shards = (DistributedRunner(mesh=mesh).num_shards
+                  if mesh is not None else (pipeline.num_shards or 1))
+        unit = shards * self.chunks_per_epoch
+        if any(len(tr) < unit for tr, _ in splits):
+            mesh, shards = None, 1
+            unit = self.chunks_per_epoch
+        runner = DistributedRunner(mesh=mesh, num_shards=shards,
+                                   schedule=schedule)
+        train_idx = [tr[: len(tr) - len(tr) % unit] for tr, _ in splits]
+        if any(len(tr) == 0 for tr in train_idx):
+            raise ValueError(
+                f"a train split is smaller than chunks_per_epoch="
+                f"{self.chunks_per_epoch} — nothing left to train on")
+        val_idx = [va for _, va in splits]
+
+        # raw fold views are shared by every featurizer config — collect
+        # the host rows once instead of re-gathering per config per fold
+        raw_views: Dict[int, Any] = {}
+        from repro.core.mltable import MLTable, _chunk
+
+        host_rows = table.collect() if isinstance(table, MLTable) else None
+
+        def raw_view(key: int, idx) -> Any:
+            if key not in raw_views:
+                if host_rows is not None:
+                    raw_views[key] = MLTable(
+                        _chunk([host_rows[int(i)] for i in idx],
+                               table.num_partitions), table.schema)
+                else:
+                    raw_views[key] = take_rows(table, idx)
+            return raw_views[key]
+
+        # one featurization per distinct transformer config, lazy + cached:
+        # (train windows, init tables, val tables) per fold, featurizers
+        # fit on the train view only
+        feat_cache: Dict[str, Tuple[List[np.ndarray], List[Any], List[Any]]] = {}
+
+        def featurized(trial: int):
+            fk = feat_keys[trial]
+            if fk not in feat_cache:
+                fp = pipeline.with_stage_config(split_cfgs[trial][0])
+                fp.mesh, fp.num_shards = mesh, shards
+                windows, inits, vals = [], [], []
+                for f, (tr, va) in enumerate(zip(train_idx, val_idx)):
+                    fitted, ftab = fp._fit_stages(raw_view(2 * f, tr))
+                    windows.append(np.ascontiguousarray(
+                        np.asarray(ftab.data)))
+                    inits.append(ftab)
+                    vals.append(fp._transform_stages(
+                        fitted, raw_view(2 * f + 1, va), mesh=None,
+                        num_shards=1))
+                feat_cache[fk] = (windows, inits, vals)
+            return feat_cache[fk]
+
+        groups = group_trials(specs, self.execution)
+        rungs = self._rungs()
+
+        done_states: Dict[int, Any] = {}
+        done_info: Dict[int, Dict[str, Any]] = {}
+        units_done = 0
+        ckpt = (SearchCheckpointer(self.ckpt_dir,
+                                   self._fingerprint(table, pipeline))
+                if self.ckpt_dir else None)
+        if resume:
+            if ckpt is None:
+                raise ValueError("resume=True requires ckpt_dir")
+            snap = ckpt.resume(lambda i: specs[i].init(featurized(i)[1][0]))
+            if snap is not None:
+                done_states, done_info, units_done = snap
+
+        for unit_no, group in enumerate(groups):
+            if unit_no < units_done:
+                continue  # restored from the snapshot
+            windows, inits, vals = featurized(group[0])
+            self._run_unit(runner, specs, group, windows, inits, vals,
+                           rungs, schedule, done_states, done_info)
             units_done = unit_no + 1
             if ckpt is not None:
                 ckpt.save(done_states, done_info, units_done)

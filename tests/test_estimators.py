@@ -1,0 +1,172 @@
+"""The instance-based Estimator contract: legacy classmethod shims are
+bit-identical and warn; every core algorithm fits as an instance; fitted
+``partial`` state rebuilds the model exactly."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.algorithms.als import ALSParameters, BroadcastALS, \
+    pack_csr_table
+from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+from repro.core.algorithms.linear_models import (
+    LinearRegressionAlgorithm,
+    LinearSVMAlgorithm,
+)
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm,
+    LogisticRegressionParameters,
+)
+from repro.core.algorithms.naive_bayes import GaussianNaiveBayes, \
+    NaiveBayesParameters
+from repro.core.algorithms.pca import PCA, PCAParameters
+from repro.core.numeric_table import MLNumericTable
+
+
+def _logreg_table(rng, n=64, d=6):
+    w = np.linspace(-1, 1, d).astype(np.float32)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (X @ w > 0).astype(np.float32)
+    return MLNumericTable.from_numpy(np.concatenate([y[:, None], X], 1),
+                                     num_shards=4)
+
+
+class TestDeprecationShims:
+    def test_train_warns_and_is_bit_identical(self, rng):
+        t = _logreg_table(rng)
+        p = LogisticRegressionParameters(learning_rate=0.3, max_iter=6)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            old = LogisticRegressionAlgorithm.train(t, p)
+        new = LogisticRegressionAlgorithm(p).fit(t)
+        np.testing.assert_array_equal(np.asarray(old.weights),
+                                      np.asarray(new.weights))
+
+    def test_default_parameters_spelling_warns(self):
+        with pytest.warns(DeprecationWarning, match="defaultParameters"):
+            p = KMeans.defaultParameters()
+        assert p == KMeans.default_parameters() == KMeansParameters()
+
+    def test_kmeans_shim_bit_identical(self, rng):
+        X = np.asarray(rng.normal(size=(32, 4)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        p = KMeansParameters(k=3, max_iter=5, seed=1)
+        with pytest.warns(DeprecationWarning):
+            old = KMeans.train(t, p)
+        new = KMeans(p).fit(t)
+        np.testing.assert_array_equal(np.asarray(old.centroids),
+                                      np.asarray(new.centroids))
+
+    def test_als_shim_passes_transposed_positionally(self, rng):
+        rows = np.repeat(np.arange(8), 4)
+        cols = np.tile(np.arange(4), 8)
+        vals = rng.uniform(1, 5, size=rows.size).astype(np.float32)
+        data = pack_csr_table(rows, cols, vals, 8, 4, num_shards=2)
+        data_t = pack_csr_table(cols, rows, vals, 4, 8, num_shards=2)
+        p = ALSParameters(rank=2, max_iter=2)
+        with pytest.warns(DeprecationWarning):
+            old = BroadcastALS.train(data, p, data_t)
+        new = BroadcastALS(p).fit(data, data_transposed=data_t)
+        np.testing.assert_array_equal(np.asarray(old.U), np.asarray(new.U))
+        np.testing.assert_array_equal(np.asarray(old.V), np.asarray(new.V))
+
+    def test_train_stream_shim_matches_fit_stream(self, rng):
+        from repro.data import BatchIterator
+
+        def source(step):
+            g = np.random.default_rng(7 * step + 1)
+            X = g.normal(size=(32, 4)).astype(np.float32)
+            y = (X.sum(1) > 0).astype(np.float32)
+            return {"data": np.concatenate([y[:, None], X], 1)}
+
+        p = LogisticRegressionParameters(learning_rate=0.2, max_iter=3)
+        old = LogisticRegressionAlgorithm.train_stream(
+            BatchIterator(source), p, num_epochs=3, num_shards=2)
+        new = LogisticRegressionAlgorithm(p).fit_stream(
+            BatchIterator(source), num_epochs=3, num_shards=2)
+        np.testing.assert_array_equal(np.asarray(old.weights),
+                                      np.asarray(new.weights))
+
+
+class TestEstimatorInstances:
+    def test_constructor_overrides(self):
+        est = LogisticRegressionAlgorithm(learning_rate=0.9, l2=0.01)
+        assert est.params.learning_rate == 0.9
+        assert est.params.l2 == 0.01
+        assert est.overrides() == {"learning_rate": 0.9, "l2": 0.01}
+
+    def test_params_dataclass_plus_overrides(self):
+        est = KMeans(KMeansParameters(k=5), seed=3)
+        assert est.params.k == 5 and est.params.seed == 3
+
+    def test_unknown_field_raises(self):
+        with pytest.raises(TypeError):
+            LogisticRegressionAlgorithm(not_a_field=1)
+
+    @pytest.mark.parametrize("make", [
+        lambda t, rng: LogisticRegressionAlgorithm(max_iter=4).fit(t),
+        lambda t, rng: LinearRegressionAlgorithm(max_iter=4).fit(t),
+        lambda t, rng: GaussianNaiveBayes(
+            NaiveBayesParameters(num_classes=2)).fit(t),
+    ])
+    def test_supervised_estimators_fit(self, rng, make):
+        model = make(_logreg_table(rng), rng)
+        X = np.asarray(rng.normal(size=(8, 6)), np.float32)
+        out = np.asarray(model.predict(X))
+        assert out.shape[0] == 8
+
+    def test_svm_fits_pm1_labels(self, rng):
+        d = 4
+        X = np.asarray(rng.normal(size=(32, d)), np.float32)
+        y = np.sign(X.sum(1)).astype(np.float32)
+        t = MLNumericTable.from_numpy(np.concatenate([y[:, None], X], 1),
+                                      num_shards=2)
+        model = LinearSVMAlgorithm(max_iter=4).fit(t)
+        assert np.asarray(model.predict(X)).shape == (32,)
+
+    def test_pca_and_kmeans_fit(self, rng):
+        X = np.asarray(rng.normal(size=(32, 5)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=4)
+        pca = PCA(PCAParameters(n_components=2)).fit(t)
+        assert np.asarray(pca.transform(X)).shape == (32, 2)
+        km = KMeans(k=3, max_iter=4).fit(t)
+        assert np.asarray(km.predict(X)).shape == (32,)
+
+
+class TestPartialRebuild:
+    """`partial` exposes the fitted state; `rebuild` reconstructs the
+    fitted object exactly — the contract pipeline checkpoints ride on."""
+
+    def test_logreg_round_trip(self, rng):
+        t = _logreg_table(rng)
+        est = LogisticRegressionAlgorithm(max_iter=4)
+        model = est.fit(t)
+        clone = est.rebuild(model.partial)
+        X = np.asarray(rng.normal(size=(8, 6)), np.float32)
+        np.testing.assert_array_equal(np.asarray(model.predict(X)),
+                                      np.asarray(clone.predict(X)))
+
+    def test_all_partials_are_array_trees(self, rng):
+        import jax
+
+        t = _logreg_table(rng)
+        models = [
+            LogisticRegressionAlgorithm(max_iter=2).fit(t),
+            GaussianNaiveBayes(NaiveBayesParameters(num_classes=2)).fit(t),
+            PCA(PCAParameters(n_components=2)).fit(t),
+            KMeans(k=2, max_iter=2).fit(t),
+        ]
+        for m in models:
+            leaves = jax.tree.leaves(m.partial)
+            assert leaves, f"{type(m).__name__} partial has no leaves"
+            for leaf in leaves:
+                assert hasattr(leaf, "shape")
+
+    def test_kmeans_rebuild_round_trip(self, rng):
+        X = np.asarray(rng.normal(size=(32, 4)), np.float32)
+        t = MLNumericTable.from_numpy(X, num_shards=2)
+        est = KMeans(k=3, max_iter=4, seed=2)
+        model = est.fit(t)
+        clone = est.rebuild(model.partial)
+        np.testing.assert_array_equal(np.asarray(model.centroids),
+                                      np.asarray(clone.centroids))
+        assert clone.centroids.dtype == model.centroids.dtype

@@ -1,0 +1,400 @@
+"""The unified Pipeline contract: one fitted object from raw table to
+serving — fp-parity with the hand-composed chain, nested-stage model
+search, atomic mid-stream checkpoint/resume, raw-text serving through the
+microbatcher, and the full acceptance scenario on a real 8-device mesh."""
+import numpy as np
+import pytest
+
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm,
+    LogisticRegressionParameters,
+)
+from repro.core.mltable import MLTable
+from repro.core.runner import CheckpointPolicy
+from repro.data import synth_labeled_text
+from repro.features import NGrams, Standardizer, TfIdf
+from repro.pipeline import Pipeline
+from repro.serve import ModelPredictor, PredictRequest
+
+
+def _raw_table(n=64, seed=0):
+    rows = synth_labeled_text(n_docs=n, seed=seed)
+    return rows, MLTable.from_rows(rows, names=["label", "text"],
+                                   num_partitions=4)
+
+
+def _make_pipe(num_shards=4, **logreg):
+    cfg = dict(learning_rate=0.5, max_iter=6, local_batch_size=4)
+    cfg.update(logreg)
+    return Pipeline([
+        NGrams(n=1, top=32, column="text"),
+        TfIdf(),
+        Standardizer(),
+        LogisticRegressionAlgorithm(**cfg),
+    ], num_shards=num_shards)
+
+
+class TestPipelineFit:
+    def test_matches_hand_composed_chain(self):
+        rows, raw = _raw_table()
+        fitted = _make_pipe().fit(raw)
+
+        ng = NGrams(n=1, top=32, column="text").fit(raw)
+        counts = ng.transform(raw).to_numeric(4)
+        tf = TfIdf().fit(counts, default_skip=(0,))
+        t2 = tf.transform(counts)
+        sc = Standardizer().fit(t2, default_skip=(0,))
+        final = sc.transform(t2)
+        hand = LogisticRegressionAlgorithm(
+            learning_rate=0.5, max_iter=6, local_batch_size=4).fit(final)
+
+        np.testing.assert_array_equal(np.asarray(fitted.model.weights),
+                                      np.asarray(hand.weights))
+
+    def test_label_column_survives_featurization(self):
+        rows, raw = _raw_table()
+        table = _make_pipe().fit(raw).transform(raw)
+        np.testing.assert_array_equal(np.asarray(table.data)[:, 0],
+                                      [r[0] for r in rows])
+
+    def test_transformer_only_pipeline(self):
+        _, raw = _raw_table(32)
+        pipe = Pipeline([NGrams(n=1, top=16, column="text"), TfIdf()],
+                        num_shards=4, supervised=True)
+        fitted = pipe.fit(raw)
+        assert fitted.model is None
+        out = fitted.transform(raw)
+        assert out.num_rows == 32
+
+    def test_stage_instances_required(self):
+        with pytest.raises(TypeError, match="instance"):
+            Pipeline([NGrams, LogisticRegressionAlgorithm()])
+
+    def test_nested_config_split(self):
+        pipe = _make_pipe()
+        feat, est = pipe.split_config({"ngrams.top": 16, "tfidf.skip": None,
+                                       "logreg.learning_rate": 0.1,
+                                       "l2": 0.01})
+        assert feat == {"ngrams": {"top": 16}, "tfidf": {"skip": None}}
+        assert est == {"learning_rate": 0.1, "l2": 0.01}
+        with pytest.raises(KeyError, match="unknown stage"):
+            pipe.split_config({"nope.x": 1})
+
+    def test_raw_predict_matches_table_predict(self):
+        rows, raw = _raw_table()
+        fitted = _make_pipe().fit(raw)
+        table = fitted.transform(raw)
+        via_table = np.asarray(fitted.model.predict(table.data[:, 1:]))
+        via_rows = np.asarray(fitted.predict([t for _, t in rows]))
+        np.testing.assert_array_equal(via_table, via_rows)
+
+
+class TestPipelineSearch:
+    def test_nested_stage_params_and_grouping(self):
+        from repro.tune import ModelSearch, grid
+
+        _, raw = _raw_table(96)
+        pipe = _make_pipe(max_iter=2, local_batch_size=1)
+        configs = grid({"logreg.learning_rate": [0.1, 0.5],
+                        "ngrams.top": [8, 16]})
+        res = ModelSearch(algorithm=pipe, configs=configs, num_epochs=3,
+                          chunks_per_epoch=2, folds=3, seed=0).run(raw)
+        assert len(res.trials) == 4
+        assert all(np.isfinite(t.score) for t in res.trials)
+        # trials with ngrams.top=8 trained in an 8-feature space
+        by_cfg = {tuple(sorted(t.config.items())): t for t in res.trials}
+        t8 = by_cfg[(("logreg.learning_rate", 0.1), ("ngrams.top", 8))]
+        t16 = by_cfg[(("logreg.learning_rate", 0.1), ("ngrams.top", 16))]
+        assert np.asarray(t8.state).shape[0] < np.asarray(t16.state).shape[0]
+
+    def test_search_checkpoint_resume_trial_for_trial(self, tmp_ckpt_dir):
+        from repro.tune import ModelSearch, grid
+
+        _, raw = _raw_table(96)
+        pipe = _make_pipe(max_iter=2, local_batch_size=1)
+        configs = grid({"logreg.learning_rate": [0.1, 0.5],
+                        "ngrams.top": [8, 16]})
+
+        def make_search(cb=None):
+            return ModelSearch(algorithm=pipe, configs=configs, num_epochs=3,
+                               chunks_per_epoch=2, folds=3, seed=0,
+                               ckpt_dir=tmp_ckpt_dir, unit_callback=cb)
+
+        full = make_search().run(raw)
+
+        class Kill(Exception):
+            pass
+
+        def cb(units, idxs):
+            if units == 1:
+                raise Kill()
+
+        import shutil
+        shutil.rmtree(tmp_ckpt_dir)
+        with pytest.raises(Kill):
+            make_search(cb).run(raw)
+        resumed = make_search().run(raw, resume=True)
+        assert resumed.scores == full.scores
+        assert resumed.best.config == full.best.config
+
+    def test_fingerprint_refuses_different_pipeline(self, tmp_ckpt_dir):
+        from repro.tune import ModelSearch, grid
+
+        _, raw = _raw_table(96)
+        configs = grid({"logreg.learning_rate": [0.1, 0.5]})
+        ModelSearch(algorithm=_make_pipe(max_iter=2, local_batch_size=1),
+                    configs=configs,
+                    num_epochs=2, seed=0, ckpt_dir=tmp_ckpt_dir).run(raw)
+        other = Pipeline([NGrams(n=2, top=32, column="text"), TfIdf(),
+                          Standardizer(),
+                          LogisticRegressionAlgorithm(max_iter=2)],
+                         num_shards=4)
+        with pytest.raises(ValueError, match="fingerprint"):
+            ModelSearch(algorithm=other, configs=configs, num_epochs=2,
+                        seed=0, ckpt_dir=tmp_ckpt_dir).run(raw, resume=True)
+
+
+class TestPipelineStreamResume:
+    def test_mid_stream_resume_bit_exact(self, tmp_ckpt_dir):
+        _, raw = _raw_table()
+        straight = _make_pipe().fit_stream(raw, num_epochs=6,
+                                           chunks_per_epoch=2)
+        _make_pipe().fit_stream(
+            raw, num_epochs=3, chunks_per_epoch=2,
+            checkpoint=CheckpointPolicy(tmp_ckpt_dir, every_epochs=1))
+        resumed = _make_pipe().fit_stream(
+            raw, num_epochs=6, chunks_per_epoch=2,
+            checkpoint=CheckpointPolicy(tmp_ckpt_dir, every_epochs=1),
+            resume=True)
+        np.testing.assert_array_equal(np.asarray(straight.model.weights),
+                                      np.asarray(resumed.model.weights))
+        # the featurizers were RESTORED from the snapshot, not refit
+        assert resumed["ngrams"].vocab == straight["ngrams"].vocab
+        np.testing.assert_array_equal(np.asarray(straight["tfidf"].idf),
+                                      np.asarray(resumed["tfidf"].idf))
+
+    def test_snapshot_is_one_atomic_artifact(self, tmp_ckpt_dir):
+        """One step file carries featurizer state + model carry + stream
+        position — no side files."""
+        import os
+
+        from repro.checkpoint import load_metadata
+
+        _, raw = _raw_table()
+        _make_pipe().fit_stream(
+            raw, num_epochs=2, chunks_per_epoch=2,
+            checkpoint=CheckpointPolicy(tmp_ckpt_dir, every_epochs=1))
+        files = sorted(os.listdir(tmp_ckpt_dir))
+        assert files == ["step_1.npz", "step_2.npz"]
+        meta = load_metadata(tmp_ckpt_dir)
+        assert meta["wrapped"] is True
+        assert meta["stream_step"] == 2
+        pmeta = meta["extra"]["pipeline"]
+        assert [n for n, _ in pmeta["stages"]] == \
+            ["ngrams", "tfidf", "standardizer"]
+
+    def test_resume_without_pipeline_state_refuses(self, tmp_ckpt_dir):
+        """A plain (non-pipeline) snapshot cannot silently resume a
+        pipeline run."""
+        from repro.data import BatchIterator
+
+        def source(step):
+            g = np.random.default_rng(step)
+            X = g.normal(size=(32, 4)).astype(np.float32)
+            y = (X.sum(1) > 0).astype(np.float32)
+            return {"data": np.concatenate([y[:, None], X], 1)}
+
+        LogisticRegressionAlgorithm(max_iter=2).fit_stream(
+            BatchIterator(source), num_epochs=2, num_shards=2,
+            checkpoint=CheckpointPolicy(tmp_ckpt_dir))
+        _, raw = _raw_table()
+        with pytest.raises(ValueError, match="pipeline"):
+            _make_pipe().fit_stream(
+                raw, num_epochs=4, chunks_per_epoch=2,
+                checkpoint=CheckpointPolicy(tmp_ckpt_dir), resume=True)
+
+
+class TestPipelineServing:
+    def test_raw_text_through_microbatcher(self):
+        rows, raw = _raw_table()
+        fitted = _make_pipe().fit(raw)
+        offline = np.asarray(fitted.predict([t for _, t in rows]))
+
+        service = ModelPredictor(fitted, max_batch=16)
+        reqs = [service.submit(PredictRequest(features=t))
+                for _, t in rows]
+        service.flush()
+        served = np.asarray([float(r.result[0]) for r in reqs])
+        np.testing.assert_array_equal(served, offline)
+        assert service.batches == 4           # 64 rows / 16 per microbatch
+
+    def test_single_string_request(self):
+        rows, raw = _raw_table(32)
+        fitted = _make_pipe().fit(raw)
+        service = ModelPredictor(fitted, max_batch=8)
+        req = service.submit(PredictRequest(features=rows[0][1]))
+        service.flush()
+        assert req.done and req.result.shape == (1,)
+
+    def test_raw_request_without_featurizer_rejected_at_submit(self, rng):
+        """A raw request on a featurizer-less service fails fast at submit
+        — it must never poison queued valid requests at flush time."""
+        from repro.core.numeric_table import MLNumericTable
+
+        X = np.asarray(rng.normal(size=(32, 4)), np.float32)
+        y = (X.sum(1) > 0).astype(np.float32)
+        t = MLNumericTable.from_numpy(np.concatenate([y[:, None], X], 1),
+                                      num_shards=2)
+        model = LogisticRegressionAlgorithm(max_iter=2).fit(t)
+        service = ModelPredictor(model, max_batch=8)
+        ok = service.submit(PredictRequest(features=X[:3, :]))
+        with pytest.raises(ValueError, match="featurize"):
+            service.submit(PredictRequest(features="some raw text"))
+        service.flush()
+        assert ok.done and ok.result.shape == (3,)
+
+    def test_serving_with_bias_adder_stage(self):
+        """A bias column generated mid-chain exists in serving rows: only
+        the label columns are absent, so apply() must pass the bias
+        through rather than dropping it (width-mismatch regression)."""
+        from repro.features import BiasAdder
+
+        rows, raw = _raw_table()
+        pipe = Pipeline([
+            NGrams(n=1, top=32, column="text"),
+            TfIdf(),
+            BiasAdder(),
+            Standardizer(),
+            LogisticRegressionAlgorithm(learning_rate=0.5, max_iter=6,
+                                        local_batch_size=4),
+        ], num_shards=4)
+        fitted = pipe.fit(raw)
+        table = fitted.transform(raw)
+        via_table = np.asarray(fitted.model.predict(table.data[:, 1:]))
+        via_rows = np.asarray(fitted.predict([t for _, t in rows]))
+        np.testing.assert_array_equal(via_table, via_rows)
+        # the bias column really passed through as 1.0
+        bias_col = list(table.names).index("bias")
+        np.testing.assert_array_equal(np.asarray(table.data)[:, bias_col],
+                                      1.0)
+
+    def test_corpus_containing_the_token_label_is_safe(self):
+        """Generated gram columns are namespaced (``ng:…``), so a corpus
+        containing the words "label"/"bias" cannot trip the auto-skip
+        name matching (featurization-corruption regression)."""
+        rows = [(float(i % 2),
+                 ("label bias alpha beta" if i % 2 else "label gamma delta"))
+                for i in range(32)]
+        raw = MLTable.from_rows(rows, names=["label", "text"],
+                                num_partitions=4)
+        fitted = Pipeline([
+            NGrams(n=1, top=16, column="text"), TfIdf(), Standardizer(),
+            LogisticRegressionAlgorithm(max_iter=4),
+        ], num_shards=4).fit(raw)
+        table = fitted.transform(raw)
+        # the real label column survives; the "label" GRAM column was
+        # featurized like any other word
+        np.testing.assert_array_equal(np.asarray(table.data)[:, 0],
+                                      [r[0] for r in rows])
+        assert "ng:label" in table.names
+        via_table = np.asarray(fitted.model.predict(table.data[:, 1:]))
+        via_rows = np.asarray(fitted.predict([t for _, t in rows]))
+        np.testing.assert_array_equal(via_table, via_rows)
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: the full scenario on a REAL 8-device mesh (subprocess)
+# --------------------------------------------------------------------------- #
+_ACCEPTANCE_PROGRAM = """
+import json
+import numpy as np
+import jax
+
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm, LogisticRegressionParameters)
+from repro.core.compat import make_mesh
+from repro.core.mltable import MLTable
+from repro.core.runner import CheckpointPolicy
+from repro.data import synth_labeled_text
+from repro.features import NGrams, Standardizer, TfIdf
+from repro.pipeline import Pipeline
+from repro.serve import ModelPredictor, PredictRequest
+from repro.tune import ModelSearch, grid
+
+assert len(jax.devices()) == 8
+mesh = make_mesh((8,), ("data",))
+rows = synth_labeled_text(n_docs=128, seed=0)
+raw = MLTable.from_rows(rows, names=["label", "text"], num_partitions=4)
+out = {}
+
+def make_pipe():
+    return Pipeline([
+        NGrams(n=1, top=32, column="text"),
+        TfIdf(),
+        Standardizer(),
+        LogisticRegressionAlgorithm(learning_rate=0.5, max_iter=6,
+                                    local_batch_size=4),
+    ], mesh=mesh)
+
+# 1. fits through DistributedRunner on the mesh, fp-identical to the
+#    hand-composed function chain
+fitted = make_pipe().fit(raw)
+table = fitted.transform(raw)
+out["meshed"] = bool(table.mesh is not None and table.num_shards == 8)
+
+ng = NGrams(n=1, top=32, column="text").fit(raw)
+counts = ng.transform(raw).to_numeric(mesh=mesh)
+tf = TfIdf().fit(counts, default_skip=(0,))
+sc_in = tf.transform(counts)
+sc = Standardizer().fit(sc_in, default_skip=(0,))
+hand = LogisticRegressionAlgorithm(
+    learning_rate=0.5, max_iter=6, local_batch_size=4).fit(sc.transform(sc_in))
+out["hand_chain_fp_identical"] = bool(np.array_equal(
+    np.asarray(fitted.model.weights), np.asarray(hand.weights)))
+
+# 2. tuned by ModelSearch over nested stage params
+search_pipe = Pipeline([
+    NGrams(n=1, top=32, column="text"),
+    TfIdf(),
+    Standardizer(),
+    LogisticRegressionAlgorithm(learning_rate=0.5, max_iter=6),
+], mesh=mesh)
+res = ModelSearch(algorithm=search_pipe,
+                  configs=grid({"logreg.learning_rate": [0.1, 0.5],
+                                "ngrams.top": [16, 32]}),
+                  num_epochs=2, chunks_per_epoch=2, folds=3, seed=0).run(raw)
+out["search"] = bool(len(res.trials) == 4
+                     and all(np.isfinite(t.score) for t in res.trials))
+
+# 3. checkpoint/resumes bit-for-bit mid-stream
+import tempfile
+with tempfile.TemporaryDirectory() as d:
+    straight = make_pipe().fit_stream(raw, num_epochs=6, chunks_per_epoch=2)
+    make_pipe().fit_stream(raw, num_epochs=3, chunks_per_epoch=2,
+                           checkpoint=CheckpointPolicy(d, every_epochs=1))
+    resumed = make_pipe().fit_stream(raw, num_epochs=6, chunks_per_epoch=2,
+                                     checkpoint=CheckpointPolicy(d, every_epochs=1),
+                                     resume=True)
+    out["stream_resume_bit_exact"] = bool(np.array_equal(
+        np.asarray(straight.model.weights), np.asarray(resumed.model.weights)))
+
+# 4. serves raw text through ModelPredictor, fp-identical to offline
+service = ModelPredictor(fitted, max_batch=16)
+reqs = [service.submit(PredictRequest(features=t)) for _, t in rows[:32]]
+service.flush()
+served = np.asarray([float(r.result[0]) for r in reqs])
+offline = np.asarray(fitted.predict([t for _, t in rows[:32]]))
+out["served_fp_identical"] = bool(np.array_equal(served, offline))
+
+print("RESULT::" + json.dumps(out))
+"""
+
+
+def test_pipeline_acceptance_on_8_device_mesh(eight_device_run):
+    """One Pipeline object: fits through DistributedRunner on the mesh
+    (fp-identical to the hand-composed chain), is tuned over nested stage
+    params, resumes bit-for-bit mid-stream, and serves raw text through
+    the microbatcher."""
+    flags = eight_device_run(_ACCEPTANCE_PROGRAM)
+    bad = [k for k, ok in flags.items() if not ok]
+    assert not bad, f"acceptance checks failed: {bad}"

@@ -1,0 +1,262 @@
+"""Fitted-transformer contract: label safety (the seed-era standardize
+scaled the label column), train/test leakage (corpus statistics fit on the
+train view only, replayed on validation), and the replay properties the
+pipeline rides on — row-by-row == whole-table, shard-layout invariance,
+resident == streamed-chunk agreement, and value/dtype-exact checkpoint
+round trips."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.mltable import MLTable
+from repro.core.numeric_table import MLNumericTable
+from repro.features import (
+    BiasAdder,
+    HashingVectorizer,
+    NGrams,
+    Standardizer,
+    TfIdf,
+    standardize,
+)
+
+DOCS = ["alpha beta alpha gamma", "beta gamma delta", "alpha delta delta",
+        "gamma gamma beta alpha", "delta alpha beta", "beta beta gamma",
+        "alpha gamma delta beta", "delta gamma alpha alpha"]
+
+
+def _labeled_table(rng, n=32, d=4):
+    X = np.asarray(rng.normal(3.0, 2.0, size=(n, d)), np.float32)
+    y = np.asarray(rng.integers(0, 2, size=n), np.float32)
+    data = np.concatenate([y[:, None], X], 1)
+    names = ["label"] + [f"f{i}" for i in range(d)]
+    return MLNumericTable.from_numpy(data, num_shards=4, names=names), y
+
+
+class TestStandardizerLabelSafety:
+    """Satellite: the Standardizer (and the shimmed function) must skip
+    label/bias columns by default."""
+
+    def test_label_column_passes_through_unchanged(self, rng):
+        t, y = _labeled_table(rng)
+        out = Standardizer().fit(t).transform(t)
+        got = np.asarray(out.data)
+        np.testing.assert_array_equal(got[:, 0], y)          # bit-exact
+        # the feature columns DID standardize
+        np.testing.assert_allclose(got[:, 1:].mean(0), 0.0, atol=1e-4)
+
+    def test_shimmed_function_skips_label_by_default(self, rng):
+        t, y = _labeled_table(rng)
+        out = standardize(t)
+        np.testing.assert_array_equal(np.asarray(out.data)[:, 0], y)
+
+    def test_bias_column_passes_through(self, rng):
+        t, _ = _labeled_table(rng)
+        with_bias = BiasAdder().fit(t).transform(t)
+        assert with_bias.names[1] == "bias"
+        out = Standardizer().fit(with_bias).transform(with_bias)
+        np.testing.assert_array_equal(np.asarray(out.data)[:, 1], 1.0)
+
+    def test_constant_column_passes_through_even_unnamed(self, rng):
+        X = np.asarray(rng.normal(size=(16, 3)), np.float32)
+        X[:, 1] = 7.0
+        t = MLNumericTable.from_numpy(X, num_shards=2)       # no names
+        out = np.asarray(Standardizer().fit(t).transform(t).data)
+        np.testing.assert_array_equal(out[:, 1], 7.0)
+
+    def test_pipeline_supervised_skip_without_names(self, rng):
+        """An unnamed supervised table still protects column 0 via the
+        pipeline's default_skip."""
+        t, y = _labeled_table(rng)
+        unnamed = MLNumericTable.from_numpy(np.asarray(t.data), num_shards=4)
+        out = Standardizer().fit(unnamed, default_skip=(0,)).transform(unnamed)
+        np.testing.assert_array_equal(np.asarray(out.data)[:, 0], y)
+
+
+class TestLeakage:
+    """Satellite: corpus statistics fit on the train view only — a
+    transformer fit on train folds produces identical vocab/IDF when
+    transforming validation rows."""
+
+    def test_ngram_vocab_fits_on_train_only(self):
+        train = MLTable.from_text(DOCS[:5], num_partitions=2)
+        val = MLTable.from_text(["epsilon epsilon zeta", DOCS[0]],
+                                num_partitions=1)
+        fitted = NGrams(n=1, top=16).fit(train)
+        vocab_before = list(fitted.vocab)
+        out = fitted.transform(val)
+        assert list(fitted.vocab) == vocab_before     # no refit on val
+        # the unseen word maps to NOTHING (no leak of val statistics)
+        assert "epsilon" not in fitted.vocab
+        first = np.asarray(out.to_numeric(1).data)[0]
+        assert first.sum() == 0.0
+
+    def test_idf_identical_transforming_validation(self, rng):
+        train = MLTable.from_text(DOCS[:4], num_partitions=2)
+        val = MLTable.from_text(DOCS[4:], num_partitions=1)
+        ng = NGrams(n=1, top=8).fit(train)
+        tf = TfIdf().fit(ng.transform(train).to_numeric(2))
+        idf_before = np.asarray(tf.idf)
+        tf.transform(ng.transform(val).to_numeric(1))
+        np.testing.assert_array_equal(idf_before, np.asarray(tf.idf))
+
+    def test_seed_function_refit_trap_is_closed(self):
+        """The one-shot n_grams refit its vocabulary per call; the fitted
+        class replays one vocabulary, so train and val featurize into the
+        SAME feature space."""
+        train = MLTable.from_text(DOCS[:5], num_partitions=2)
+        val = MLTable.from_text(DOCS[5:], num_partitions=1)
+        fitted = NGrams(n=1, top=8).fit(train)
+        a = fitted.transform(train)
+        b = fitted.transform(val)
+        assert [c.name for c in a.schema.columns] == \
+               [c.name for c in b.schema.columns]
+
+
+class TestReplayProperties:
+    """Satellite (hypothesis): fit on a table then transform row-by-row
+    equals transform of the whole table; shard layout and streamed
+    chunking don't change the result."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(split=st.integers(1, 7))
+    def test_rowwise_equals_whole_table_host(self, split):
+        fitted = NGrams(n=1, top=8).fit(
+            MLTable.from_text(DOCS, num_partitions=2))
+        whole = fitted.transform_rows(DOCS)
+        parts = np.concatenate([fitted.transform_rows(DOCS[:split]),
+                                fitted.transform_rows(DOCS[split:])])
+        np.testing.assert_array_equal(whole, parts)
+
+    @settings(max_examples=8, deadline=None)
+    @given(chunk=st.integers(1, 8), shards=st.sampled_from([1, 2, 4]))
+    def test_device_apply_resident_equals_stream(self, chunk, shards):
+        rng = np.random.default_rng(0)
+        t, _ = _labeled_table(rng)
+        t = MLNumericTable.from_numpy(np.asarray(t.data), num_shards=shards,
+                                      names=t.names)
+        fitted = Standardizer().fit(t)
+        F = np.asarray(t.data)[:, 1:]                     # label-free rows
+        whole = np.asarray(fitted.apply(F))
+        chunks = [np.asarray(fitted.apply(F[i:i + chunk]))
+                  for i in range(0, F.shape[0], chunk)]
+        np.testing.assert_array_equal(whole, np.concatenate(chunks))
+
+    @settings(max_examples=6, deadline=None)
+    @given(shards=st.sampled_from([1, 2, 4]))
+    def test_fit_is_shard_layout_invariant(self, shards):
+        rng = np.random.default_rng(1)
+        t, _ = _labeled_table(rng)
+        data = np.asarray(t.data)
+        base = Standardizer().fit(
+            MLNumericTable.from_numpy(data, num_shards=1, names=t.names))
+        other = Standardizer().fit(
+            MLNumericTable.from_numpy(data, num_shards=shards, names=t.names))
+        np.testing.assert_allclose(np.asarray(base.scale),
+                                   np.asarray(other.scale),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_table_transform_agrees_with_apply(self, rng):
+        """The table-tier transform and the serving-tier apply are the
+        same map: table transform of the feature columns == apply on the
+        label-free rows."""
+        t, _ = _labeled_table(rng)
+        ng = NGrams(n=1, top=8).fit(MLTable.from_text(DOCS, num_partitions=2))
+        counts = ng.transform(MLTable.from_text(DOCS, num_partitions=2))
+        ct = counts.to_numeric(2)
+        tf = TfIdf().fit(ct)
+        table_out = np.asarray(tf.transform(ct).data)
+        row_out = np.asarray(tf.apply(np.asarray(ct.data)))
+        np.testing.assert_allclose(table_out, row_out, rtol=1e-6, atol=1e-7)
+
+    def test_hashing_is_process_stable(self):
+        """The hashing vectorizer uses a stable CRC, so a restored
+        transformer replays identically in a fresh interpreter."""
+        import subprocess
+        import sys
+
+        f = HashingVectorizer(num_features=32, n=1).fit(
+            MLTable.from_text(DOCS, num_partitions=1))
+        here = f.transform_rows(DOCS[:2])
+        prog = (
+            "import numpy as np\n"
+            "from repro.core.mltable import MLTable\n"
+            "from repro.features import HashingVectorizer\n"
+            f"docs = {DOCS[:2]!r}\n"
+            "f = HashingVectorizer(num_features=32, n=1).fit(\n"
+            "    MLTable.from_text(docs, num_partitions=1))\n"
+            "print(repr(f.transform_rows(docs).tolist()))\n"
+        )
+        out = subprocess.run([sys.executable, "-c", prog],
+                             capture_output=True, text=True,
+                             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                  "PYTHONHASHSEED": "12345"},
+                             cwd=__file__.rsplit("/tests/", 1)[0])
+        assert out.returncode == 0, out.stderr[-2000:]
+        other = np.asarray(eval(out.stdout.strip()), np.float32)
+        np.testing.assert_array_equal(here, other)
+
+
+class TestCheckpointRoundTrip:
+    """Satellite (hypothesis): round-trip through checkpoint save/restore
+    is value- and dtype-exact."""
+
+    def test_transformer_partial_round_trip(self, rng, tmp_ckpt_dir):
+        from repro.checkpoint import load_artifact, save_artifact
+
+        t, _ = _labeled_table(rng)
+        fitted = Standardizer().fit(t)
+        save_artifact(tmp_ckpt_dir, fitted.partial)
+        template = type(fitted).partial_template(fitted.host_state())
+        restored, _ = load_artifact(tmp_ckpt_dir, template)
+        for k in fitted.partial:
+            a, b = np.asarray(fitted.partial[k]), np.asarray(restored[k])
+            np.testing.assert_array_equal(a, b)
+            assert a.dtype == b.dtype
+
+    def test_fitted_pipeline_artifact_round_trip(self, rng, tmp_ckpt_dir):
+        from repro.core.algorithms.logistic_regression import \
+            LogisticRegressionAlgorithm
+        from repro.pipeline import Pipeline
+
+        rows = [(float(i % 2), DOCS[i % len(DOCS)]) for i in range(32)]
+        raw = MLTable.from_rows(rows, names=["label", "text"],
+                                num_partitions=4)
+
+        def make():
+            return Pipeline([NGrams(n=1, top=8, column="text"), TfIdf(),
+                             Standardizer(),
+                             LogisticRegressionAlgorithm(max_iter=4)],
+                            num_shards=4)
+
+        fitted = make().fit(raw)
+        fitted.save(tmp_ckpt_dir)
+        loaded = make().load(tmp_ckpt_dir)
+        assert loaded["ngrams"].vocab == fitted["ngrams"].vocab
+        for k in fitted.model.partial:
+            a = np.asarray(fitted.model.partial[k])
+            b = np.asarray(loaded.model.partial[k])
+            np.testing.assert_array_equal(a, b)
+            assert a.dtype == b.dtype
+        texts = [t for _, t in rows[:4]]
+        np.testing.assert_array_equal(np.asarray(fitted.predict(texts)),
+                                      np.asarray(loaded.predict(texts)))
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 50))
+    def test_tfidf_round_trip_values_exact(self, seed, tmp_path):
+        from repro.checkpoint import load_artifact, save_artifact
+
+        rng = np.random.default_rng(seed)
+        counts = np.asarray(rng.integers(0, 5, size=(16, 6)), np.float32)
+        t = MLNumericTable.from_numpy(counts, num_shards=2)
+        fitted = TfIdf(skip=None).fit(t)
+        d = str(tmp_path / f"ck{seed}")
+        save_artifact(d, fitted.partial)
+        restored, _ = load_artifact(
+            d, type(fitted).partial_template(fitted.host_state()))
+        np.testing.assert_array_equal(np.asarray(fitted.idf),
+                                      np.asarray(restored["idf"]))
+        rebuilt = type(fitted).from_state(fitted.host_state(), restored)
+        np.testing.assert_array_equal(
+            np.asarray(fitted.apply(counts)),
+            np.asarray(rebuilt.apply(counts)))
