@@ -11,9 +11,11 @@
   model_search          (beyond paper)  stacked vs sequential trials/sec
   serving_throughput    (beyond paper)  continuous vs static batching
   pipeline_e2e          (beyond paper)  Fig. A2 pipeline fit+serve rows/sec
+  elastic_ssp           (beyond paper)  BSP vs SSP under a straggler +
+                                        elastic host-kill recovery timing
 
-(streaming_throughput, model_search, and serving_throughput can also run
-standalone: ``python -m benchmarks.<name>``.)
+(streaming_throughput, model_search, serving_throughput, and elastic_ssp
+can also run standalone: ``python -m benchmarks.<name>``.)
 """
 from __future__ import annotations
 
@@ -30,9 +32,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (als_scaling, collective_schedules, kernel_bench,
-                            loc_table, logreg_scaling, model_search,
-                            pipeline_e2e, roofline, serving_throughput)
+    from benchmarks import (als_scaling, collective_schedules, elastic_ssp,
+                            kernel_bench, loc_table, logreg_scaling,
+                            model_search, pipeline_e2e, roofline,
+                            serving_throughput)
 
     devices = "1,2,4" if args.fast else "1,2,4,8"
     jobs = [
@@ -45,6 +48,7 @@ def main() -> None:
         ("model_search", model_search.main, []),
         ("serving_throughput", serving_throughput.main, []),
         ("pipeline_e2e", pipeline_e2e.main, []),
+        ("elastic_ssp", elastic_ssp.main, []),
     ]
     failures = 0
     for name, fn, argv in jobs:

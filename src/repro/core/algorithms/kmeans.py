@@ -195,7 +195,10 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel],
                    chunks_per_epoch: Optional[int] = None,
                    checkpoint: Optional[CheckpointPolicy] = None,
                    resume: bool = False,
-                   init_centroids: Optional[jnp.ndarray] = None
+                   init_centroids: Optional[jnp.ndarray] = None,
+                   store=None, staleness: int = 0,
+                   allow_resize: bool = False,
+                   trace: Optional[list] = None
                    ) -> KMeansModel:
         """Streaming Lloyd rounds over minibatch windows: every round
         re-assigns one window chunk to the current centroids, sums the
@@ -209,6 +212,14 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel],
         current window (peeked without consuming it) unless
         ``init_centroids`` is given; on resume the values are overwritten
         by the snapshot, so only the shape matters.
+
+        ``store`` (a :class:`repro.core.exchange.ParamStore`) selects the
+        stale-synchronous multi-host lane: every epoch this host publishes
+        its (cluster sums, counts) statistics and rebuilds centroids from
+        the cross-host sum under the ``staleness`` bound — requires
+        ``chunks_per_epoch`` of 1 (the exchange round IS the Lloyd round).
+        ``allow_resize=True`` lets a resumed run continue on a mesh of a
+        different world size (elastic restart).
         """
         p = self.params
         if init_centroids is None:
@@ -228,14 +239,29 @@ class KMeans(NumericAlgorithm[KMeansParameters, KMeansModel],
         runner = DistributedRunner(mesh=getattr(stream, "mesh", None),
                                    num_shards=num_shards, schedule=p.schedule)
         epochs = num_epochs if num_epochs is not None else p.max_iter
-        if resume:
+        if store is not None:
+            if resume:
+                if checkpoint is None:
+                    raise ValueError("resume=True requires a CheckpointPolicy")
+                centroids = runner.resume_ssp(
+                    checkpoint.ckpt_dir, stream, init_centroids, local_step,
+                    epochs, store=store, staleness=staleness, combine="sum",
+                    update=update, checkpoint=checkpoint, trace=trace)
+            else:
+                centroids = runner.run_epochs_ssp(
+                    stream, init_centroids, local_step, epochs, store=store,
+                    staleness=staleness, combine="sum", update=update,
+                    chunks_per_epoch=chunks_per_epoch or 1,
+                    checkpoint=checkpoint, trace=trace)
+        elif resume:
             if checkpoint is None:
                 raise ValueError("resume=True requires a CheckpointPolicy")
             centroids = runner.resume(checkpoint.ckpt_dir, stream,
                                       init_centroids, local_step, epochs,
                                       combine="sum", update=update,
                                       chunks_per_epoch=chunks_per_epoch,
-                                      checkpoint=checkpoint)
+                                      checkpoint=checkpoint,
+                                      allow_resize=allow_resize)
         else:
             centroids = runner.run_epochs(stream, init_centroids, local_step,
                                           epochs, combine="sum", update=update,

@@ -243,7 +243,10 @@ class LogisticRegressionAlgorithm(
                    num_features: Optional[int] = None,
                    num_shards: int = 1,
                    chunks_per_epoch: Optional[int] = None,
-                   checkpoint=None, resume: bool = False
+                   checkpoint=None, resume: bool = False,
+                   store=None, staleness: int = 0,
+                   allow_resize: bool = False,
+                   trace: Optional[list] = None
                    ) -> LogisticRegressionModel:
         """Streaming training over a :class:`repro.data.pipeline.
         BatchIterator` whose windows follow the library convention (label
@@ -255,6 +258,12 @@ class LogisticRegressionAlgorithm(
         ``source`` (a ``BatchIterator``); only the ``"sgd"`` solver
         streams — full-batch GD needs the whole table resident by
         definition.
+
+        ``store`` (a :class:`repro.core.exchange.ParamStore`) selects the
+        stale-synchronous multi-host lane: this host trains its own window
+        locally each epoch and averages weights with its peers under the
+        ``staleness`` bound.  ``allow_resize=True`` lets a resumed run
+        continue on a mesh of a different world size (elastic restart).
         """
         p = self.params
         if p.solver != "sgd":
@@ -275,7 +284,8 @@ class LogisticRegressionAlgorithm(
         weights = opt.apply_stream(
             stream, num_epochs if num_epochs is not None else p.max_iter,
             num_shards=num_shards, chunks_per_epoch=chunks_per_epoch,
-            checkpoint=checkpoint, resume=resume)
+            checkpoint=checkpoint, resume=resume, store=store,
+            staleness=staleness, allow_resize=allow_resize, trace=trace)
         return LogisticRegressionModel(p, weights)
 
 

@@ -30,16 +30,25 @@ axes).
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from functools import partial
-from typing import Any, Sequence, Union
+from typing import Any, Dict, List, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compat import axis_size as _compat_axis_size
 
-__all__ = ["CollectiveSchedule", "combine_mean", "combine_sum", "combine_concat"]
+__all__ = [
+    "CollectiveSchedule",
+    "SyncPolicy",
+    "combine_mean",
+    "combine_sum",
+    "combine_concat",
+    "ssp_read_round",
+    "ssp_trace",
+]
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -192,3 +201,129 @@ def combine_concat(tree: Any, axis_names: AxisNames,
     """
     schedule = CollectiveSchedule.parse(schedule)
     return jax.tree.map(partial(_leaf_concat, axis_names=axis_names, schedule=schedule), tree)
+
+
+# --------------------------------------------------------------------------- #
+# barrier discipline: BSP / SSP / elastic (beyond paper; Petuum, PAPERS.md)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SyncPolicy:
+    """The *barrier discipline* of multi-host rounds — the second axis of the
+    collective schedule (the first, :class:`CollectiveSchedule`, is the wire
+    pattern of one combine; this is *when* workers are allowed to combine).
+
+      * ``staleness == 0`` — **BSP** (bulk-synchronous): every worker blocks
+        at every round boundary until all peers publish that round; the
+        combine always reads round-``r`` partials from everyone.
+      * ``staleness == s > 0`` — **SSP** (stale-synchronous, Petuum): a
+        worker at round ``r`` may proceed using each peer's freshest
+        published partial, as long as that partial is no older than round
+        ``r - s``; it blocks only when a peer falls more than ``s`` rounds
+        behind.  With ``s = 0`` this degenerates bit-for-bit to BSP
+        (asserted in ``tests/chaos/``).
+      * ``elastic`` — membership may change mid-run: a host that leaves (or
+        dies) triggers a repartition and the survivors resume from the
+        latest atomic checkpoint on the resized mesh (see
+        :mod:`repro.core.elastic`).
+
+    The executable spec of the SSP read rule is :func:`ssp_read_round` /
+    :func:`ssp_trace` below; the real executor
+    (:meth:`repro.core.runner.DistributedRunner.run_epochs_ssp`) follows the
+    same rule through the file-based :class:`repro.core.exchange.ParamStore`.
+    """
+
+    staleness: int = 0
+    elastic: bool = False
+
+    def __post_init__(self) -> None:
+        if self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {self.staleness}")
+
+    @property
+    def mode(self) -> str:
+        return "bsp" if self.staleness == 0 else "ssp"
+
+    @classmethod
+    def parse(cls, v: Union[None, int, "SyncPolicy"]) -> "SyncPolicy":
+        """Accept a policy, a bare staleness integer, or None (BSP)."""
+        if v is None:
+            return cls()
+        if isinstance(v, cls):
+            return v
+        return cls(staleness=int(v))
+
+
+def ssp_read_round(my_round: int, peer_clock: int, staleness: int) -> int:
+    """Which round of a peer's publishes a worker at ``my_round`` combines.
+
+    ``peer_clock`` is the number of rounds the peer has published (its next
+    round index).  The worker reads the peer's freshest partial **capped at
+    its own round** (never reads the future, so ``staleness = 0`` is exactly
+    lockstep BSP), and must block until the peer has published at least
+    round ``my_round - staleness`` — the Petuum bound.  Returns the round
+    index to read; raises if the peer is still too far behind (the caller
+    waits and retries).
+    """
+    if peer_clock <= my_round - staleness:
+        raise ValueError(
+            f"peer at clock {peer_clock} is more than {staleness} rounds "
+            f"behind round {my_round} — SSP requires blocking here")
+    return min(peer_clock - 1, my_round)
+
+
+def ssp_trace(durations: Sequence[Sequence[float]], staleness: int
+              ) -> List[List[Dict[int, int]]]:
+    """Executable spec of the SSP discipline: simulate ``W`` workers running
+    ``R`` rounds where worker ``w``'s round ``r`` takes ``durations[w][r]``
+    seconds of compute, and return ``trace[w][r] = {peer: read_round}`` — the
+    round of each peer's publish that worker ``w`` combined at its round
+    ``r``.
+
+    The discipline (mirrored by the real executor):
+
+      1. worker ``w`` computes round ``r`` and *publishes* its partial;
+      2. it then waits until every peer has published round ``>= r - s``;
+      3. it reads each peer's freshest publish available at that moment,
+         capped at its own round ``r`` (:func:`ssp_read_round`), merges, and
+         proceeds to round ``r + 1``.
+
+    Invariants (property-tested in ``tests/chaos/test_ssp_property.py``):
+    every read is within ``[r - s, r]``, and with ``s = 0`` every read is
+    exactly ``r`` — the BSP trace.
+    """
+    W = len(durations)
+    R = len(durations[0]) if W else 0
+    if any(len(d) != R for d in durations):
+        raise ValueError("every worker needs a duration for every round")
+    # publish[w][r]: wall time worker w publishes round r
+    # merged[w][r]:  wall time worker w finishes round r's merge
+    publish = [[0.0] * R for _ in range(W)]
+    merged = [[0.0] * R for _ in range(W)]
+    trace: List[List[Dict[int, int]]] = [[{} for _ in range(R)] for _ in range(W)]
+    # Rounds resolve in dependency order: worker w's round r depends on its
+    # own round r-1 and on peers' rounds <= r - 1 (waits target r - s - 1,
+    # reads cap at r) — iterating rounds outermost is a valid topological
+    # order because a merge at round r never waits on a peer publish later
+    # than round r, and peer publishes at round r depend only on merges at
+    # r - 1.
+    for r in range(R):
+        for w in range(W):
+            start = merged[w][r - 1] if r else 0.0
+            publish[w][r] = start + durations[w][r]
+        for w in range(W):
+            # wait until every peer has published round >= r - s
+            t = publish[w][r]
+            for p in range(W):
+                if p != w and r - staleness >= 0:
+                    t = max(t, publish[p][r - staleness])
+            merged[w][r] = t
+            for p in range(W):
+                if p == w:
+                    continue
+                # freshest publish of p available at time t, capped at r
+                clock = 0
+                for k in range(min(r, R - 1) + 1):
+                    if publish[p][k] <= t:
+                        clock = k + 1
+                trace[w][r][p] = ssp_read_round(r, clock, staleness)
+    return trace

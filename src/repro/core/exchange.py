@@ -1,0 +1,191 @@
+"""File-based parameter exchange between hosts (the SSP transport).
+
+Stale-synchronous rounds cannot ride the jitted collectives: a gloo/XLA
+collective is a barrier by construction — every participant must enter it —
+which is exactly the BSP discipline SSP exists to relax.  So the SSP lane
+exchanges partials through a shared directory instead: every host publishes
+its per-round partial as one atomic file (the same fsync + atomic-rename
+machinery as :mod:`repro.checkpoint.store`, so a SIGKILL mid-publish can
+never corrupt what peers read), and reads its peers' freshest publishes
+under the staleness bound of :class:`repro.core.collectives.SyncPolicy`.
+
+The layout under ``root`` is one subdirectory per host::
+
+    root/h0/step_0.npz  step_1.npz ...   # host 0's per-round partials
+    root/h1/...
+    root/h1/LEFT                          # host 1 left the mesh gracefully
+
+A host's *clock* is simply its newest published step — crash-safe by the
+same argument as checkpoint recovery: a killed host's clock freezes, a
+straggler's clock lags, and peers observe both through ordinary directory
+scans.  ``LEFT`` markers make graceful departure (the chaos harness's
+``drop`` fault, an elastic scale-down) distinguishable from death: peers
+stop waiting for a departed host immediately instead of timing out.
+
+This is deliberately a *bulletin board*, not a message queue: publishes are
+idempotent, reads are repeatable, and there is no connection state to lose
+— which is what lets the chaos tests SIGKILL hosts at arbitrary points.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.checkpoint.store import (
+    _STEP_RE,
+    latest_step,
+    prune_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["PeerTimeout", "ParamStore"]
+
+#: name of the graceful-departure marker inside a host's directory
+_LEFT_MARKER = "LEFT"
+
+
+class PeerTimeout(TimeoutError):
+    """A peer failed to publish within the deadline — it is presumed dead.
+
+    Carries the peer id and the round being waited for so chaos tests (and
+    an elastic controller) can assert *which* host stalled the mesh.
+    """
+
+    def __init__(self, peer: int, wanted_round: int, timeout: float):
+        self.peer = peer
+        self.wanted_round = wanted_round
+        super().__init__(
+            f"host {peer} has not published round {wanted_round} after "
+            f"{timeout:.1f}s — presumed dead (SSP can absorb a straggler, "
+            f"not a corpse; an elastic controller should resize the mesh)")
+
+
+class ParamStore:
+    """One host's handle on the shared exchange directory.
+
+    Parameters
+    ----------
+    root:
+        Shared directory (one per training run / generation).
+    host_id, num_hosts:
+        This host's id and the mesh's host count.
+    timeout:
+        How long :meth:`wait_clock` polls before declaring a peer dead.
+    poll:
+        Sleep between directory scans while waiting.
+    keep:
+        Publishes retained per host.  Must exceed the staleness bound so a
+        peer reading ``s`` rounds back never races pruning; the executor
+        passes ``staleness + 2``.
+    """
+
+    def __init__(self, root: str, host_id: int, num_hosts: int, *,
+                 timeout: float = 60.0, poll: float = 0.002,
+                 keep: Optional[int] = None):
+        if not 0 <= host_id < num_hosts:
+            raise ValueError(f"host_id {host_id} not in [0, {num_hosts})")
+        self.root = root
+        self.host_id = int(host_id)
+        self.num_hosts = int(num_hosts)
+        self.timeout = float(timeout)
+        self.poll = float(poll)
+        self.keep = keep
+        os.makedirs(self._host_dir(host_id), exist_ok=True)
+
+    def _host_dir(self, host: int) -> str:
+        return os.path.join(self.root, f"h{host}")
+
+    # ------------------------------------------------------------------ #
+    # publishing
+    # ------------------------------------------------------------------ #
+    def publish(self, round_index: int, tree: Any) -> None:
+        """Atomically publish this host's partial for ``round_index``; the
+        publish *is* the clock tick peers observe."""
+        save_checkpoint(self._host_dir(self.host_id), round_index, tree,
+                        metadata={"round": round_index, "host": self.host_id},
+                        keep=self.keep)
+
+    def mark_left(self) -> None:
+        """Graceful departure: peers stop waiting for this host as soon as
+        they next scan (the ``drop`` fault / an elastic scale-down)."""
+        d = self._host_dir(self.host_id)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, _LEFT_MARKER), "w") as f:
+            f.write("left")
+            f.flush()
+            os.fsync(f.fileno())
+
+    # ------------------------------------------------------------------ #
+    # observing peers
+    # ------------------------------------------------------------------ #
+    def clock(self, host: int) -> int:
+        """Number of rounds ``host`` has published (0 = nothing yet)."""
+        step = latest_step(self._host_dir(host))
+        return 0 if step is None else step + 1
+
+    def has_left(self, host: int) -> bool:
+        return os.path.exists(os.path.join(self._host_dir(host), _LEFT_MARKER))
+
+    def peers(self) -> List[int]:
+        """Every other host that has not marked itself departed."""
+        return [h for h in range(self.num_hosts)
+                if h != self.host_id and not self.has_left(h)]
+
+    def wait_clock(self, host: int, min_clock: int) -> int:
+        """Block until ``host``'s clock reaches ``min_clock`` (or it marks
+        itself departed — returns its final clock).  Raises
+        :class:`PeerTimeout` after ``timeout`` seconds."""
+        deadline = time.monotonic() + self.timeout
+        while True:
+            c = self.clock(host)
+            if c >= min_clock or self.has_left(host):
+                return c
+            if time.monotonic() >= deadline:
+                raise PeerTimeout(host, min_clock - 1, self.timeout)
+            time.sleep(self.poll)
+
+    def read(self, host: int, round_index: int, template: Any) -> Any:
+        """Restore ``host``'s published partial for ``round_index`` into the
+        structure of ``template``."""
+        restored, _ = restore_checkpoint(self._host_dir(host), template,
+                                         step=round_index)
+        return restored
+
+    def rounds(self, host: int) -> List[int]:
+        """Every round ``host`` currently has on the board, ascending."""
+        d = self._host_dir(host)
+        if not os.path.isdir(d):
+            return []
+        out = []
+        for fn in os.listdir(d):
+            m = _STEP_RE.match(fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def read_at_most(self, host: int, round_index: int, template: Any
+                     ) -> Optional[tuple]:
+        """Freshest publish of ``host`` not newer than ``round_index``.
+
+        Returns ``(tree, round)`` or ``None`` when nothing that old is on
+        the board (a freshly-restarted generation whose peers resumed
+        ahead, or a departed host whose contributions aged out).  This is
+        the read the SSP executor performs after :func:`repro.core.
+        collectives.ssp_read_round` caps the target — the wanted round is
+        guaranteed in-bound, but after a world restart the exact file may
+        be gone, in which case the nearest older one (still within the
+        bound, since the peer's clock passed the wait) is the right value.
+        """
+        have = [r for r in self.rounds(host) if r <= round_index]
+        if not have:
+            return None
+        r = have[-1]
+        return self.read(host, r, template), r
+
+    def clocks(self) -> Dict[int, int]:
+        return {h: self.clock(h) for h in range(self.num_hosts)}
+
+    def prune(self, keep: int) -> None:
+        prune_checkpoints(self._host_dir(self.host_id), keep)

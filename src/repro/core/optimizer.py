@@ -111,22 +111,45 @@ def _stream_fit(
     chunks_per_epoch: Optional[int] = None,
     checkpoint: Optional[CheckpointPolicy] = None,
     resume: bool = False,
+    store=None,
+    staleness: int = 0,
+    allow_resize: bool = False,
+    trace: Optional[list] = None,
 ) -> jnp.ndarray:
     """Streaming counterpart of :func:`_spmd_rounds`: one window per epoch
     from ``stream`` (a :class:`repro.data.pipeline.BatchIterator`), iterated
     by :meth:`DistributedRunner.run_epochs` with mean-combined weights.
     With ``resume=True`` the run restarts from ``checkpoint.ckpt_dir``;
     ``chunks_per_epoch=None`` then inherits the checkpointed layout, while
-    an explicit value is cross-checked against it (mismatch raises)."""
+    an explicit value is cross-checked against it (mismatch raises).
+
+    ``store`` (a :class:`repro.core.exchange.ParamStore`) switches to the
+    stale-synchronous lane: independent hosts exchanging post-epoch weights
+    under the ``staleness`` bound (:meth:`DistributedRunner.run_epochs_ssp`).
+    ``allow_resize`` lets a resume repartition onto a different world size
+    (the elastic path)."""
     runner = DistributedRunner(mesh=getattr(stream, "mesh", None),
                                num_shards=num_shards, schedule=schedule)
+    if store is not None:
+        if resume:
+            if checkpoint is None:
+                raise ValueError("resume=True requires a CheckpointPolicy")
+            return runner.resume_ssp(checkpoint.ckpt_dir, stream, w_init,
+                                     local_round, num_epochs, store=store,
+                                     staleness=staleness, combine="mean",
+                                     checkpoint=checkpoint, trace=trace)
+        return runner.run_epochs_ssp(stream, w_init, local_round, num_epochs,
+                                     store=store, staleness=staleness,
+                                     combine="mean",
+                                     chunks_per_epoch=chunks_per_epoch or 1,
+                                     checkpoint=checkpoint, trace=trace)
     if resume:
         if checkpoint is None:
             raise ValueError("resume=True requires a CheckpointPolicy")
         return runner.resume(checkpoint.ckpt_dir, stream, w_init, local_round,
                              num_epochs, combine="mean",
                              chunks_per_epoch=chunks_per_epoch,
-                             checkpoint=checkpoint)
+                             checkpoint=checkpoint, allow_resize=allow_resize)
     return runner.run_epochs(stream, w_init, local_round, num_epochs,
                              combine="mean",
                              chunks_per_epoch=chunks_per_epoch or 1,
@@ -260,19 +283,25 @@ class StochasticGradientDescent(Optimizer):
     def apply_stream(self, stream, num_epochs: int, *, num_shards: int = 1,
                      chunks_per_epoch: Optional[int] = None,
                      checkpoint: Optional[CheckpointPolicy] = None,
-                     resume: bool = False, params=None) -> jnp.ndarray:
+                     resume: bool = False, params=None, store=None,
+                     staleness: int = 0, allow_resize: bool = False,
+                     trace: Optional[list] = None) -> jnp.ndarray:
         """Streaming fit: each epoch's window is split into
         ``chunks_per_epoch`` rounds; every round each partition folds over
         its chunk rows exactly as the resident path folds over its
         partition, then weights are mean-combined with the configured
         schedule.  ``checkpoint``/``resume`` make the run preemption-safe
-        (see :class:`repro.core.runner.CheckpointPolicy`)."""
+        (see :class:`repro.core.runner.CheckpointPolicy`).  ``store`` +
+        ``staleness`` select the stale-synchronous multi-host lane;
+        ``allow_resize`` permits an elastic resume on a resized mesh."""
         p = params or self.params
         return _stream_fit(stream, p.w_init, num_epochs, self._local_round(p),
                            CollectiveSchedule.parse(p.schedule),
                            num_shards=num_shards,
                            chunks_per_epoch=chunks_per_epoch,
-                           checkpoint=checkpoint, resume=resume)
+                           checkpoint=checkpoint, resume=resume, store=store,
+                           staleness=staleness, allow_resize=allow_resize,
+                           trace=trace)
 
 
 # --------------------------------------------------------------------------- #
@@ -374,15 +403,21 @@ class MinibatchSGD(Optimizer):
     def apply_stream(self, stream, num_epochs: int, *, num_shards: int = 1,
                      chunks_per_epoch: Optional[int] = None,
                      checkpoint: Optional[CheckpointPolicy] = None,
-                     resume: bool = False, params=None) -> jnp.ndarray:
+                     resume: bool = False, params=None, store=None,
+                     staleness: int = 0, allow_resize: bool = False,
+                     trace: Optional[list] = None) -> jnp.ndarray:
         """Streaming minibatch SGD: each of the window's
         ``chunks_per_epoch`` chunks is one per-partition minibatch — mean
         gradient, local update, mean-combined weights.  Preemption-safe via
-        ``checkpoint``/``resume``."""
+        ``checkpoint``/``resume``; ``store`` + ``staleness`` select the
+        stale-synchronous multi-host lane, ``allow_resize`` the elastic
+        resume."""
         p = params or self.params
         return _stream_fit(stream, p.w_init, num_epochs,
                            self._streaming_round(p),
                            CollectiveSchedule.parse(p.schedule),
                            num_shards=num_shards,
                            chunks_per_epoch=chunks_per_epoch,
-                           checkpoint=checkpoint, resume=resume)
+                           checkpoint=checkpoint, resume=resume, store=store,
+                           staleness=staleness, allow_resize=allow_resize,
+                           trace=trace)

@@ -14,6 +14,7 @@ See ``docs/architecture.md`` for where partitioning sits in the data flow.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -30,6 +31,8 @@ __all__ = [
     "partition_rows",
     "unpartition_rows",
     "place_rows",
+    "ResizePlan",
+    "plan_resize",
 ]
 
 #: Mesh axes that carry the paper's partition dimension, outermost first.
@@ -101,3 +104,67 @@ def place_rows(array: jnp.ndarray, mesh: Mesh, data_axes: Tuple[str, ...]) -> jn
     if isinstance(array, jax.core.Tracer):
         return jax.lax.with_sharding_constraint(array, sharding)
     return jax.device_put(array, sharding)
+
+
+# --------------------------------------------------------------------------- #
+# elastic resize: repartitioning a row layout onto a different shard count
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ResizePlan:
+    """How a row-partitioned layout maps onto a new shard count.
+
+    Rows stay in global order on both sides (partitions are contiguous
+    blocks), so the plan is fully described by the two block sizes; the
+    derived fields quantify the data motion an elastic resize implies —
+    ``moved_rows`` counts rows whose owning shard *index* changes, the wire
+    cost of a live repartition.  Built by :func:`plan_resize`, consumed by
+    :meth:`repro.core.runner.DistributedRunner.resume` (``allow_resize``)
+    when a surviving mesh restarts from a checkpoint written at a different
+    world size.
+    """
+
+    num_rows: int
+    old_shards: int
+    new_shards: int
+
+    @property
+    def old_rows_per_shard(self) -> int:
+        return self.num_rows // self.old_shards
+
+    @property
+    def new_rows_per_shard(self) -> int:
+        return self.num_rows // self.new_shards
+
+    def owner(self, row: int, *, new: bool = True) -> int:
+        """Shard index owning ``row`` under the new (or old) layout."""
+        per = self.new_rows_per_shard if new else self.old_rows_per_shard
+        return row // per
+
+    @property
+    def moved_rows(self) -> int:
+        """Rows whose shard index changes between the layouts — the wire
+        cost of a live repartition.  Zero exactly when the shard counts
+        match (property-tested)."""
+        return sum(1 for r in range(self.num_rows)
+                   if self.owner(r, new=False) != self.owner(r, new=True))
+
+    def describe(self) -> str:
+        return (f"repartition {self.num_rows} rows: {self.old_shards} -> "
+                f"{self.new_shards} shards ({self.old_rows_per_shard} -> "
+                f"{self.new_rows_per_shard} rows/shard, {self.moved_rows} "
+                f"rows change owner)")
+
+
+def plan_resize(num_rows: int, old_shards: int, new_shards: int) -> ResizePlan:
+    """Validate and describe an elastic resize of the row partition layout.
+
+    Raises when the rows cannot split evenly over either side — the same
+    equal-partition invariant as initial placement (pad first).
+    """
+    if old_shards < 1 or new_shards < 1:
+        raise ValueError(
+            f"shard counts must be >= 1, got {old_shards} -> {new_shards}")
+    check_rows_divisible(num_rows, old_shards, what="old partitions")
+    check_rows_divisible(num_rows, new_shards, what="new partitions")
+    return ResizePlan(num_rows=num_rows, old_shards=old_shards,
+                      new_shards=new_shards)

@@ -57,9 +57,11 @@ from repro.core import partition as pt
 from repro.core.compat import shard_map
 from repro.core.collectives import (
     CollectiveSchedule,
+    SyncPolicy,
     combine_concat,
     combine_mean,
     combine_sum,
+    ssp_read_round,
 )
 
 __all__ = ["CheckpointPolicy", "DistributedRunner"]
@@ -442,23 +444,36 @@ class DistributedRunner:
             state = jax.tree.map(jnp.copy, state)
 
         last_saved = None
+        rows = None
         for e in range(start_epoch, num_epochs):
             batch = next(stream)
             window = batch["data"] if isinstance(batch, dict) else batch
             self._check_window(window, chunks)
+            rows = int(window.shape[0])
             rounds = jnp.arange(e * chunks, (e + 1) * chunks, dtype=jnp.int32)
             state = epoch_fn(state, window, rounds)
             if checkpoint is not None and (e + 1) % checkpoint.every_epochs == 0:
-                self._save_snapshot(checkpoint, stream, state, e + 1, chunks, rng)
+                self._save_snapshot(checkpoint, stream, state, e + 1, chunks,
+                                    rng, rows=rows)
                 last_saved = e + 1
         if checkpoint is not None and last_saved != num_epochs:
-            self._save_snapshot(checkpoint, stream, state, num_epochs, chunks, rng)
+            self._save_snapshot(checkpoint, stream, state, num_epochs, chunks,
+                                rng, rows=rows)
         return state
 
     def _save_snapshot(self, policy: CheckpointPolicy, stream: Any, state: Any,
-                       epoch: int, chunks: int, rng: Optional[jnp.ndarray]) -> None:
+                       epoch: int, chunks: int, rng: Optional[jnp.ndarray], *,
+                       rows: Optional[int] = None,
+                       extra_meta: Optional[dict] = None) -> None:
         from repro.checkpoint.store import save_checkpoint
 
+        if jax.process_count() > 1 and jax.process_index() != 0:
+            # one writer per global mesh: every host computes the identical
+            # replicated state, process 0 persists it (shared filesystem);
+            # the SSP exchange lane never reaches here multi-process — its
+            # hosts are independent single-process programs with their own
+            # checkpoint dirs.
+            return
         stream_step = getattr(stream, "step", None)
         if stream_step is None:
             raise TypeError(
@@ -472,10 +487,14 @@ class DistributedRunner:
             "chunks_per_epoch": chunks,
             "schedule": self.schedule.value,
             "num_shards": self.num_shards,
+            "num_hosts": jax.process_count(),
+            "rows_per_epoch": rows,
             "every_epochs": policy.every_epochs,
             "keep": policy.keep,
             "wrapped": policy.extra_state is not None,
         }
+        if extra_meta:
+            meta.update(extra_meta)
         tree = state
         if policy.extra_state is not None:
             # one atomic unit: the training carry plus the caller's extra
@@ -491,7 +510,8 @@ class DistributedRunner:
                combine: str = "mean", update: Optional[UpdateFn] = None,
                chunks_per_epoch: Optional[int] = None,
                checkpoint: Optional[CheckpointPolicy] = None,
-               step: Optional[int] = None) -> Any:
+               step: Optional[int] = None,
+               allow_resize: bool = False) -> Any:
         """Restart a killed :meth:`run_epochs` run from its newest (or
         ``step``-selected) checkpoint and continue to ``num_epochs``.
 
@@ -504,6 +524,14 @@ class DistributedRunner:
         identical compiled computation, so the final state matches an
         uninterrupted run bit-for-bit (asserted in
         ``tests/test_streaming_resume.py``).
+
+        ``allow_resize=True`` is the elastic path: the shard-count
+        cross-check is replaced by a :func:`repro.core.partition.plan_resize`
+        validation (rows must still split evenly over the new layout), so a
+        surviving mesh of a different world size can pick the run up from
+        the same snapshot — live migration as checkpoint-and-restart.  The
+        state pytree itself is layout-free (combines produce replicated
+        trees), so only the stream's row partitioning changes.
         """
         from repro.checkpoint.store import load_metadata, \
             restore_with_metadata
@@ -531,10 +559,22 @@ class DistributedRunner:
         for name, have in (("schedule", self.schedule.value),
                            ("num_shards", self.num_shards)):
             want = meta.get(name)
-            if want is not None and want != have:
-                raise ValueError(
-                    f"cannot resume: checkpoint was written with "
-                    f"{name}={want!r} but this runner has {name}={have!r}")
+            if want is None or want == have:
+                continue
+            if name == "num_shards" and allow_resize:
+                rows = meta.get("rows_per_epoch")
+                if rows:
+                    # validates the new layout and quantifies the motion;
+                    # raises before any state is touched when the rows
+                    # cannot split evenly over the surviving shards
+                    pt.plan_resize(int(rows), int(want), int(have))
+                continue
+            raise ValueError(
+                f"cannot resume: checkpoint was written with "
+                f"{name}={want!r} but this runner has {name}={have!r}"
+                + ("" if name != "num_shards" else
+                   " (pass allow_resize=True to repartition onto the "
+                   "surviving mesh)"))
         chunks = int(meta.get("chunks_per_epoch", 1))
         if chunks_per_epoch is not None and chunks_per_epoch != chunks:
             raise ValueError(
@@ -556,6 +596,233 @@ class DistributedRunner:
                                combine=combine, update=update,
                                chunks_per_epoch=chunks, checkpoint=checkpoint,
                                rng=rng, start_epoch=epoch)
+
+    # ------------------------------------------------------------------ #
+    # stale-synchronous parallel lane: independent hosts, bounded clocks
+    # ------------------------------------------------------------------ #
+    def _ssp_merge(self, entries, combine: str) -> Any:
+        """Combine ``[(host_id, tree), ...]`` across hosts in host-id order.
+
+        Canonical ordering is the determinism contract: every participant
+        stacks the same trees in the same order and reduces along the new
+        axis, so the arithmetic (and therefore the bits) is identical on
+        every host and in the in-process reference simulator the chaos
+        tests compare against.
+        """
+        trees = [t for _, t in sorted(entries, key=lambda kv: kv[0])]
+        if combine == "mean":
+            return jax.tree.map(
+                lambda *xs: jnp.mean(jnp.stack(xs, axis=0), axis=0), *trees)
+        if combine == "sum":
+            return jax.tree.map(
+                lambda *xs: jnp.sum(jnp.stack(xs, axis=0), axis=0), *trees)
+        raise ValueError(f"SSP lane supports combine='mean'|'sum', "
+                         f"got {combine!r}")
+
+    def run_epochs_ssp(self, stream: Iterator, init_state: Any,
+                       local_step: LocalStep, num_epochs: int, *,
+                       store: Any, staleness: int = 0,
+                       combine: str = "mean",
+                       update: Optional[UpdateFn] = None,
+                       chunks_per_epoch: int = 1,
+                       checkpoint: Optional[CheckpointPolicy] = None,
+                       rng: Optional[jnp.ndarray] = None,
+                       start_epoch: int = 0,
+                       trace: Optional[list] = None) -> Any:
+        """Streaming epochs with **stale-synchronous** cross-host exchange.
+
+        The second execution mode the multi-host work adds: hosts are
+        *independent* single-process programs (each with its own local mesh
+        or emulated partitions) that exchange through a shared
+        :class:`repro.core.exchange.ParamStore` instead of lock-step
+        collectives.  Each exchange round (one epoch) host ``h``:
+
+          1. computes its local contribution for round ``e`` and
+             **publishes** it (atomic, crash-safe — the same file machinery
+             as checkpoints);
+          2. **waits** until every live peer has published round
+             ``>= e - staleness`` — the SSP bound: a host may run at most
+             ``staleness`` rounds ahead of the slowest peer;
+          3. **reads** each peer's freshest publication capped at its own
+             round (:func:`repro.core.collectives.ssp_read_round`) and
+             merges in canonical host-id order (:meth:`_ssp_merge`).
+
+        ``staleness=0`` degenerates to lock-step BSP *by construction*:
+        step 2 blocks until every peer published round ``e`` exactly, step
+        3 reads exactly round ``e`` from everyone — every host merges the
+        identical entry set in the identical order, bit-for-bit equal to
+        the sequential reference simulator (asserted in
+        ``tests/chaos/``).  With ``staleness=s>0`` a straggler no longer
+        stalls the cohort: fast hosts keep computing on contributions up
+        to ``s`` rounds stale (the Petuum trade-off the benchmark
+        ``benchmarks/elastic_ssp.py`` quantifies).
+
+        Two algorithm shapes map onto the lane through ``combine``:
+
+        * ``"mean"`` (parameter averaging, e.g. logistic SGD): the local
+          contribution is the host's **post-epoch state** (a local
+          ``chunks_per_epoch``-round epoch via the normal jitted epoch
+          scan); the merge averages states across hosts — local SGD with
+          bounded-staleness averaging.
+        * ``"sum"`` + ``update`` (sufficient statistics, e.g. k-means):
+          the local contribution is the host's **statistics tree** for the
+          round; the merge sums them and ``update`` rebuilds the state.
+          Requires ``chunks_per_epoch == 1`` so rounds and exchange rounds
+          coincide.
+
+        Departed peers (``store.mark_left()``, the ``drop`` chaos action)
+        are excluded as soon as their last in-bound contribution ages out;
+        the cohort shrinks without restarting — in-place elastic resize
+        for the exchange lane.  ``trace``, when given a list, receives one
+        ``{"epoch", "reads", "wait_seconds"}`` record per exchange round —
+        the raw material of the staleness-bound assertions in
+        ``tests/chaos/test_ssp_property.py``.
+
+        Checkpoints are **per host** (each host snapshots its own state to
+        its own directory, with ``staleness`` and the store's world size in
+        the metadata); :meth:`resume_ssp` restarts a killed host against
+        the *same* store — surviving publications are still on disk, so
+        the cohort only blocks for the restart gap, bounded by the store
+        timeout.
+        """
+        import time as _time
+
+        if num_epochs < start_epoch:
+            raise ValueError(f"num_epochs {num_epochs} < start_epoch {start_epoch}")
+        staleness = int(staleness)
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        chunks = int(chunks_per_epoch)
+        if chunks < 1:
+            raise ValueError(f"chunks_per_epoch must be >= 1, got {chunks}")
+        upd: UpdateFn = update or _default_update
+        stats_lane = combine == "sum"
+        if stats_lane:
+            if update is None:
+                raise ValueError(
+                    "SSP combine='sum' is the sufficient-statistics lane — "
+                    "it needs an update(state, merged_stats, r) to rebuild "
+                    "the state from the cross-host sum")
+            if chunks != 1:
+                raise ValueError(
+                    "SSP combine='sum' requires chunks_per_epoch=1 so "
+                    "exchange rounds and algorithm rounds coincide")
+        elif combine != "mean":
+            raise ValueError(f"SSP lane supports combine='mean'|'sum', "
+                             f"got {combine!r}")
+
+        epoch_fn = None
+        if not stats_lane:
+            cache_key = (local_step, upd, combine, chunks)
+            epoch_fn = self._epoch_cache.get(cache_key)
+            if epoch_fn is None:
+                epoch_fn = self._epoch_fn(local_step, upd, combine, chunks)
+                self._cache_put(cache_key, epoch_fn)
+
+        state = init_state
+        if self.donate and not stats_lane:
+            state = jax.tree.map(jnp.copy, state)
+
+        rows = None
+        last_saved = None
+        for e in range(start_epoch, num_epochs):
+            batch = next(stream)
+            window = batch["data"] if isinstance(batch, dict) else batch
+            self._check_window(window, chunks)
+            rows = int(window.shape[0])
+            if stats_lane:
+                r = jnp.asarray(e, jnp.int32)
+                mine = self.partition_apply(
+                    window, local_step, broadcast=(state, r), combine="sum")
+            else:
+                rounds = jnp.arange(e * chunks, (e + 1) * chunks,
+                                    dtype=jnp.int32)
+                mine = epoch_fn(state, window, rounds)
+            mine = jax.tree.map(np.asarray, jax.device_get(mine))
+            store.publish(e, mine)
+
+            entries = [(store.host_id, mine)]
+            reads = {}
+            waited = 0.0
+            for p in store.peers():
+                t0 = _time.monotonic()
+                clock = store.wait_clock(p, e - staleness + 1)
+                waited += _time.monotonic() - t0
+                if clock <= e - staleness:
+                    # departed peer whose last word is out of bound: it has
+                    # aged out of the cohort (in-place shrink)
+                    continue
+                tau = ssp_read_round(e, clock, staleness)
+                got = store.read_at_most(p, tau, mine)
+                if got is None:
+                    continue
+                entries.append((p, got[0]))
+                reads[p] = got[1]
+            merged = self._ssp_merge(entries, combine)
+            state = upd(state, merged, jnp.asarray(e, jnp.int32)) \
+                if stats_lane else merged
+            if trace is not None:
+                trace.append({"epoch": e, "reads": reads,
+                              "wait_seconds": waited})
+            if checkpoint is not None and (e + 1) % checkpoint.every_epochs == 0:
+                self._save_snapshot(
+                    checkpoint, stream, state, e + 1, chunks, rng, rows=rows,
+                    extra_meta={"staleness": staleness,
+                                "ssp_hosts": store.num_hosts,
+                                "ssp_host_id": store.host_id})
+                last_saved = e + 1
+        if checkpoint is not None and last_saved != num_epochs:
+            self._save_snapshot(
+                checkpoint, stream, state, num_epochs, chunks, rng, rows=rows,
+                extra_meta={"staleness": staleness,
+                            "ssp_hosts": store.num_hosts,
+                            "ssp_host_id": store.host_id})
+        return state
+
+    def resume_ssp(self, ckpt_dir: str, stream: Any, init_state: Any,
+                   local_step: LocalStep, num_epochs: int, *,
+                   store: Any, staleness: Optional[int] = None,
+                   combine: str = "mean", update: Optional[UpdateFn] = None,
+                   checkpoint: Optional[CheckpointPolicy] = None,
+                   step: Optional[int] = None,
+                   trace: Optional[list] = None) -> Any:
+        """Restart one killed SSP host from its own checkpoint and rejoin
+        the cohort on the *same* store.
+
+        Peers' publications survive a host's death on disk, so the
+        restarted host replays from its snapshot (identical bits — same
+        mesh, same compiled epoch) and re-publishes the rounds it had
+        already shared; peers consumed the originals, the replays are
+        byte-identical, and the clocks re-converge.  ``staleness`` defaults
+        to the checkpointed value.
+        """
+        from repro.checkpoint.store import restore_with_metadata
+
+        state, ck_step, meta = restore_with_metadata(ckpt_dir, init_state, step)
+        if meta is None:
+            raise ValueError(
+                f"checkpoint step {ck_step} under {ckpt_dir} carries no "
+                f"resume metadata — was it written by run_epochs_ssp?")
+        if staleness is None:
+            staleness = int(meta.get("staleness", 0))
+        chunks = int(meta.get("chunks_per_epoch", 1))
+        if not hasattr(stream, "seek"):
+            raise TypeError("resume requires a seekable stream "
+                            "(BatchIterator or anything with .seek(step))")
+        stream.seek(meta["stream_step"])
+        rng = (jnp.asarray(meta["rng"], jnp.uint32)
+               if meta.get("rng") is not None else None)
+        epoch = int(meta["epoch"])
+        if checkpoint is None and meta.get("every_epochs"):
+            checkpoint = CheckpointPolicy(ckpt_dir, meta["every_epochs"],
+                                          meta.get("keep"))
+        if epoch >= num_epochs:
+            return state
+        return self.run_epochs_ssp(
+            stream, state, local_step, num_epochs, store=store,
+            staleness=staleness, combine=combine, update=update,
+            chunks_per_epoch=chunks, checkpoint=checkpoint, rng=rng,
+            start_epoch=epoch, trace=trace)
 
     # ------------------------------------------------------------------ #
     # device-stacked trials: K models per round (model search; repro.tune)

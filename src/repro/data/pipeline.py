@@ -29,14 +29,39 @@ def shard_batch(batch: Dict[str, np.ndarray], mesh: Optional[Mesh]) -> Dict[str,
     :func:`repro.core.partition.data_spec`, so a streamed window and a
     resident ``MLNumericTable`` have identical layouts and the runner can
     consume either without resharding.
+
+    On a **multi-host mesh** (``jax.process_count() > 1``) a plain
+    ``device_put`` cannot place rows on remote devices, so row-partitioned
+    values are assembled from per-process slices instead: every host calls
+    this with the identical full host batch (sources are pure functions of
+    the step, so they agree), carves out its own contiguous row range, and
+    contributes it via :func:`repro.core.hostmesh.place_global_rows`.  The
+    resulting global array is bit-identical in layout to the single-process
+    placement — the cross-host determinism tests rely on exactly that.
+    Replicated (non-divisible) values fall back to a local put of the full
+    value, which every host performs identically.
     """
     if mesh is None:
         return {k: jax.numpy.asarray(v) for k, v in batch.items()}
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    multihost = jax.process_count() > 1
 
     def place(v: np.ndarray):
-        spec = P(axes, *([None] * (v.ndim - 1))) if v.shape[0] % n_dev == 0 \
+        partitioned = v.shape[0] % n_dev == 0
+        if multihost:
+            from repro.core import hostmesh
+
+            if partitioned:
+                rows = hostmesh.local_row_slice(v.shape[0], mesh, axes)
+                return hostmesh.place_global_rows(
+                    np.asarray(v)[rows], v.shape[0], mesh, axes)
+            # replicated value: every process contributes the full array
+            # (a host cannot device_put onto remote devices directly)
+            sharding = NamedSharding(mesh, P(*([None] * v.ndim)))
+            return jax.make_array_from_process_local_data(
+                sharding, np.asarray(v), v.shape)
+        spec = P(axes, *([None] * (v.ndim - 1))) if partitioned \
             else P(*([None] * v.ndim))
         return jax.device_put(v, NamedSharding(mesh, spec))
 

@@ -19,10 +19,30 @@ for a multi-device mesh):
     PYTHONPATH=src python -m repro.launch.fit --algorithm logreg \\
         --epochs 8 --rows-per-epoch 256 --features 16 --chunks-per-epoch 4 \\
         --schedule allreduce --ckpt-dir /tmp/mli-logreg --resume
+
+Multi-host (subprocess-simulated hosts; the same flags drive real pods):
+
+    # BSP: one global 2x4-device mesh, gloo collectives, lock-step rounds
+    PYTHONPATH=src python -m repro.launch.fit --algorithm logreg \\
+        --epochs 4 --hosts 2 --devices-per-host 4
+
+    # SSP: independent hosts exchanging weights with staleness bound 2;
+    # --elastic also restarts the world (resized) if a host dies
+    PYTHONPATH=src python -m repro.launch.fit --algorithm logreg \\
+        --epochs 4 --hosts 3 --staleness 2 --elastic \\
+        --ckpt-dir /tmp/mli-ssp --ckpt-every 1
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+from repro.core import hostmesh
+
+# the multi-host BSP lane must join the mesh BEFORE anything touches the
+# jax backend; a no-op without the REPRO_* launcher contract in place
+_HOST_INFO = hostmesh.initialize_from_env()
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +127,35 @@ def run_pipeline(args, mesh, ckpt, resume) -> None:
           f"(label {rows[0][0]:.0f})")
 
 
+def _drive_hosts(args, argv) -> None:
+    """Driver mode: re-exec this module once per host under the elastic
+    controller.  Children carry ``REPRO_HOST_ID`` and skip this branch."""
+    import tempfile
+
+    from repro.launch.elastic import ElasticController
+
+    child = [sys.executable, "-m", "repro.launch.fit"] + \
+        list(argv if argv is not None else sys.argv[1:])
+    if args.staleness is not None and not args.exchange_dir:
+        exchange = (os.path.join(args.ckpt_dir, "exchange") if args.ckpt_dir
+                    else tempfile.mkdtemp(prefix="mli-exchange-"))
+        child += ["--exchange-dir", exchange]
+    ctl = ElasticController(
+        child, args.hosts, devices_per_host=args.devices_per_host,
+        max_restarts=2 if args.elastic else 0,
+        min_hosts=1, timeout=600.0,
+        global_mesh=args.staleness is None)
+    report = ctl.run()
+    for gen in report.generations:
+        tag = f"generation {gen.index} ({gen.num_hosts} hosts)"
+        for e in sorted(gen.exits, key=lambda x: x.host_id):
+            for line in e.stdout.strip().splitlines():
+                print(f"[{tag} h{e.host_id}] {line}")
+    if report.resized:
+        print(f"elastic: {len(report.generations)} generations, restart "
+              f"latency {[f'{s:.2f}s' for s in report.restart_seconds]}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--algorithm", required=True, choices=ALGORITHMS)
@@ -128,38 +177,92 @@ def main(argv=None) -> None:
     ap.add_argument("--local-batch-size", type=int, default=8)
     ap.add_argument("--k", type=int, default=4, help="k-means cluster count")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="spawn N subprocess-simulated hosts (multi-host "
+                         "mesh; BSP unless --staleness is given)")
+    ap.add_argument("--devices-per-host", type=int, default=2)
+    ap.add_argument("--staleness", type=int, default=None,
+                    help="stale-synchronous lane with this bound (0 = "
+                         "lock-step BSP over the exchange store)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="restart the world (resized) when a host dies; "
+                         "survivors resume from --ckpt-dir")
+    ap.add_argument("--exchange-dir", default=None,
+                    help="shared SSP exchange directory (defaults under "
+                         "--ckpt-dir or a fresh temp dir)")
     args = ap.parse_args(argv)
+
+    if args.hosts > 1 and "REPRO_HOST_ID" not in os.environ:
+        _drive_hosts(args, argv)
+        return
 
     devices = jax.devices()
     mesh = make_mesh((len(devices),), ("data",)) if len(devices) > 1 else None
     where = (f"{len(devices)}-device mesh" if mesh is not None
              else f"{args.num_shards} emulated partitions")
+    if _HOST_INFO.multihost:
+        where += (f" ({hostmesh.num_hosts()} hosts x "
+                  f"{len(jax.local_devices())} local devices)")
     print(f"fit: {args.algorithm} | {where} | schedule={args.schedule} | "
           f"{args.epochs} epochs x {args.rows_per_epoch} rows x "
           f"{args.chunks_per_epoch} chunks")
 
+    ssp = args.staleness is not None and int(os.environ.get(
+        "REPRO_NUM_HOSTS", "1")) > 1
+    host = int(os.environ.get("REPRO_HOST_ID", "0"))
+    elastic_resume = args.elastic and os.environ.get("REPRO_RESUME") == "1"
+    store = None
+    ckpt_dir = args.ckpt_dir
+    seed = args.seed
+    if ssp:
+        # SSP hosts are independent programs: each streams its own data
+        # (seed offset by rank), checkpoints into its own subdirectory, and
+        # exchanges through the shared ParamStore
+        from repro.core.exchange import ParamStore
+        from repro.testing.chaos import ChaosInjector
+
+        if not args.exchange_dir:
+            ap.error("--staleness with --hosts needs --exchange-dir "
+                     "(the driver injects one automatically)")
+        n = int(os.environ["REPRO_NUM_HOSTS"])
+        store = ParamStore(args.exchange_dir, host, n,
+                           keep=args.staleness + 2)
+        if ckpt_dir:
+            ckpt_dir = os.path.join(ckpt_dir, f"h{host}")
+        seed = args.seed + 7919 * host
+
     ckpt = None
-    if args.ckpt_dir:
-        ckpt = CheckpointPolicy(args.ckpt_dir, every_epochs=args.ckpt_every,
+    if ckpt_dir:
+        ckpt = CheckpointPolicy(ckpt_dir, every_epochs=args.ckpt_every,
                                 keep=args.keep)
-    resume = bool(args.resume and args.ckpt_dir
-                  and latest_step(args.ckpt_dir) is not None)
+    resume = bool((args.resume or elastic_resume) and ckpt_dir
+                  and latest_step(ckpt_dir) is not None)
     if args.resume and not resume:
         print("no checkpoint found; starting fresh")
     if resume:
-        print(f"resuming from step {latest_step(args.ckpt_dir)} "
-              f"in {args.ckpt_dir}")
+        print(f"resuming from step {latest_step(ckpt_dir)} "
+              f"in {ckpt_dir}")
 
     if args.algorithm == "pipeline":
+        if ssp or _HOST_INFO.multihost:
+            ap.error("--hosts supports logreg | linreg | kmeans")
         run_pipeline(args, mesh, ckpt, resume)
         return
 
     source = make_source(args.algorithm, args.rows_per_epoch, args.features,
-                         args.seed)
+                         seed)
     stream = BatchIterator(source, mesh=mesh)
     common = dict(num_epochs=args.epochs, num_shards=args.num_shards,
                   chunks_per_epoch=args.chunks_per_epoch, checkpoint=ckpt,
                   resume=resume)
+    if ssp:
+        injector = ChaosInjector.from_env(host_id=host, store=store)
+        stream = injector.wrap_stream(stream)
+        common.update(store=store, staleness=args.staleness)
+        if args.algorithm == "kmeans":
+            common["chunks_per_epoch"] = 1
+    elif args.elastic:
+        common["allow_resize"] = True
     holdout = source(10**9)["data"]  # never reached by training steps
 
     if args.algorithm == "logreg":

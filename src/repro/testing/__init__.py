@@ -1,0 +1,10 @@
+"""Test/chaos support utilities shipped with the library.
+
+Fault injection lives in the package (not in ``tests/``) because the same
+injector drives three consumers: the ``tests/chaos/`` harness, the
+``benchmarks/elastic_ssp.py`` straggler rows/sec comparison, and ad-hoc
+manual chaos drives of the launch CLIs.  See :mod:`repro.testing.chaos`.
+"""
+from repro.testing.chaos import ChaosInjector, Fault, faults_to_env
+
+__all__ = ["ChaosInjector", "Fault", "faults_to_env"]

@@ -107,7 +107,15 @@ except ImportError:
                              for name, s in zip(pos_bound, st_args)}
                     drawn.update((k, s.example(rng))
                                  for k, s in st_kwargs.items())
-                    fn(*call_args, **call_kwargs, **drawn)
+                    try:
+                        fn(*call_args, **call_kwargs, **drawn)
+                    except BaseException:
+                        # what hypothesis would shrink and report: the drawn
+                        # example (including any seed= strategy), so a CI
+                        # failure is reproducible from the log alone
+                        print(f"Falsifying example: "
+                              f"{fn.__name__}(**{drawn!r})")
+                        raise
 
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__

@@ -1,0 +1,131 @@
+"""Cross-host determinism of the BSP global mesh.
+
+The same training run on 2 hosts x 4 devices (a real ``jax.distributed``
+multi-process mesh, gloo collectives) and on a single process with 8
+emulated devices must agree — the device mesh is 8 wide either way, the
+data is identical, so any drift is a partitioning or collective bug.
+
+What "agree" means per schedule is itself part of the contract:
+
+  * **k-means on binary-lattice data** is bit-for-bit identical across
+    layouts for ALL three collective schedules: the sufficient statistics
+    are sums of {0,1} entries and integer counts — exactly representable,
+    associativity-exact in float32 — so even the tree-ordered reductions
+    (allreduce, reduce_scatter) cannot produce different bits.
+  * **logistic regression** (real-valued gradients) is bit-for-bit on
+    ``gather_broadcast`` (replicate-then-reduce performs the identical
+    arithmetic everywhere) and allclose on the reduction schedules, whose
+    float association legitimately differs between device layouts.
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from conftest import run_devices_subprocess
+
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(not hasattr(signal, "SIGKILL"),
+                       reason="POSIX-only multi-process mesh"),
+]
+
+_PROG = """
+import hashlib, json, os
+
+from repro.core import hostmesh
+
+info = hostmesh.initialize_from_env()
+
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.collectives import CollectiveSchedule
+from repro.core.compat import make_mesh
+from repro.core.algorithms.logistic_regression import (
+    LogisticRegressionAlgorithm, LogisticRegressionParameters)
+from repro.core.algorithms.kmeans import KMeans, KMeansParameters
+from repro.data import BatchIterator
+
+ROWS, D, E, CHUNKS = 128, 8, 3, 2
+assert len(jax.devices()) == 8, jax.devices()
+
+
+def clf_source(step):
+    rng = np.random.default_rng(1000 + step)
+    w = np.linspace(-1, 1, D).astype(np.float32)
+    X = rng.normal(size=(ROWS, D)).astype(np.float32)
+    y = (X @ w > 0).astype(np.float32)
+    return {"data": np.concatenate([y[:, None], X], 1).astype(np.float32)}
+
+
+def km_source(step):
+    # binary lattice: every coordinate is 0 or 1, so cluster sums and
+    # counts are small integers — exact in float32, order-independent
+    rng = np.random.default_rng(3000 + step)
+    return {"data": rng.integers(0, 2, size=(ROWS, D)).astype(np.float32)}
+
+
+def sha(x):
+    return hashlib.sha256(np.asarray(x).tobytes()).hexdigest()[:16]
+
+
+out = {"process_count": jax.process_count()}
+for sched in CollectiveSchedule:
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+
+    p = LogisticRegressionParameters(learning_rate=0.3, local_batch_size=8,
+                                     schedule=sched)
+    m = LogisticRegressionAlgorithm.train_stream(
+        BatchIterator(clf_source, mesh=mesh), p, num_epochs=E,
+        chunks_per_epoch=CHUNKS)
+    w = hostmesh.fetch(m.weights)
+    out["logreg/" + sched.value] = {"sha": sha(w), "w": w.tolist()}
+
+    kp = KMeansParameters(k=4, seed=0, schedule=sched)
+    km = KMeans.train_stream(BatchIterator(km_source, mesh=mesh), kp,
+                             num_epochs=E, chunks_per_epoch=CHUNKS)
+    c = hostmesh.fetch(km.centroids)
+    out["kmeans/" + sched.value] = {"sha": sha(c), "c": c.tolist()}
+print("RESULT::" + json.dumps(out))
+"""
+
+SCHEDULES = ("gather_broadcast", "allreduce", "reduce_scatter")
+
+
+def test_two_hosts_match_single_process(chaos_hosts):
+    """2 hosts x 4 devices == 1 process x 8 devices, per the contract in
+    the module docstring, for logreg and k-means under all 3 schedules."""
+    single = run_devices_subprocess(_PROG, devices=8)
+    from conftest import result_json
+
+    ref = result_json(single)
+    assert ref["process_count"] == 1
+
+    runs = chaos_hosts(_PROG, hosts=2, devices_per_host=4, global_mesh=True)
+    results = [r.result() for r in runs]
+    for res in results:
+        assert res["process_count"] == 2
+
+    h0, h1 = results
+    for sched in SCHEDULES:
+        for algo in ("logreg", "kmeans"):
+            key = f"{algo}/{sched}"
+            # both hosts fetched the same replicated result
+            assert h0[key]["sha"] == h1[key]["sha"], key
+
+        # k-means: bitwise across layouts on every schedule (integer sums)
+        assert h0[f"kmeans/{sched}"]["sha"] == ref[f"kmeans/{sched}"]["sha"], (
+            sched, h0[f"kmeans/{sched}"]["c"], ref[f"kmeans/{sched}"]["c"])
+
+    # logreg: bitwise where the arithmetic is layout-invariant, allclose
+    # where the reduction tree legitimately re-associates floats
+    assert h0["logreg/gather_broadcast"]["sha"] == \
+        ref["logreg/gather_broadcast"]["sha"], (
+            h0["logreg/gather_broadcast"]["w"],
+            ref["logreg/gather_broadcast"]["w"])
+    for sched in ("allreduce", "reduce_scatter"):
+        np.testing.assert_allclose(
+            np.asarray(h0[f"logreg/{sched}"]["w"]),
+            np.asarray(ref[f"logreg/{sched}"]["w"]),
+            rtol=0, atol=1e-5, err_msg=f"logreg/{sched}")

@@ -1,0 +1,322 @@
+"""The SSP executor on real host processes: ``run_epochs_ssp`` hosts
+exchanging through a shared ParamStore, faults injected by the chaos
+harness.
+
+Three proofs, matching the property-level suite one layer down:
+
+  * **s=0 is BSP, bitwise** — two independent host processes produce
+    bit-identical models (mean *and* sum lanes), equal to an in-process
+    sequential reference simulator that replays the publish/merge
+    arithmetic one host at a time.
+  * **the staleness bound holds on real clocks** — under an injected
+    straggler the executor's trace shows reads that are genuinely stale
+    (SSP decoupled the fast host) yet never older than ``s`` rounds.
+  * **a SIGKILLed host rejoins** — ``resume_ssp`` restarts the victim from
+    its own atomic checkpoint against the same store; the cohort only
+    blocks for the restart gap and the final models match the
+    uninterrupted run bit-for-bit.
+"""
+import os
+import signal
+import subprocess
+import sys
+
+import pytest
+
+from conftest import REPO, describe_failure, result_json
+
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(not hasattr(signal, "SIGKILL"),
+                       reason="POSIX-only kill semantics"),
+]
+
+E, DEV, ROWS, F = 4, 2, 32, 3
+
+# One SSP host: mean-lane SGD plus sum-lane sufficient statistics, each
+# host streaming its own shard of the data (source keyed by host id).
+_HOST = """
+import hashlib, json, os
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core.compat import make_mesh
+from repro.core.exchange import ParamStore
+from repro.core.runner import CheckpointPolicy, DistributedRunner
+from repro.data.pipeline import BatchIterator
+from repro.testing import ChaosInjector
+
+HOST = int(os.environ["REPRO_HOST_ID"])
+N = int(os.environ["REPRO_NUM_HOSTS"])
+ROOT = os.environ["STORE_ROOT"]
+ROWS, F, E = %(ROWS)d, %(F)d, int(os.environ.get("EPOCHS", "%(E)d"))
+S = int(os.environ.get("STALENESS", "0"))
+
+
+def source(step):
+    rng = np.random.RandomState(1000 * HOST + step)
+    return {"data": rng.randn(ROWS, F + 1).astype(np.float32)}
+
+
+def local_step(block, state, r):
+    x, y = block[:, :F], block[:, F]
+    g = x.T @ (x @ state - y) / block.shape[0]
+    return state - 0.1 * g
+
+
+def stats_step(block, state, r):
+    x = block[:, :F]
+    m = (x @ state > 0).astype(jnp.float32)
+    return {"n": jnp.sum(m), "s": x.T @ m}
+
+
+def update(state, merged, r):
+    return merged["s"] / jnp.maximum(merged["n"], 1.0)
+
+
+def sha(x):
+    return hashlib.sha256(np.asarray(jax.device_get(x)).tobytes()) \\
+        .hexdigest()[:16]
+
+
+mesh = make_mesh((len(jax.devices()),), ("data",))
+runner = DistributedRunner(mesh=mesh, schedule="gather_broadcast")
+store = ParamStore(ROOT, HOST, N, timeout=300.0, keep=S + 2)
+stream = ChaosInjector.from_env(store=store).wrap_stream(
+    BatchIterator(source, mesh=mesh))
+
+trace = []
+ckpt = None
+if os.environ.get("CKPT_BASE"):
+    ckpt = CheckpointPolicy(os.path.join(os.environ["CKPT_BASE"],
+                                         "h%%d" %% HOST), every_epochs=1)
+if os.environ.get("REPRO_RESUME") == "1":
+    w = runner.resume_ssp(ckpt.ckpt_dir, stream, jnp.zeros((F,), jnp.float32),
+                          local_step, E, store=store, combine="mean",
+                          trace=trace)
+else:
+    w = runner.run_epochs_ssp(stream, jnp.zeros((F,), jnp.float32),
+                              local_step, E, store=store, staleness=S,
+                              combine="mean", chunks_per_epoch=2,
+                              checkpoint=ckpt, trace=trace)
+
+out = {"host": HOST, "mean_sha": sha(w), "mean_w": np.asarray(w).tolist(),
+       "trace": [{"epoch": t["epoch"],
+                  "reads": {str(k): v for k, v in t["reads"].items()}}
+                 for t in trace]}
+
+if os.environ.get("SUM_LANE") == "1":
+    store2 = ParamStore(ROOT + "_sum", HOST, N, timeout=300.0, keep=S + 2)
+    c = runner.run_epochs_ssp(BatchIterator(source, mesh=mesh),
+                              jnp.ones((F,), jnp.float32), stats_step, E,
+                              store=store2, staleness=S, combine="sum",
+                              update=update)
+    out["sum_sha"] = sha(c)
+print("RESULT::" + json.dumps(out))
+"""
+
+# Sequential reference simulator for s=0: one process replays both lanes
+# host-at-a-time through the SAME executor arithmetic — the local epoch via
+# a solo (single-host) run_epochs_ssp call, the cross-host merge via the
+# canonical stack-then-reduce in host-id order.  Bit-identity against the
+# real two-process cohort is the determinism contract of the SSP lane.
+_REFERENCE = """
+import hashlib, json, os
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core.compat import make_mesh
+from repro.core.exchange import ParamStore
+from repro.core.runner import DistributedRunner
+from repro.data.pipeline import BatchIterator
+
+N = int(os.environ["REPRO_NUM_HOSTS"])
+ROOT = os.environ["STORE_ROOT"]
+ROWS, F, E = %(ROWS)d, %(F)d, %(E)d
+
+
+def make_source(host):
+    def source(step):
+        rng = np.random.RandomState(1000 * host + step)
+        return {"data": rng.randn(ROWS, F + 1).astype(np.float32)}
+    return source
+
+
+def local_step(block, state, r):
+    x, y = block[:, :F], block[:, F]
+    g = x.T @ (x @ state - y) / block.shape[0]
+    return state - 0.1 * g
+
+
+def stats_step(block, state, r):
+    x = block[:, :F]
+    m = (x @ state > 0).astype(jnp.float32)
+    return {"n": jnp.sum(m), "s": x.T @ m}
+
+
+def update(state, merged, r):
+    return merged["s"] / jnp.maximum(merged["n"], 1.0)
+
+
+def sha(x):
+    return hashlib.sha256(np.asarray(jax.device_get(x)).tobytes()) \\
+        .hexdigest()[:16]
+
+
+mesh = make_mesh((len(jax.devices()),), ("data",))
+runner = DistributedRunner(mesh=mesh, schedule="gather_broadcast")
+streams = [BatchIterator(make_source(h), mesh=mesh) for h in range(N)]
+
+# mean lane: epoch e computes every host's local epoch from the shared
+# post-merge state, then all hosts adopt the mean (s=0 lock-step).  Each
+# local epoch runs through run_epochs_ssp itself against a throwaway
+# single-host store, so the jitted path is exactly the executor's.
+w = jnp.zeros((F,), jnp.float32)
+for e in range(E):
+    mines = []
+    for h in range(N):
+        solo = ParamStore(os.path.join(ROOT, "solo_m%%d_%%d" %% (h, e)), 0, 1)
+        mines.append(runner.run_epochs_ssp(
+            streams[h], w, local_step, e + 1, store=solo, staleness=0,
+            combine="mean", chunks_per_epoch=2, start_epoch=e))
+    w = jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs, axis=0), axis=0),
+                     *[jax.tree.map(np.asarray, jax.device_get(m))
+                       for m in mines])
+
+# sum lane: per-round sufficient statistics summed across hosts, state
+# rebuilt by update — the partition_apply call is the executor's own.
+streams2 = [BatchIterator(make_source(h), mesh=mesh) for h in range(N)]
+c = jnp.ones((F,), jnp.float32)
+for e in range(E):
+    stats = []
+    for h in range(N):
+        batch = next(streams2[h])
+        mine = runner.partition_apply(batch["data"], stats_step,
+                                      broadcast=(c, jnp.asarray(e, jnp.int32)),
+                                      combine="sum")
+        stats.append(jax.tree.map(np.asarray, jax.device_get(mine)))
+    merged = jax.tree.map(lambda *xs: jnp.sum(jnp.stack(xs, axis=0), axis=0),
+                          *stats)
+    c = update(c, merged, jnp.asarray(e, jnp.int32))
+
+print("RESULT::" + json.dumps({"mean_sha": sha(w), "sum_sha": sha(c),
+                               "mean_w": np.asarray(w).tolist()}))
+"""
+
+
+def test_s0_bit_identical_across_hosts_and_vs_reference(chaos_hosts,
+                                                        tmp_path):
+    """Two real host processes at s=0: both lanes bit-identical on every
+    host AND bit-identical to the sequential reference simulator."""
+    runs = chaos_hosts(
+        _HOST % {"ROWS": ROWS, "F": F, "E": E}, hosts=2,
+        devices_per_host=DEV, global_mesh=False,
+        env={"STORE_ROOT": str(tmp_path / "x"), "SUM_LANE": "1"})
+    h0, h1 = (r.result() for r in runs)
+    assert h0["mean_sha"] == h1["mean_sha"]
+    assert h0["sum_sha"] == h1["sum_sha"]
+
+    from conftest import run_devices_subprocess
+
+    ref = result_json(run_devices_subprocess(
+        _REFERENCE % {"ROWS": ROWS, "F": F, "E": E}, devices=DEV,
+        env={"REPRO_NUM_HOSTS": "2",
+             "STORE_ROOT": str(tmp_path / "ref")}))
+    assert h0["mean_sha"] == ref["mean_sha"], (h0["mean_w"], ref["mean_w"])
+    assert h0["sum_sha"] == ref["sum_sha"]
+    # s=0 trace is pure lock-step: round e reads every peer's round e
+    for r in (h0, h1):
+        peer = str(1 - r["host"])
+        assert [t["reads"] for t in r["trace"]] == \
+            [{peer: e} for e in range(E)]
+
+
+def test_staleness_bound_holds_under_injected_straggler(chaos_hosts,
+                                                        tmp_path):
+    """A 1s delay on host 1: host 0 runs ahead on stale reads — genuinely
+    stale (SSP decoupled it) but never more than s rounds old."""
+    from repro.testing import Fault
+
+    s = 2
+    runs = chaos_hosts(
+        _HOST % {"ROWS": ROWS, "F": F, "E": 6}, hosts=2,
+        devices_per_host=DEV, global_mesh=False,
+        faults=[Fault(host=1, round=2, action="delay", seconds=1.0)],
+        env={"STORE_ROOT": str(tmp_path / "x"), "EPOCHS": "6",
+             "STALENESS": str(s)})
+    stale_reads = 0
+    for r in runs:
+        res = r.result()
+        for t in res["trace"]:
+            for read_round in t["reads"].values():
+                assert t["epoch"] - s <= read_round <= t["epoch"], (
+                    f"host {res['host']} epoch {t['epoch']} read round "
+                    f"{read_round}: outside the staleness bound {s}")
+                stale_reads += read_round < t["epoch"]
+    assert stale_reads > 0, \
+        "delay fault produced no stale reads — SSP never decoupled"
+
+
+def test_sigkilled_host_resumes_and_cohort_converges(tmp_path):
+    """Kill host 1 mid-run; restart it with resume_ssp against the same
+    store.  Both finals must equal the uninterrupted cohort bit-for-bit
+    (s=0 lock-step is deterministic, so recovery is provable by equality).
+    """
+    from repro.testing import Fault, faults_to_env
+
+    prog = _HOST % {"ROWS": ROWS, "F": F, "E": E}
+
+    def host_env(h, extra):
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src"),
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={DEV}",
+                   REPRO_NUM_HOSTS="2", REPRO_HOST_ID=str(h))
+        env.pop("REPRO_COORDINATOR", None)
+        env.update(extra)
+        return env
+
+    def spawn(h, extra):
+        return subprocess.Popen([sys.executable, "-c", prog],
+                                env=host_env(h, extra), cwd=REPO,
+                                stdout=subprocess.PIPE,
+                                stderr=subprocess.PIPE, text=True)
+
+    # uninterrupted cohort (fresh store) — the ground truth
+    base = {"STORE_ROOT": str(tmp_path / "ref")}
+    procs = [spawn(h, base) for h in range(2)]
+    truth = {}
+    for h, p in enumerate(procs):
+        out, err = p.communicate(timeout=540)
+        assert p.returncode == 0, err[-2000:]
+        truth[h] = result_json(
+            type("O", (), {"stdout": out, "returncode": 0}))
+    assert truth[0]["mean_sha"] == truth[1]["mean_sha"]
+
+    # chaos cohort: host 1 checkpoints every epoch and is SIGKILLed when
+    # its stream is asked for epoch 2's window (epochs 0..1 are on disk)
+    chaos = {"STORE_ROOT": str(tmp_path / "x"),
+             "CKPT_BASE": str(tmp_path / "ck")}
+    p0 = spawn(0, dict(chaos))
+    p1 = spawn(1, dict(chaos,
+                       **faults_to_env([Fault(host=1, round=2,
+                                              action="kill")])))
+    try:
+        assert p1.wait(timeout=300) == -signal.SIGKILL
+        # the respawn: resume from the atomic checkpoint, same store —
+        # host 0 is still alive, blocked on host 1's round 2
+        p1b = spawn(1, dict(chaos, REPRO_RESUME="1"))
+        out1, err1 = p1b.communicate(timeout=540)
+        assert p1b.returncode == 0, err1[-2000:]
+        out0, err0 = p0.communicate(timeout=540)
+        assert p0.returncode == 0, err0[-2000:]
+    finally:
+        for p in (p0, p1):
+            if p.poll() is None:
+                p.kill()
+
+    r0 = result_json(type("O", (), {"stdout": out0, "returncode": 0}))
+    r1 = result_json(type("O", (), {"stdout": out1, "returncode": 0}))
+    assert r0["mean_sha"] == r1["mean_sha"] == truth[0]["mean_sha"], (
+        r0["mean_w"], r1["mean_w"], truth[0]["mean_w"])
+    # the resumed host replayed only the post-checkpoint rounds
+    assert r1["trace"][0]["epoch"] == 2

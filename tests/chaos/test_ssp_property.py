@@ -1,0 +1,143 @@
+"""Property tests for the stale-synchronous discipline and elastic plans.
+
+The SSP invariant (Petuum's bounded-staleness guarantee) on the executable
+spec :func:`repro.core.collectives.ssp_trace`: for random (workers, rounds,
+staleness) configurations with random per-round durations,
+
+  * no worker ever merges a peer value older than ``staleness`` rounds
+    behind its own round, and never one from its future;
+  * ``staleness=0`` degenerates to exactly the BSP trace — every worker
+    reads every peer's *current* round, every round.
+
+Plus the pure read rule itself (:func:`ssp_read_round`) and the elastic
+:func:`repro.core.partition.plan_resize` invariants.  These are in-process
+properties (no subprocesses); the executor-level twin — real host
+processes exchanging through a ParamStore — is ``test_ssp_executor.py``.
+"""
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.collectives import (
+    SyncPolicy,
+    ssp_read_round,
+    ssp_trace,
+)
+from repro.core.partition import plan_resize
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    workers=st.integers(min_value=1, max_value=6),
+    rounds=st.integers(min_value=1, max_value=12),
+    staleness=st.integers(min_value=0, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_ssp_trace_respects_staleness_bound(workers, rounds, staleness, seed):
+    """No read older than s rounds behind the reader, none from its future."""
+    import random
+
+    rng = random.Random(seed)
+    durations = [[rng.randint(1, 50) for _ in range(rounds)]
+                 for _ in range(workers)]
+    trace = ssp_trace(durations, staleness)
+    assert len(trace) == workers and all(len(t) == rounds for t in trace)
+    for w, worker_trace in enumerate(trace):
+        for r, reads in enumerate(worker_trace):
+            assert set(reads) == {p for p in range(workers) if p != w}
+            for peer, read_round in reads.items():
+                assert read_round <= r, (
+                    f"worker {w} round {r} read peer {peer}'s round "
+                    f"{read_round} — from its own future")
+                assert read_round >= r - staleness, (
+                    f"worker {w} round {r} read peer {peer}'s round "
+                    f"{read_round} — older than the staleness bound "
+                    f"{staleness}")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    workers=st.integers(min_value=2, max_value=6),
+    rounds=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_staleness_zero_is_exactly_bsp(workers, rounds, seed):
+    """s=0: every worker reads every peer's round r at round r — the BSP
+    lock-step trace, regardless of how skewed the durations are."""
+    import random
+
+    rng = random.Random(seed)
+    durations = [[rng.randint(1, 100) for _ in range(rounds)]
+                 for _ in range(workers)]
+    trace = ssp_trace(durations, staleness=0)
+    for worker_trace in trace:
+        for r, reads in enumerate(worker_trace):
+            assert all(read_round == r for read_round in reads.values()), (
+                f"round {r} reads {reads} != pure BSP")
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    my_round=st.integers(min_value=0, max_value=50),
+    ahead=st.integers(min_value=0, max_value=10),
+    staleness=st.integers(min_value=0, max_value=5),
+)
+def test_ssp_read_round_caps_at_own_round(my_round, ahead, staleness):
+    """A peer running ahead is read at the reader's own round, never newer;
+    a peer within the bound is read at its freshest round."""
+    peer_clock = my_round - staleness + 1 + ahead  # just inside the bound +
+    if peer_clock <= 0:
+        return
+    got = ssp_read_round(my_round, peer_clock, staleness)
+    assert got == min(peer_clock - 1, my_round)
+    assert my_round - staleness <= got <= my_round
+
+
+def test_ssp_read_round_rejects_stale_peer():
+    """A peer at or beyond the bound is not readable — the caller must
+    block (that wait IS the SSP synchronization)."""
+    with pytest.raises(ValueError, match="SSP requires blocking"):
+        ssp_read_round(5, 3, staleness=2)  # peer published only rounds 0..2
+    assert ssp_read_round(5, 4, staleness=2) == 3
+
+
+def test_sync_policy_parse_and_modes():
+    assert SyncPolicy.parse(None).mode == "bsp"
+    assert SyncPolicy.parse(0).mode == "bsp"
+    assert SyncPolicy.parse(3) == SyncPolicy(staleness=3)
+    assert SyncPolicy.parse(3).mode == "ssp"
+    p = SyncPolicy(staleness=2, elastic=True)
+    assert SyncPolicy.parse(p) is p
+    with pytest.raises(ValueError):
+        SyncPolicy(staleness=-1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    per=st.integers(min_value=1, max_value=8),
+    old=st.integers(min_value=1, max_value=8),
+    new=st.integers(min_value=1, max_value=8),
+)
+def test_plan_resize_row_conservation(per, old, new):
+    """Every row has exactly one owner on each side; moved_rows is zero
+    exactly when the layout is unchanged."""
+    rows = per * old * new  # divisible by construction
+    plan = plan_resize(rows, old, new)
+    assert plan.old_rows_per_shard * old == rows
+    assert plan.new_rows_per_shard * new == rows
+    for r in (0, rows - 1, rows // 2):
+        assert 0 <= plan.owner(r, new=False) < old
+        assert 0 <= plan.owner(r, new=True) < new
+    if old == new:
+        assert plan.moved_rows == 0
+    assert 0 <= plan.moved_rows <= rows
+    assert f"{old} -> {new}" in plan.describe()
+
+
+def test_plan_resize_rejects_indivisible():
+    with pytest.raises(ValueError, match="new partitions"):
+        plan_resize(10, 2, 3)
+    with pytest.raises(ValueError, match="old partitions"):
+        plan_resize(10, 3, 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_resize(10, 0, 2)

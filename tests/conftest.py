@@ -24,6 +24,13 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# tests/ is a flat (non-package) directory: pytest only puts each test
+# file's *own* directory on sys.path, so subdirectory suites (tests/chaos/)
+# could not import the shared helpers (_hypothesis_compat) without this.
+# A nested conftest.py would collide with this one on the module name.
+if os.path.dirname(os.path.abspath(__file__)) not in sys.path:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
 
 def describe_failure(out) -> str:
     """Human-readable failure report for a subprocess: the exit status
@@ -92,5 +99,95 @@ def eight_device_run():
     def run(program: str, timeout: int = 540, env: dict = None) -> dict:
         return result_json(run_devices_subprocess(program, devices=8,
                                                   timeout=timeout, env=env))
+
+    return run
+
+
+# --------------------------------------------------------------------------- #
+# multi-host chaos harness
+# --------------------------------------------------------------------------- #
+class HostRun:
+    """One finished host: its rank plus the CompletedProcess-ish facts."""
+
+    def __init__(self, host_id: int, returncode: int, stdout: str,
+                 stderr: str):
+        self.host_id = host_id
+        self.returncode = returncode
+        self.stdout = stdout
+        self.stderr = stderr
+
+    @property
+    def killed(self) -> bool:
+        return self.returncode == -signal.SIGKILL
+
+    @property
+    def dropped(self) -> bool:
+        from repro.testing.chaos import DROP_EXIT_CODE
+
+        return self.returncode == DROP_EXIT_CODE
+
+    def result(self) -> dict:
+        return result_json(self)
+
+
+@pytest.fixture(scope="session")
+def chaos_hosts():
+    """Fault-injecting multi-host launcher — the chaos harness.
+
+    ``chaos_hosts(program, hosts=N, ...)`` runs ``program`` (``python -c``
+    text following the ``REPRO_*`` contract of :mod:`repro.core.hostmesh`)
+    as N simultaneous host subprocesses and returns one :class:`HostRun`
+    per host.  Faults (:class:`repro.testing.chaos.Fault`) travel through
+    the ``REPRO_CHAOS`` environment variable and fire *inside* the
+    targeted host at a deterministic stream round — kill (SIGKILL), delay
+    (straggler), or drop (graceful departure).
+
+    ``global_mesh=True`` hands the gang a shared coordinator (one
+    ``jax.distributed`` BSP mesh); ``False`` launches independent hosts
+    (the SSP exchange lane).  ``check=False`` skips the all-exits-clean
+    assertion for scenarios that *expect* a death.
+    """
+    from repro.core.hostmesh import free_port
+    from repro.testing.chaos import faults_to_env
+
+    def run(program: str, hosts: int = 2, devices_per_host: int = 2, *,
+            faults=(), global_mesh: bool = True, env: dict = None,
+            timeout: int = 540, check: bool = True):
+        coordinator = f"127.0.0.1:{free_port()}"
+        procs = []
+        for h in range(hosts):
+            host_env = dict(
+                os.environ,
+                PYTHONPATH=os.path.join(REPO, "src"),
+                XLA_FLAGS=(f"--xla_force_host_platform_device_count="
+                           f"{devices_per_host}"),
+                REPRO_NUM_HOSTS=str(hosts),
+                REPRO_HOST_ID=str(h),
+            )
+            if global_mesh:
+                host_env["REPRO_COORDINATOR"] = coordinator
+            else:
+                host_env.pop("REPRO_COORDINATOR", None)
+            if faults:
+                host_env.update(faults_to_env(faults))
+            if env:
+                host_env.update(env)
+            procs.append(subprocess.Popen(
+                [sys.executable, "-c", program], env=host_env, cwd=REPO,
+                stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+        runs = []
+        try:
+            for h, p in enumerate(procs):
+                stdout, stderr = p.communicate(timeout=timeout)
+                runs.append(HostRun(h, p.returncode, stdout, stderr))
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+        if check:
+            for r in runs:
+                assert r.returncode == 0, \
+                    f"host {r.host_id}: {describe_failure(r)}"
+        return runs
 
     return run

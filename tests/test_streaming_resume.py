@@ -42,6 +42,7 @@ from repro.core.algorithms.logistic_regression import (
 from repro.core.algorithms.kmeans import KMeans, KMeansParameters
 from repro.core.optimizer import MinibatchSGD, MinibatchSGDParameters
 from repro.data import BatchIterator
+from repro.testing import ChaosInjector, Fault
 
 assert len(jax.devices()) == 8, jax.devices()
 mesh = make_mesh((8,), ("data",))
@@ -77,29 +78,19 @@ def linreg_grad(vec, w):
     return x * (jnp.dot(x, w) - vec[0])
 
 
-class PreemptedIterator(BatchIterator):
-    '''Delivers an uncatchable SIGKILL instead of the batch at kill_step —
-    a deterministic stand-in for a pod preemption.'''
-
-    def __init__(self, source, mesh, kill_step):
-        super().__init__(source, mesh)
-        self.kill_step = kill_step
-
-    def __next__(self):
-        if self.step == self.kill_step:
-            os.kill(os.getpid(), signal.SIGKILL)
-        return super().__next__()
-
-
 SOURCES = {"logreg": clf_source, "minibatch": reg_source, "kmeans": km_source}
 
 
 def train(algo, sched, num_epochs, ckpt=None, resume=False, kill_step=None):
     source = SOURCES[algo]
-    if kill_step is None:
-        stream = BatchIterator(source, mesh=mesh)
-    else:
-        stream = PreemptedIterator(source, mesh, kill_step)
+    stream = BatchIterator(source, mesh=mesh)
+    if kill_step is not None:
+        # the shared chaos machinery (repro.testing.chaos): an uncatchable
+        # SIGKILL delivered when the stream is asked for the kill_step
+        # window — a deterministic stand-in for a pod preemption
+        injector = ChaosInjector([Fault(host=0, round=kill_step,
+                                        action="kill")])
+        stream = injector.wrap_stream(stream)
     if algo == "logreg":
         p = LogisticRegressionParameters(learning_rate=0.3,
                                          local_batch_size=8, schedule=sched)
