@@ -24,11 +24,25 @@ The reported ``trials_per_sec`` ratio is the claim of the tune subsystem:
 searching K models costs far less than K single-model runs.  The
 acceptance bar (ISSUE 3) is stacked ≥ 2× sequential; the CPU container
 typically shows 4–8×.
+
+The second leg (ISSUE 7) measures *search coverage* at a fixed device
+budget: ASHA vs the median rule, both stacked 8 lanes wide, both limited
+to the same slot-epoch budget.  The median driver carries every trial to
+the full epoch count (frozen lanes still occupy their slot), so a budget
+of B slot-epochs evaluates ``B / num_epochs`` trials; ASHA stops most
+trials at the first rung and backfills the freed slots from the pending
+pool, so the same budget gives far more configs a first-rung look —
+the asynchronous-halving claim (Li et al.).  ``--check`` exits nonzero
+when ASHA evaluates < 2× the median-rule trial count, or when ASHA's
+promotion sequence diverges across the three collective schedules
+(promotions are integer-accuracy decisions — they must be exactly
+schedule-independent).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 from benchmarks._util import emit, run_with_devices
 
@@ -39,6 +53,14 @@ EPOCHS = 6
 CHUNKS = 4
 GRID = {"learning_rate": [0.05, 0.1, 0.2, 0.3], "l2": [0.0, 0.01]}
 
+# ASHA-vs-median coverage leg: 8 slots x 9 epochs x 2 "units" of budget
+ASHA_EPOCHS = 9
+ASHA_SLOTS = 8
+ASHA_BUDGET = ASHA_SLOTS * ASHA_EPOCHS * 2          # 144 slot-epochs
+ASHA_POOL = 64
+ASHA_SPACE = {"learning_rate": ("loguniform", 0.01, 1.0),
+              "l2": [0.0, 0.01]}
+
 
 def _worker() -> None:
     import time
@@ -47,7 +69,8 @@ def _worker() -> None:
 
     from repro.core.compat import make_mesh
     from repro.core.numeric_table import MLNumericTable
-    from repro.tune import ModelSearch, grid
+    from repro.tune import (AsyncSuccessiveHalving, MedianStoppingRule,
+                            ModelSearch, grid, sample)
 
     import jax
 
@@ -85,12 +108,55 @@ def _worker() -> None:
     rows_out.append({"mode": "speedup",
                      "stacked_over_sequential":
                          round(times["sequential"] / times["stacked"], 2)})
+
+    # -- coverage leg: ASHA vs median rule at one slot-epoch budget ---- #
+    pool = sample(ASHA_SPACE, ASHA_POOL, seed=0)
+    # the median driver runs every admitted trial to the finish line, so
+    # the budget admits exactly budget // num_epochs trials
+    median_n = ASHA_BUDGET // ASHA_EPOCHS
+    med = ModelSearch("logreg", pool[:median_n], num_epochs=ASHA_EPOCHS,
+                      chunks_per_epoch=CHUNKS, folds=None,
+                      early_stop=MedianStoppingRule(), seed=0).run(table)
+    asha = ModelSearch("logreg", pool, num_epochs=ASHA_EPOCHS,
+                       chunks_per_epoch=CHUNKS, folds=None,
+                       early_stop=AsyncSuccessiveHalving(
+                           reduction_factor=3, min_rounds=1,
+                           slots=ASHA_SLOTS, epoch_budget=ASHA_BUDGET),
+                       seed=0).run(table)
+    ratio = len(asha.trials) / max(1, len(med.trials))
+    rows_out.append({"mode": "coverage",
+                     "budget_slot_epochs": ASHA_BUDGET,
+                     "median_trials": len(med.trials),
+                     "asha_trials": len(asha.trials),
+                     "asha_over_median": round(ratio, 2)})
+
+    # promotion parity: the same ASHA pool under every collective
+    # schedule must make the identical promotion sequence (accuracy is a
+    # count — schedule-independent by construction)
+    promos = {}
+    for sched in ("allreduce", "gather_broadcast", "reduce_scatter"):
+        res = ModelSearch("logreg", pool[:16], num_epochs=ASHA_EPOCHS,
+                          chunks_per_epoch=CHUNKS, folds=None,
+                          schedule=sched,
+                          early_stop=AsyncSuccessiveHalving(
+                              reduction_factor=3, min_rounds=1,
+                              slots=ASHA_SLOTS),
+                          seed=0).run(table)
+        promos[sched] = [(t.index, len(t.rung_scores), t.stopped)
+                         for t in res.trials]
+    parity = len(set(map(tuple, promos.values()))) == 1
+    rows_out.append({"mode": "promotion_parity",
+                     "schedules_agree": parity})
     print(json.dumps({"devices": devices, "rows": rows_out}))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--_worker", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero when ASHA evaluates < 2x the "
+                         "median-rule trial count at the fixed budget, or "
+                         "its promotions diverge across schedules")
     args = ap.parse_args()
     if args._worker:
         _worker()
@@ -98,6 +164,24 @@ def main() -> None:
 
     res = run_with_devices("benchmarks.model_search", DEVICES, {})
     emit("model_search", res["rows"])
+    coverage = next(r for r in res["rows"] if r["mode"] == "coverage")
+    parity = next(r for r in res["rows"] if r["mode"] == "promotion_parity")
+    print("RESULT::" + json.dumps({"asha_over_median":
+                                   coverage["asha_over_median"],
+                                   "median_trials":
+                                   coverage["median_trials"],
+                                   "asha_trials": coverage["asha_trials"],
+                                   "schedules_agree":
+                                   parity["schedules_agree"]}))
+    if args.check:
+        if coverage["asha_over_median"] < 2.0:
+            print(f"CHECK FAILED: asha_over_median="
+                  f"{coverage['asha_over_median']} < 2.0", file=sys.stderr)
+            sys.exit(1)
+        if not parity["schedules_agree"]:
+            print("CHECK FAILED: ASHA promotions diverge across collective "
+                  "schedules", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -136,12 +136,21 @@ class ParamStore:
     def wait_clock(self, host: int, min_clock: int) -> int:
         """Block until ``host``'s clock reaches ``min_clock`` (or it marks
         itself departed — returns its final clock).  Raises
-        :class:`PeerTimeout` after ``timeout`` seconds."""
+        :class:`PeerTimeout` after ``timeout`` seconds of *zero observed
+        progress*: every time the peer's clock advances the deadline
+        resets, so a slow-but-alive straggler that keeps publishing — but
+        needs longer than ``timeout`` to cover the whole gap to
+        ``min_clock`` — is waited out, while a corpse (frozen clock) still
+        times out after exactly ``timeout`` seconds."""
+        last = self.clock(host)
         deadline = time.monotonic() + self.timeout
         while True:
             c = self.clock(host)
             if c >= min_clock or self.has_left(host):
                 return c
+            if c > last:
+                last = c
+                deadline = time.monotonic() + self.timeout
             if time.monotonic() >= deadline:
                 raise PeerTimeout(host, min_clock - 1, self.timeout)
             time.sleep(self.poll)
@@ -177,12 +186,24 @@ class ParamStore:
         guaranteed in-bound, but after a world restart the exact file may
         be gone, in which case the nearest older one (still within the
         bound, since the peer's clock passed the wait) is the right value.
+
+        Listing and reading are two separate directory operations, and the
+        peer's own ``keep=`` pruning runs concurrently — a file listed by
+        ``rounds()`` can be deleted before ``read()`` opens it.  A pruned
+        miss is retried against a fresh scan (pruning only ever deletes
+        *older* publishes, so each retry targets a newer round and the
+        loop terminates); ``None`` is returned only when a rescan shows
+        nothing ≤ the bound remains.
         """
-        have = [r for r in self.rounds(host) if r <= round_index]
-        if not have:
-            return None
-        r = have[-1]
-        return self.read(host, r, template), r
+        while True:
+            have = [r for r in self.rounds(host) if r <= round_index]
+            if not have:
+                return None
+            r = have[-1]
+            try:
+                return self.read(host, r, template), r
+            except FileNotFoundError:
+                continue  # pruned between the scan and the open — rescan
 
     def clocks(self) -> Dict[int, int]:
         return {h: self.clock(h) for h in range(self.num_hosts)}

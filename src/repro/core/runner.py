@@ -136,6 +136,35 @@ def _mask_tree(active: jnp.ndarray, new: Any, old: Any) -> Any:
     return jax.tree.map(leaf, new, old)
 
 
+def _stacked_callback_shim(cb: Callable) -> Callable:
+    """Adapt a trial-level callback to the stacked carry: the env the
+    callback sees carries the (K, …) trial tree / hyper / host active
+    mask instead of the raw carry dict, and any ``state``/``hyper``/
+    ``active`` swap it returns is folded back into the carry.  Dispatch
+    attributes (``order``, ``before_epoch``) are preserved."""
+    import dataclasses as _dc
+
+    def shim(env):
+        carry = env.state
+        tenv = _dc.replace(env, state=carry["trial"], hyper=carry["hyper"],
+                           active=np.asarray(carry["active"]))
+        out = cb(tenv)
+        if not out:
+            return None
+        new = dict(carry)
+        if "state" in out:
+            new["trial"] = out["state"]
+        if "hyper" in out:
+            new["hyper"] = out["hyper"]
+        if "active" in out:
+            new["active"] = jnp.asarray(out["active"])
+        return {"state": new}
+
+    shim.order = getattr(cb, "order", 10)
+    shim.before_epoch = getattr(cb, "before_epoch", False)
+    return shim
+
+
 def _emulated_combine(stacked: Any, combine: str) -> Any:
     """Combine a (shards, ...) stacked tree without a mesh — the
     algebraically-equal local form of each collective."""
@@ -407,7 +436,9 @@ class DistributedRunner:
                    chunks_per_epoch: int = 1,
                    checkpoint: Optional[CheckpointPolicy] = None,
                    rng: Optional[jnp.ndarray] = None,
-                   start_epoch: int = 0) -> Any:
+                   start_epoch: int = 0,
+                   callbacks: Sequence[Callable] = (),
+                   eval_fn: Optional[Callable] = None) -> Any:
         """Streaming variant of :meth:`run_rounds` for data larger than
         device memory: each epoch pulls ONE window of rows from ``stream``
         (a :class:`repro.data.pipeline.BatchIterator` yielding ``{"data":
@@ -425,6 +456,16 @@ class DistributedRunner:
         optional uint32 key carried for stochastic pipelines (fold per
         epoch with ``jax.random.fold_in(rng, epoch)``); it rides in the
         checkpoint so a resumed run re-derives identical per-epoch keys.
+
+        ``callbacks`` are host-side hooks fired *between* compiled epochs
+        (the :mod:`repro.tune.callback` protocol): before-epoch callbacks
+        may return ``{"state": ...}`` swaps the next epoch trains on
+        (hyper schedules), after-epoch callbacks see ``eval_fn(state,
+        epoch) -> [EvalEntry, ...]`` results and may raise
+        :class:`repro.tune.callback.EarlyStopException` to end the loop —
+        the tail checkpoint is still written, so an early-stopped run
+        resumes/inspects like a completed one.  Hooks never change the
+        compiled round structure.
         """
         if num_epochs < start_epoch:
             raise ValueError(f"num_epochs {num_epochs} < start_epoch {start_epoch}")
@@ -438,6 +479,12 @@ class DistributedRunner:
             epoch_fn = self._epoch_fn(local_step, upd, combine, chunks)
             self._cache_put(cache_key, epoch_fn)
 
+        before = after = ()
+        if callbacks:
+            from repro.tune.callback import (CallbackEnv, EarlyStopException,
+                                             fire_callbacks, split_callbacks)
+            before, after = split_callbacks(callbacks)
+
         state = init_state
         if self.donate:
             # donate a private copy, never the caller's buffer
@@ -445,19 +492,61 @@ class DistributedRunner:
 
         last_saved = None
         rows = None
+        done = num_epochs
         for e in range(start_epoch, num_epochs):
+            stopped = False
+            if before:
+                env = CallbackEnv(epoch=e, begin_epoch=start_epoch,
+                                  end_epoch=num_epochs, round=e * chunks,
+                                  state=state)
+                try:
+                    swaps = fire_callbacks(before, env)
+                except EarlyStopException:
+                    done = e
+                    break
+                if set(swaps) - {"state"}:
+                    raise ValueError(
+                        f"run_epochs carries only 'state' — a callback "
+                        f"returned {sorted(set(swaps) - {'state'})} (hyper/"
+                        f"active swaps need the stacked loop)")
+                if "state" in swaps:
+                    state = swaps["state"]
+                    if self.donate:
+                        state = jax.tree.map(jnp.copy, state)
             batch = next(stream)
             window = batch["data"] if isinstance(batch, dict) else batch
             self._check_window(window, chunks)
             rows = int(window.shape[0])
             rounds = jnp.arange(e * chunks, (e + 1) * chunks, dtype=jnp.int32)
             state = epoch_fn(state, window, rounds)
-            if checkpoint is not None and (e + 1) % checkpoint.every_epochs == 0:
-                self._save_snapshot(checkpoint, stream, state, e + 1, chunks,
+            done = e + 1
+            if after:
+                evals = tuple(eval_fn(state, done)) if eval_fn else ()
+                env = CallbackEnv(epoch=done, begin_epoch=start_epoch,
+                                  end_epoch=num_epochs, round=done * chunks,
+                                  state=state, evals=evals)
+                try:
+                    swaps = fire_callbacks(after, env)
+                except EarlyStopException:
+                    stopped = True
+                    swaps = {}
+                if set(swaps) - {"state"}:
+                    raise ValueError(
+                        f"run_epochs carries only 'state' — a callback "
+                        f"returned {sorted(set(swaps) - {'state'})} (hyper/"
+                        f"active swaps need the stacked loop)")
+                if "state" in swaps:
+                    state = swaps["state"]
+                    if self.donate:
+                        state = jax.tree.map(jnp.copy, state)
+            if checkpoint is not None and done % checkpoint.every_epochs == 0:
+                self._save_snapshot(checkpoint, stream, state, done, chunks,
                                     rng, rows=rows)
-                last_saved = e + 1
-        if checkpoint is not None and last_saved != num_epochs:
-            self._save_snapshot(checkpoint, stream, state, num_epochs, chunks,
+                last_saved = done
+            if stopped:
+                break
+        if checkpoint is not None and last_saved != done:
+            self._save_snapshot(checkpoint, stream, state, done, chunks,
                                 rng, rows=rows)
         return state
 
@@ -828,11 +917,16 @@ class DistributedRunner:
     # device-stacked trials: K models per round (model search; repro.tune)
     # ------------------------------------------------------------------ #
     def _stacked_carry(self, trial_states: Any, trial_hyper: Any,
-                       active: Optional[jnp.ndarray]) -> dict:
+                       active: Optional[jnp.ndarray],
+                       offsets: Optional[jnp.ndarray] = None) -> dict:
         """Assemble the carry of a stacked run: ``trial`` (every leaf has a
         leading (K, …) trial axis), ``hyper`` (per-trial scalar
-        hyperparameters, leading (K,)), and ``active`` (the (K,) bool mask
-        early stopping freezes trials with)."""
+        hyperparameters, leading (K,)), ``active`` (the (K,) bool mask
+        early stopping freezes trials with), and ``offset`` (per-trial
+        round offsets: lane ``j`` sees trial-local round ``r - offset[j]``,
+        so a trial backfilled into a freed slot mid-search trains on the
+        same round indices — lr decay, rotating slices — as a solo run
+        from round 0)."""
         leaves = jax.tree.leaves(trial_states)
         if not leaves:
             raise ValueError("trial_states must have at least one array leaf")
@@ -844,8 +938,15 @@ class DistributedRunner:
                     f"shape {leaf.shape}")
         if active is None:
             active = jnp.ones((k,), bool)
+        if offsets is None:
+            offsets = jnp.zeros((k,), jnp.int32)
+        else:
+            offsets = jnp.asarray(offsets, jnp.int32)
+            if offsets.shape != (k,):
+                raise ValueError(
+                    f"round offsets must be shape ({k},), got {offsets.shape}")
         return {"trial": trial_states, "hyper": trial_hyper,
-                "active": jnp.asarray(active)}
+                "active": jnp.asarray(active), "offset": offsets}
 
     def _cache_put(self, key: Any, value: Any) -> None:
         """Insert into the bounded epoch cache, evicting oldest-first."""
@@ -864,18 +965,22 @@ class DistributedRunner:
             return self._epoch_cache[key]
 
         def local_step(block: jnp.ndarray, carry: dict, r: jnp.ndarray) -> Any:
-            return jax.vmap(lambda s, h: trial_step(block, s, r, h))(
-                carry["trial"], carry["hyper"])
+            # lane j sees its trial-local round r - offset[j]: a trial
+            # admitted into a freed slot at a later global round trains on
+            # the identical round sequence as a solo run from round 0
+            return jax.vmap(lambda s, h, o: trial_step(block, s, r - o, h))(
+                carry["trial"], carry["hyper"], carry["offset"])
 
         def upd(carry: dict, combined: Any, r: jnp.ndarray) -> dict:
             trial, hyper = carry["trial"], carry["hyper"]
             if trial_update is None:
                 new = combined
             else:
-                new = jax.vmap(lambda s, c, h: trial_update(s, c, r, h))(
-                    trial, combined, hyper)
+                new = jax.vmap(lambda s, c, h, o: trial_update(s, c, r - o, h))(
+                    trial, combined, hyper, carry["offset"])
             return {"trial": _mask_tree(carry["active"], new, trial),
-                    "hyper": hyper, "active": carry["active"]}
+                    "hyper": hyper, "active": carry["active"],
+                    "offset": carry["offset"]}
 
         self._cache_put(key, (local_step, upd))
         return local_step, upd
@@ -914,7 +1019,10 @@ class DistributedRunner:
                            chunks_per_epoch: int = 1,
                            checkpoint: Optional[CheckpointPolicy] = None,
                            rng: Optional[jnp.ndarray] = None,
-                           start_epoch: int = 0) -> Any:
+                           start_epoch: int = 0,
+                           round_offsets: Optional[jnp.ndarray] = None,
+                           callbacks: Sequence[Callable] = (),
+                           eval_fn: Optional[Callable] = None) -> Any:
         """Streaming twin of :meth:`run_stacked_rounds`: every epoch pulls
         ONE window from ``stream`` (shared by all K trials — the window
         crosses the host→device boundary once, not K times) and advances
@@ -922,14 +1030,36 @@ class DistributedRunner:
         inherit streaming's checkpoint/resume story unchanged.  Segmented
         callers (early-stopping rungs) pass ``start_epoch``/``active`` per
         segment; the compiled epoch function is cached across segments.
+
+        ``round_offsets`` (K,) gives each lane a private round origin:
+        lane ``j`` computes with trial-local round ``r - round_offsets[j]``
+        — the mechanism slot-backfilling searches (ASHA) use to admit a
+        fresh trial into a freed lane mid-run with its lr decay starting
+        from zero.  Offsets must be multiples of ``chunks_per_epoch`` so
+        the minibatch-chunk phase (``r % chunks``) is preserved.
+
+        ``callbacks``/``eval_fn`` are the host-side hooks of
+        :meth:`run_epochs`, presented at the trial level: each callback's
+        env carries ``state`` = the stacked (K, …) trial tree, ``hyper``,
+        and a host copy of ``active``; ``{"state"|"hyper"|"active": ...}``
+        returns swap the matching carry component.  ``eval_fn(trial_states,
+        epoch)`` returns the ``EvalEntry`` list for the boundary.
         Returns the final stacked trial states.
         """
-        carry = self._stacked_carry(trial_states, trial_hyper, active)
+        carry = self._stacked_carry(trial_states, trial_hyper, active,
+                                    round_offsets)
         step, upd = self._stacked_fns(trial_step, update)
+        run_callbacks: Sequence[Callable] = ()
+        run_eval = None
+        if callbacks:
+            run_callbacks = [_stacked_callback_shim(cb) for cb in callbacks]
+        if eval_fn is not None:
+            run_eval = lambda carry, epoch: eval_fn(carry["trial"], epoch)  # noqa: E731
         out = self.run_epochs(stream, carry, step, num_epochs, combine=combine,
                               update=upd, chunks_per_epoch=chunks_per_epoch,
                               checkpoint=checkpoint, rng=rng,
-                              start_epoch=start_epoch)
+                              start_epoch=start_epoch,
+                              callbacks=run_callbacks, eval_fn=run_eval)
         return out["trial"]
 
     def __repr__(self) -> str:  # pragma: no cover

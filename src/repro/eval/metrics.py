@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from repro.core.collectives import CollectiveSchedule
 from repro.core.runner import DistributedRunner
 
-__all__ = ["accuracy", "log_loss", "rmse", "silhouette_lite", "predictions"]
+__all__ = ["accuracy", "log_loss", "rmse", "silhouette_lite", "predictions",
+           "MetricHistory"]
 
 #: predict(X_block) -> (rows,) predictions, or (K, rows) for K stacked trials
 PredictFn = Callable[[jnp.ndarray], jnp.ndarray]
@@ -138,3 +139,50 @@ def silhouette_lite(table: Any, centroids: jnp.ndarray, *,
         return jnp.sum(row_scores(block, C), axis=-1)
 
     return _sum_stats(table, local, schedule) / table.num_rows
+
+
+class MetricHistory:
+    """Per-rung metric snapshots keyed by ``(trial, metric, epoch)``.
+
+    The storage behind :func:`repro.tune.callback.record_evaluation`: each
+    evaluation boundary (a rung in a search, an epoch in a plain loop)
+    records one value per (trial, metric).  Recording the same key twice
+    **overwrites** — that is the idempotence a killed-and-resumed search
+    relies on when it replays boundaries it already recorded.
+
+    ``series`` returns one trial's trajectory as ``[(epoch, value), …]``
+    in epoch order, regardless of the order boundaries were recorded in
+    (an ASHA resume can backfill early rungs after later ones).
+    """
+
+    def __init__(self) -> None:
+        # trial -> metric -> {epoch: value}
+        self._h: dict = {}
+
+    def record(self, trial: int, metric: str, epoch: int, value: float) -> None:
+        self._h.setdefault(int(trial), {}).setdefault(str(metric), {})[
+            int(epoch)] = float(value)
+
+    def trials(self) -> list:
+        return sorted(self._h)
+
+    def metrics(self, trial: int) -> list:
+        return sorted(self._h.get(int(trial), {}))
+
+    def series(self, trial: int, metric: str) -> list:
+        points = self._h.get(int(trial), {}).get(str(metric), {})
+        return sorted(points.items())
+
+    def last(self, trial: int, metric: str):
+        series = self.series(trial, metric)
+        return series[-1][1] if series else None
+
+    def to_dict(self) -> dict:
+        """JSON-able nested dict (epoch keys become strings)."""
+        return {str(t): {m: {str(e): v for e, v in sorted(points.items())}
+                         for m, points in metrics.items()}
+                for t, metrics in self._h.items()}
+
+    def __len__(self) -> int:
+        return sum(len(points) for metrics in self._h.values()
+                   for points in metrics.values())

@@ -21,6 +21,12 @@ mesh):
         --samples 6 --space "learning_rate=loguniform:0.01:1.0;l2=0.0,0.01" \\
         --ckpt-dir /tmp/mli-search
     # kill it mid-search, then add --resume to the same command line
+
+    PYTHONPATH=src python -m repro.launch.tune --algorithm logreg \\
+        --samples 32 --space "learning_rate=loguniform:0.01:1.0;l2=0.0,0.01" \\
+        --epochs 9 --asha --reduction-factor 3 --min-rounds 1 --slots 4 \\
+        --record-eval
+    # ASHA: slot-table execution, per-report promotion, per-rung history
 """
 from __future__ import annotations
 
@@ -38,7 +44,8 @@ import numpy as np
 from repro.core.collectives import CollectiveSchedule
 from repro.core.compat import make_mesh
 from repro.core.numeric_table import MLNumericTable
-from repro.tune import MedianStoppingRule, ModelSearch, grid, sample
+from repro.tune import (AsyncSuccessiveHalving, MedianStoppingRule,
+                        ModelSearch, grid, record_evaluation, sample)
 
 ALGORITHMS = ("logreg", "kmeans", "pipeline")
 
@@ -146,6 +153,23 @@ def main(argv=None) -> None:
                     help="median-rule early stopping, one rung per "
                          "--rung-epochs")
     ap.add_argument("--rung-epochs", type=int, default=None)
+    ap.add_argument("--asha", action="store_true",
+                    help="asynchronous successive halving: slot-table "
+                         "execution with per-report promotion (overrides "
+                         "--early-stop)")
+    ap.add_argument("--reduction-factor", type=int, default=3,
+                    help="ASHA: promote the top 1/rf of each rung")
+    ap.add_argument("--min-rounds", type=int, default=1,
+                    help="ASHA: trial-local epochs before the first rung")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="ASHA: concurrent trial slots (default min(8, "
+                         "trials))")
+    ap.add_argument("--epoch-budget", type=int, default=None,
+                    help="ASHA: total slot-epochs; admission stops once "
+                         "spent")
+    ap.add_argument("--record-eval", action="store_true",
+                    help="record per-rung metric snapshots (printed, and "
+                         "in the --json payload as 'history')")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true",
@@ -190,13 +214,29 @@ def main(argv=None) -> None:
             if completed["trials"] >= args.kill_after_trial:
                 os.kill(os.getpid(), signal.SIGKILL)
 
+    if args.asha:
+        early = AsyncSuccessiveHalving(
+            reduction_factor=args.reduction_factor,
+            min_rounds=args.min_rounds, slots=args.slots,
+            epoch_budget=args.epoch_budget)
+    else:
+        early = MedianStoppingRule() if args.early_stop else None
+
+    history = None
+    callbacks = ()
+    if args.record_eval:
+        from repro.eval.metrics import MetricHistory
+
+        history = MetricHistory()
+        callbacks = (record_evaluation(history),)
+
     search = ModelSearch(
         algorithm=algorithm, configs=configs, num_epochs=args.epochs,
         chunks_per_epoch=args.chunks_per_epoch, folds=args.folds,
         val_fraction=args.holdout, metric=args.metric,
         schedule=args.schedule, execution=args.execution, seed=args.seed,
-        early_stop=MedianStoppingRule() if args.early_stop else None,
-        rung_epochs=args.rung_epochs, ckpt_dir=args.ckpt_dir,
+        early_stop=early, rung_epochs=args.rung_epochs,
+        callbacks=callbacks, ckpt_dir=args.ckpt_dir,
         unit_callback=killer)
 
     resume = bool(args.resume and args.ckpt_dir)
@@ -218,6 +258,12 @@ def main(argv=None) -> None:
     best = result.best
     print(f"BEST trial={best.index} score={best.score:.6f} "
           f"config={json.dumps(best.config, sort_keys=True)}")
+    if history is not None:
+        for t in history.trials():
+            for m in history.metrics(t):
+                points = " ".join(f"{e}:{v:.4f}"
+                                  for e, v in history.series(t, m))
+                print(f"EVAL trial={t} metric={m} {points}")
 
     if args.json:
         payload = {
@@ -231,6 +277,8 @@ def main(argv=None) -> None:
             "best": {"index": best.index, "config": best.config,
                      "score": best.score},
         }
+        if history is not None:
+            payload["history"] = history.to_dict()
         print("RESULT::" + json.dumps(payload))
 
 

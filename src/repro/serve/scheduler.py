@@ -47,6 +47,9 @@ class Request:
     # scheduler-stamped accounting
     admitted_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # monotone submission sequence stamped by SlotScheduler.submit — the
+    # FIFO tiebreak for equal arrival times
+    seq: int = -1
 
 
 class SlotScheduler:
@@ -93,15 +96,25 @@ class SlotScheduler:
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         """Add one request; it becomes admissible once ``now >= arrival``.
-        Submission order is preserved within equal arrival times."""
+        Admission is in arrival order; submission order breaks ties within
+        equal arrival times."""
+        req.seq = self.submitted
         self.submitted += 1
         self._pending.append(req)
 
     def release(self, now: float) -> None:
-        """Move arrived requests from pending into the admission queue."""
+        """Move arrived requests from pending into the admission queue, in
+        ``(arrival, seq)`` order.  Iterating pending in submission order
+        would let a later-arriving request jump an earlier-arriving one
+        released in the same call (burst traces submit out of arrival
+        order); sorting restores arrival-FIFO, with the submit sequence as
+        a stable tiebreak for equal arrivals."""
         still = deque()
+        ready = []
         for r in self._pending:
-            (self._queue if r.arrival <= now else still).append(r)
+            (ready if r.arrival <= now else still).append(r)
+        ready.sort(key=lambda r: (r.arrival, r.seq))
+        self._queue.extend(ready)
         self._pending = still
 
     def next_arrival(self) -> Optional[float]:

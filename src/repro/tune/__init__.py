@@ -5,19 +5,33 @@ The paper positions MLI as the API layer of MLbase, whose purpose is
 This package is that layer for this repo:
 
   * :mod:`repro.tune.search` — grid / random config enumeration, the
-    median early-stopping rule, and the :class:`ModelSearch` driver;
+    median early-stopping rule, asynchronous successive halving (ASHA),
+    and the :class:`ModelSearch` driver;
   * :mod:`repro.tune.trials` — trial execution: device-stacked groups
     (K same-shape trials vmapped over a leading axis, one jitted round
     advancing all K) with a sequential fallback for ragged configs, plus
     mid-search checkpoint/resume;
+  * :mod:`repro.tune.callback` — LightGBM-style training/search hooks
+    (:func:`early_stopping`, :func:`record_evaluation`,
+    :func:`hyper_schedule`) fired host-side between compiled epochs;
   * :mod:`repro.tune.cv` — k-fold and holdout splitters as row-index
     views over `MLNumericTable` / `BatchIterator`.
 
 Scoring lives in :mod:`repro.eval.metrics`.  See ``docs/architecture.md``
 ("Model search") and ``examples/model_search.py``.
 """
+from repro.tune.callback import (  # noqa: F401
+    CallbackEnv,
+    EarlyStopException,
+    EvalEntry,
+    early_stopping,
+    hyper_schedule,
+    record_evaluation,
+)
 from repro.tune.cv import KFold, fold_view, holdout_split  # noqa: F401
 from repro.tune.search import (  # noqa: F401
+    AshaScheduler,
+    AsyncSuccessiveHalving,
     MedianStoppingRule,
     ModelSearch,
     SearchResult,
@@ -33,6 +47,8 @@ __all__ = [
     "holdout_split",
     "grid",
     "sample",
+    "AshaScheduler",
+    "AsyncSuccessiveHalving",
     "MedianStoppingRule",
     "ModelSearch",
     "SearchResult",
@@ -40,4 +56,10 @@ __all__ = [
     "TrialSpec",
     "tree_stack",
     "tree_unstack",
+    "CallbackEnv",
+    "EarlyStopException",
+    "EvalEntry",
+    "early_stopping",
+    "hyper_schedule",
+    "record_evaluation",
 ]

@@ -36,12 +36,20 @@ import itertools
 import json
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.collectives import CollectiveSchedule
 from repro.core.runner import DistributedRunner
 from repro.data.pipeline import BatchIterator
+from repro.tune.callback import (
+    CallbackEnv,
+    EarlyStopException,
+    EvalEntry,
+    fire_callbacks,
+    split_callbacks,
+)
 from repro.tune.cv import KFold, fold_view, holdout_split, take_rows
 from repro.tune.trials import (
     SearchCheckpointer,
@@ -56,6 +64,8 @@ __all__ = [
     "grid",
     "sample",
     "MedianStoppingRule",
+    "AsyncSuccessiveHalving",
+    "AshaScheduler",
     "TrialResult",
     "SearchResult",
     "ModelSearch",
@@ -150,6 +160,221 @@ class MedianStoppingRule:
 
 
 # --------------------------------------------------------------------------- #
+# asynchronous successive halving
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class AsyncSuccessiveHalving:
+    """ASHA: per-rung promotion decided the moment a trial reports.
+
+    Rungs sit at trial-local epochs ``min_rounds * reduction_factor^j``
+    (capped at the search's epoch budget, which is always the final
+    rung).  When a trial reaches its next rung it reports its validation
+    score and the decision is immediate — no cohort barrier: the trial
+    is **promoted** when its score is at or above the top ``1/
+    reduction_factor`` quantile of everything reported *at that rung so
+    far*, else **stopped**, freeing its execution slot for the next
+    pending trial (the same backfill move ``serve.SlotScheduler`` makes
+    when a decode slot retires).  Early decisions are made against few
+    peers and are therefore optimistic — exactly the asynchronous
+    trade-off (Li et al., ASHA): slots never idle, so at a fixed device
+    budget far more of the search space gets a first-rung look.
+
+    Parameters
+    ----------
+    reduction_factor:
+        Promote the top ``1/reduction_factor`` of each rung (and space
+        rungs geometrically by the same factor).
+    min_rounds:
+        Trial-local epochs before the first rung.
+    slots:
+        Concurrent trial slots (stacked lane width).  Default: up to 8,
+        capped at the config count.
+    epoch_budget:
+        Total slot-epochs the search may consume; admission stops once
+        spent (running trials drain).  ``None`` = run the whole pool.
+    """
+
+    reduction_factor: int = 3
+    min_rounds: int = 1
+    slots: Optional[int] = None
+    epoch_budget: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.reduction_factor < 2:
+            raise ValueError(
+                f"reduction_factor must be >= 2, got {self.reduction_factor}")
+        if self.min_rounds < 1:
+            raise ValueError(f"min_rounds must be >= 1, got {self.min_rounds}")
+        if self.slots is not None and self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+
+    def rung_epochs(self, num_epochs: int) -> List[int]:
+        """Trial-local epoch of each rung, ascending; the final entry is
+        always ``num_epochs`` (the finish line)."""
+        out: List[int] = []
+        e = self.min_rounds
+        while e < num_epochs:
+            out.append(e)
+            e *= self.reduction_factor
+        out.append(num_epochs)
+        return out
+
+    def promote(self, score: float, rung_scores: Sequence[float]) -> bool:
+        """Promote iff ``score`` is at or above the top ``1/rf`` quantile
+        of every score reported at this rung so far (itself included) —
+        the asynchronous decision: later reports never revisit it."""
+        q = 100.0 * (1.0 - 1.0 / self.reduction_factor)
+        cut = float(np.percentile(np.asarray(rung_scores, np.float64), q))
+        return float(score) >= cut
+
+
+class AshaScheduler:
+    """Host-side ASHA bookkeeping: slot table, pending queue, rung ledger.
+
+    Pure control state — it never touches device arrays, so the SAME
+    scheduler drives both execution modes (stacked lanes and sequential
+    trials) through an identical decision sequence, which is what makes
+    stacked-vs-sequential ASHA promotion-identical by construction.  The
+    driver loop:
+
+        admits = sched.admit()            # backfill free slots (FIFO)
+        delta = sched.tick_size()         # epochs until the next rung
+        ... advance every occupied slot by delta epochs ...
+        sched.advance(delta)
+        for slot, trial in sched.due():   # rung reached, in slot order
+            sched.report(trial, score)    # promote | stop | done
+
+    Everything is JSON-serializable (:meth:`state_dict` /
+    :meth:`from_state_dict`), so a killed search restores the scheduler
+    mid-rung and continues bit-for-bit.
+    """
+
+    def __init__(self, rule: AsyncSuccessiveHalving, num_trials: int,
+                 num_epochs: int, slots: int):
+        self.rule = rule
+        self.rungs = rule.rung_epochs(num_epochs)
+        self.num_trials = int(num_trials)
+        self.slots: List[Optional[int]] = [None] * int(slots)
+        self.pending: List[int] = list(range(num_trials))
+        self.local_epoch: Dict[int, int] = {}
+        self.next_rung: Dict[int, int] = {}
+        # per rung: scores / trial ids in report order (the asynchronous
+        # ledger each promotion decision quantiles over)
+        self.rung_scores: List[List[float]] = [[] for _ in self.rungs]
+        self.rung_trials: List[List[int]] = [[] for _ in self.rungs]
+        self.terminal: Dict[int, str] = {}      # trial -> "stopped" | "done"
+        self.slot_epochs = 0                    # budget meter
+        self.global_epoch = 0
+
+    # -- queries ------------------------------------------------------- #
+    def occupied(self) -> List[Tuple[int, int]]:
+        return [(j, t) for j, t in enumerate(self.slots) if t is not None]
+
+    def exhausted(self) -> bool:
+        return (self.rule.epoch_budget is not None
+                and self.slot_epochs >= self.rule.epoch_budget)
+
+    def finished(self) -> bool:
+        return not self.occupied() and (not self.pending or self.exhausted())
+
+    def tick_size(self) -> int:
+        """Epochs until the nearest occupied slot reaches its next rung —
+        the longest segment the driver can run without a decision."""
+        rem = [self.rungs[self.next_rung[t]] - self.local_epoch[t]
+               for _, t in self.occupied()]
+        return min(rem) if rem else 0
+
+    def due(self) -> List[Tuple[int, int]]:
+        """Occupied slots whose trial sits exactly at its next rung, in
+        slot order — the deterministic report order both execution modes
+        share."""
+        return [(j, t) for j, t in self.occupied()
+                if self.local_epoch[t] == self.rungs[self.next_rung[t]]]
+
+    # -- transitions --------------------------------------------------- #
+    def admit(self) -> List[Tuple[int, int]]:
+        """Backfill every free slot from the pending queue (FIFO), unless
+        the epoch budget is spent.  Returns the (slot, trial) admissions."""
+        admits: List[Tuple[int, int]] = []
+        for j, occ in enumerate(self.slots):
+            if occ is not None or not self.pending or self.exhausted():
+                continue
+            t = self.pending.pop(0)
+            self.slots[j] = t
+            self.local_epoch[t] = 0
+            self.next_rung[t] = 0
+            admits.append((j, t))
+        return admits
+
+    def advance(self, delta: int) -> None:
+        occ = self.occupied()
+        for _, t in occ:
+            self.local_epoch[t] += delta
+        self.slot_epochs += delta * len(occ)
+        self.global_epoch += delta
+
+    def report(self, trial: int, score: float) -> bool:
+        """Record ``trial``'s score at its rung and decide immediately.
+        Returns True when the trial keeps running (promoted), False when
+        its slot was freed (stopped below the cut, or finished the final
+        rung)."""
+        rung = self.next_rung[trial]
+        self.rung_scores[rung].append(float(score))
+        self.rung_trials[rung].append(int(trial))
+        j = self.slots.index(trial)
+        if rung == len(self.rungs) - 1:
+            self.terminal[trial] = "done"
+            self.slots[j] = None
+            return False
+        if self.rule.promote(score, self.rung_scores[rung]):
+            self.next_rung[trial] = rung + 1
+            return True
+        self.terminal[trial] = "stopped"
+        self.slots[j] = None
+        return False
+
+    # -- persistence --------------------------------------------------- #
+    def state_dict(self) -> dict:
+        return {
+            "rungs": self.rungs,
+            "num_trials": self.num_trials,
+            "slots": [(-1 if t is None else t) for t in self.slots],
+            "pending": list(self.pending),
+            "local_epoch": {str(t): e for t, e in self.local_epoch.items()},
+            "next_rung": {str(t): r for t, r in self.next_rung.items()},
+            "rung_scores": self.rung_scores,
+            "rung_trials": self.rung_trials,
+            "terminal": {str(t): s for t, s in self.terminal.items()},
+            "slot_epochs": self.slot_epochs,
+            "global_epoch": self.global_epoch,
+        }
+
+    @classmethod
+    def from_state_dict(cls, rule: AsyncSuccessiveHalving, num_epochs: int,
+                        state: dict) -> "AshaScheduler":
+        sched = cls(rule, int(state["num_trials"]), num_epochs,
+                    len(state["slots"]))
+        if sched.rungs != [int(r) for r in state["rungs"]]:
+            raise ValueError(
+                f"checkpointed rung ladder {state['rungs']} does not match "
+                f"this rule's {sched.rungs} — refusing to resume")
+        sched.slots = [None if t == -1 else int(t) for t in state["slots"]]
+        sched.pending = [int(t) for t in state["pending"]]
+        sched.local_epoch = {int(t): int(e)
+                             for t, e in state["local_epoch"].items()}
+        sched.next_rung = {int(t): int(r)
+                           for t, r in state["next_rung"].items()}
+        sched.rung_scores = [[float(s) for s in rung]
+                             for rung in state["rung_scores"]]
+        sched.rung_trials = [[int(t) for t in rung]
+                             for rung in state["rung_trials"]]
+        sched.terminal = {int(t): str(s) for t, s in state["terminal"].items()}
+        sched.slot_epochs = int(state["slot_epochs"])
+        sched.global_epoch = int(state["global_epoch"])
+        return sched
+
+
+# --------------------------------------------------------------------------- #
 # results
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass
@@ -205,6 +430,22 @@ def _builtin_builder(algorithm: str, metric: Optional[str]
         f"spec-builder callable")
 
 
+def _tree_set(stacked: Any, lane: int, value: Any) -> Any:
+    """Write one trial's pytree into lane ``lane`` of a stacked (K, …)
+    tree — how an ASHA admission takes over a freed slot without touching
+    the other lanes (or the compiled structure)."""
+    return jax.tree.map(
+        lambda s, v: s.at[lane].set(jnp.asarray(v, s.dtype)), stacked, value)
+
+
+def _asha_history(sched: "AshaScheduler", trial: int) -> List[float]:
+    """One trial's rung-score trajectory, rebuilt from the scheduler's
+    per-rung ledger (ascending rung order — a trial reports at most once
+    per rung)."""
+    return [s for scores, trials in zip(sched.rung_scores, sched.rung_trials)
+            for t, s in zip(trials, scores) if t == trial]
+
+
 def _window_source(window: np.ndarray) -> Callable[[int], Dict[str, np.ndarray]]:
     """Stream source for a fold's train view: every epoch's window is the
     view's rows (a pure function of the step — seekable, resume-exact)."""
@@ -240,12 +481,28 @@ class ModelSearch:
         ``"auto"`` (stack same-shape groups) | ``"stacked"`` |
         ``"sequential"``.
     early_stop / rung_epochs:
-        Optional :class:`MedianStoppingRule`, applied every
-        ``rung_epochs`` epochs (default 1 when a rule is set, else one
-        rung spanning the whole budget).
+        Optional stopping rule.  A :class:`MedianStoppingRule` applies
+        every ``rung_epochs`` epochs (default 1 when a rule is set, else
+        one rung spanning the whole budget).  An
+        :class:`AsyncSuccessiveHalving` rule switches the driver to the
+        slot-backfilling ASHA loop (its own geometric rung ladder;
+        ``rung_epochs`` is ignored).
+    callbacks:
+        :mod:`repro.tune.callback` hooks.  Under the median driver they
+        are threaded into every training segment (so ``hyper_schedule``
+        steers epochs) AND fired at every rung boundary with the rung's
+        scores as ``EvalEntry`` evals (so ``record_evaluation`` captures
+        per-rung snapshots and ``early_stopping`` can halt the whole
+        search).  Under ASHA they fire at rung boundaries only — trials
+        in a slot table sit at *different* local epochs, so per-epoch
+        hooks would see no consistent epoch counter across execution
+        modes.  A rung-boundary ``{"hyper": ...}`` swap reaches later
+        rungs; ``state``/``active`` swaps at the search level are
+        refused — the stopping rule owns the mask.
     ckpt_dir:
         Search-level checkpoint directory (snapshot after every completed
-        unit); ``run(resume=True)`` continues from it.
+        unit — or, under ASHA, after every rung report); ``run(resume=
+        True)`` continues from it.
     """
 
     algorithm: Union[str, Callable[[Dict[str, Any]], TrialSpec]]
@@ -258,8 +515,9 @@ class ModelSearch:
     schedule: Union[str, CollectiveSchedule] = CollectiveSchedule.ALLREDUCE
     execution: str = "auto"
     seed: int = 0
-    early_stop: Optional[MedianStoppingRule] = None
+    early_stop: Union[MedianStoppingRule, AsyncSuccessiveHalving, None] = None
     rung_epochs: Optional[int] = None
+    callbacks: Sequence[Callable] = ()
     ckpt_dir: Optional[str] = None
     # observer called after every completed (and checkpointed) unit with
     # (units_done, trial_indices) — progress lines, fault injection in the
@@ -288,6 +546,15 @@ class ModelSearch:
                 else getattr(self.algorithm, "__name__", "custom"))
         if pipeline is not None:
             name = {"pipeline": pipeline.describe()}
+        if isinstance(self.early_stop, AsyncSuccessiveHalving):
+            rule = self.early_stop
+            rungs = rule.rung_epochs(self.num_epochs)
+            early = ["asha", rule.reduction_factor, rule.min_rounds,
+                     rule.slots, rule.epoch_budget]
+        else:
+            rungs = self._rungs()
+            early = (None if self.early_stop is None else
+                     [self.early_stop.min_rungs, self.early_stop.min_trials])
         return fingerprint({
             "algorithm": name, "configs": self.configs,
             "num_epochs": self.num_epochs,
@@ -296,47 +563,33 @@ class ModelSearch:
             "metric": self.metric,
             "schedule": CollectiveSchedule.parse(self.schedule).value,
             "execution": self.execution, "seed": self.seed,
-            "rungs": self._rungs(),
-            "early_stop": (None if self.early_stop is None else
-                           [self.early_stop.min_rungs,
-                            self.early_stop.min_trials]),
+            "rungs": rungs,
+            "early_stop": early,
             "data_shape": [int(table.num_rows), int(table.num_cols)],
         })
 
     # ------------------------------------------------------------------ #
-    def run(self, table: Any, resume: bool = False) -> SearchResult:
-        """Execute the search over ``table`` and return every trial.
+    def _prepare(self, table: Any) -> Tuple[DistributedRunner,
+                                            CollectiveSchedule,
+                                            List[np.ndarray], List[Any],
+                                            List[Any]]:
+        """Fold splits + execution layout, shared by every driver.
 
-        The table is split into folds; each unit's trials stream the
-        fold's train window for ``num_epochs`` epochs and are scored on
-        the fold's validation view with the configured schedule; scores
-        average over folds.  With ``resume=True`` (and ``ckpt_dir``),
-        completed units restore from the newest snapshot and execution
-        continues at the first unfinished unit.
+        Layout: keep the table's mesh whenever every train view can fill
+        at least one (shards x chunks) window, else fall back to an
+        emulated single shard.  MLI partitions are equal-sized by
+        construction, so each train window is trimmed (deterministically,
+        from the tail of the sorted index) to the largest multiple of
+        shards * chunks_per_epoch — at most shards*chunks - 1 rows per
+        fold sit out of training; validation views are never trimmed.
         """
-        from repro.pipeline import Pipeline
-
-        if isinstance(self.algorithm, Pipeline):
-            return self._run_pipeline(table, resume)
-
         schedule = CollectiveSchedule.parse(self.schedule)
-        builder = (self.algorithm if callable(self.algorithm)
-                   else _builtin_builder(self.algorithm, self.metric))
-        specs = [builder(dict(cfg)) for cfg in self.configs]
-
         n = table.num_rows
         if self.folds:
             splits = list(KFold(n, self.folds, self.seed).splits())
         else:
             splits = [holdout_split(n, self.val_fraction, self.seed)]
 
-        # layout: keep the table's mesh whenever every train view can
-        # fill at least one (shards x chunks) window, else fall back to an
-        # emulated single shard.  MLI partitions are equal-sized by
-        # construction, so each train window is trimmed (deterministically,
-        # from the tail of the sorted index) to the largest multiple of
-        # shards * chunks_per_epoch — at most shards*chunks - 1 rows per
-        # fold sit out of training; validation views are never trimmed.
         mesh, shards = table.mesh, table.num_shards
         unit = shards * self.chunks_per_epoch
         if any(len(tr) < unit for tr, _ in splits):
@@ -356,6 +609,39 @@ class ModelSearch:
                          for tr in train_idx]
         init_tables = [fold_view(table, tr) for tr in train_idx]
         val_tables = [fold_view(table, va) for _, va in splits]
+        return runner, schedule, train_windows, init_tables, val_tables
+
+    # ------------------------------------------------------------------ #
+    def run(self, table: Any, resume: bool = False) -> SearchResult:
+        """Execute the search over ``table`` and return every trial.
+
+        The table is split into folds; each unit's trials stream the
+        fold's train window for ``num_epochs`` epochs and are scored on
+        the fold's validation view with the configured schedule; scores
+        average over folds.  With ``resume=True`` (and ``ckpt_dir``),
+        completed units restore from the newest snapshot and execution
+        continues at the first unfinished unit.
+        """
+        from repro.pipeline import Pipeline
+
+        if isinstance(self.algorithm, Pipeline):
+            if isinstance(self.early_stop, AsyncSuccessiveHalving):
+                raise NotImplementedError(
+                    "ASHA over a Pipeline search is not supported yet — "
+                    "use a MedianStoppingRule, or search the estimator "
+                    "directly")
+            return self._run_pipeline(table, resume)
+
+        builder = (self.algorithm if callable(self.algorithm)
+                   else _builtin_builder(self.algorithm, self.metric))
+        specs = [builder(dict(cfg)) for cfg in self.configs]
+        (runner, schedule, train_windows,
+         init_tables, val_tables) = self._prepare(table)
+
+        if isinstance(self.early_stop, AsyncSuccessiveHalving):
+            return self._run_asha(table, specs, runner, schedule,
+                                  train_windows, init_tables, val_tables,
+                                  resume)
 
         groups = group_trials(specs, self.execution)
         rungs = self._rungs()
@@ -375,14 +661,16 @@ class ModelSearch:
         for unit_no, group in enumerate(groups):
             if unit_no < units_done:
                 continue  # restored from the snapshot
-            self._run_unit(runner, specs, group, train_windows,
-                           init_tables, val_tables, rungs, schedule,
-                           done_states, done_info)
+            halted = self._run_unit(runner, specs, group, train_windows,
+                                    init_tables, val_tables, rungs, schedule,
+                                    done_states, done_info, unit_no=unit_no)
             units_done = unit_no + 1
             if ckpt is not None:
                 ckpt.save(done_states, done_info, units_done)
             if self.unit_callback is not None:
                 self.unit_callback(units_done, list(group))
+            if halted:
+                break  # a callback raised EarlyStopException: end the search
 
         trials = [
             TrialResult(index=i, config=dict(self.configs[i]),
@@ -513,13 +801,16 @@ class ModelSearch:
             if unit_no < units_done:
                 continue  # restored from the snapshot
             windows, inits, vals = featurized(group[0])
-            self._run_unit(runner, specs, group, windows, inits, vals,
-                           rungs, schedule, done_states, done_info)
+            halted = self._run_unit(runner, specs, group, windows, inits,
+                                    vals, rungs, schedule, done_states,
+                                    done_info, unit_no=unit_no)
             units_done = unit_no + 1
             if ckpt is not None:
                 ckpt.save(done_states, done_info, units_done)
             if self.unit_callback is not None:
                 self.unit_callback(units_done, list(group))
+            if halted:
+                break  # a callback raised EarlyStopException: end the search
 
         trials = [
             TrialResult(index=i, config=dict(self.configs[i]),
@@ -540,9 +831,12 @@ class ModelSearch:
                   val_tables: List[Any], rungs: List[Tuple[int, int]],
                   schedule: CollectiveSchedule,
                   done_states: Dict[int, Any],
-                  done_info: Dict[int, Dict[str, Any]]) -> None:
+                  done_info: Dict[int, Dict[str, Any]], *,
+                  unit_no: int = 0) -> bool:
         """Advance one execution unit (a stacked group or a single trial)
-        through every rung of every fold, then record its trials."""
+        through every rung of every fold, then record its trials.
+        Returns True when a rung-boundary callback raised
+        :class:`EarlyStopException` (the driver ends the search)."""
         spec0 = specs[group[0]]
         k = len(group)
         hyper = tree_stack([specs[i].hyper for i in group])
@@ -552,6 +846,9 @@ class ModelSearch:
                    for w in train_windows]
         active = np.ones(k, dtype=bool)
         rung_scores: Dict[int, List[float]] = {i: [] for i in group}
+        halted = False
+        metric_name = self.metric or "score"
+        _, after_cbs = split_callbacks(self.callbacks)
 
         for rung_no, (start, end) in enumerate(rungs):
             if not active.any():
@@ -565,7 +862,7 @@ class ModelSearch:
                     stream, states[f], hyper, spec0.local_step, end,
                     combine=spec0.combine, update=spec0.update,
                     active=mask, chunks_per_epoch=self.chunks_per_epoch,
-                    start_epoch=start)
+                    start_epoch=start, callbacks=self.callbacks)
             fold_scores = np.stack([
                 np.asarray(spec0.score(val_tables[f], states[f], schedule),
                            np.float64).reshape(k)
@@ -575,6 +872,21 @@ class ModelSearch:
             for j, i in enumerate(group):
                 if active[j]:
                     rung_scores[i].append(float(scores_now[j]))
+            if after_cbs:
+                evals = tuple(
+                    EvalEntry(i, metric_name, float(scores_now[j]), True)
+                    for j, i in enumerate(group) if active[j])
+                env = CallbackEnv(
+                    epoch=end, begin_epoch=start, end_epoch=end,
+                    round=end * self.chunks_per_epoch, state=states[0],
+                    hyper=hyper, active=active.copy(), unit=unit_no,
+                    trial_ids=tuple(group), evals=evals)
+                try:
+                    swaps = fire_callbacks(after_cbs, env)
+                except EarlyStopException:
+                    halted = True
+                    break
+                hyper = self._apply_search_swaps(swaps, hyper)
             if self.early_stop is not None and rung_no < len(rungs) - 1:
                 self._apply_median_rule(group, active, rung_no, rung_scores,
                                         done_info)
@@ -585,8 +897,248 @@ class ModelSearch:
             done_info[i] = {
                 "score": rung_scores[i][-1],
                 "rung_scores": rung_scores[i],
-                "stopped": not bool(active[j]),
+                "stopped": not bool(active[j]) or
+                           (halted and len(rung_scores[i]) < len(rungs)),
             }
+        return halted
+
+    @staticmethod
+    def _apply_search_swaps(swaps: dict, hyper: Any) -> Any:
+        """Fold a rung-boundary callback's carry swaps into the search.
+        Only ``hyper`` may be steered here — the stopping rule owns the
+        active mask and the driver owns trial state."""
+        if not swaps:
+            return hyper
+        refused = set(swaps) - {"hyper"}
+        if refused:
+            raise ValueError(
+                f"search-level callbacks may only swap 'hyper' at rung "
+                f"boundaries, got {sorted(refused)} — state/active are "
+                f"owned by the search driver")
+        return swaps["hyper"]
+
+    # ------------------------------------------------------------------ #
+    # ASHA driver: slot table + pending-queue backfill (no cohort barrier)
+    # ------------------------------------------------------------------ #
+    def _run_asha(self, table: Any, specs: List[TrialSpec],
+                  runner: DistributedRunner, schedule: CollectiveSchedule,
+                  train_windows: List[np.ndarray], init_tables: List[Any],
+                  val_tables: List[Any], resume: bool) -> SearchResult:
+        """Execute the search under :class:`AsyncSuccessiveHalving`.
+
+        A fixed table of execution slots advances concurrently-resident
+        trials; whenever any trial reaches its next rung the segment ends,
+        the trial reports, and the decision is immediate — stopped/finished
+        trials free their slot, which the next ``admit`` backfills from the
+        pending queue (the ``serve.SlotScheduler`` move).  With stacked
+        execution the slot table IS the stacked carry: lane ``j`` hosts
+        slot ``j``'s trial, per-lane ``round_offsets`` give every admission
+        a private round origin, and the (K,) active mask covers freed lanes
+        — one compiled epoch serves the whole slot table throughout the
+        search, no recompiles.  Sequential execution drives the *same*
+        :class:`AshaScheduler` with one K=1 segment per occupied slot, so
+        both modes make the identical promotion sequence by construction.
+
+        With ``ckpt_dir`` every decision batch snapshots {terminal trials,
+        live slot states, scheduler control state} atomically; an
+        interrupted search resumes rung-for-rung bit-identically.
+        """
+        rule = self.early_stop
+        n = len(specs)
+        slots = min(rule.slots or 8, n)
+        # lanes must share one compiled structure; ragged stack keys fall
+        # back to sequential slots (same scheduler, same decisions)
+        stacked = (self.execution in ("auto", "stacked")
+                   and len({s.stack_key for s in specs}) == 1)
+        chunks = self.chunks_per_epoch
+        folds = len(init_tables)
+        metric_name = self.metric or "score"
+        _, after_cbs = split_callbacks(self.callbacks)
+        spec0 = specs[0]
+
+        ckpt = (SearchCheckpointer(self.ckpt_dir, self._fingerprint(table))
+                if self.ckpt_dir else None)
+        done_states: Dict[int, Any] = {}
+        done_info: Dict[int, Dict[str, Any]] = {}
+        units_done = 0
+        sched = AshaScheduler(rule, n, self.num_epochs, slots)
+        live: Dict[int, List[Any]] = {}
+
+        if resume:
+            if ckpt is None:
+                raise ValueError("resume=True requires ckpt_dir")
+            snap = ckpt.resume(lambda i: specs[i].init(init_tables[0]),
+                               with_live=True)
+            if snap is not None:
+                done_states, done_info, units_done, live, extra = snap
+                if not extra or "asha" not in extra:
+                    raise ValueError(
+                        "checkpoint carries no ASHA scheduler state — was it "
+                        "written by a median-rule search?")
+                sched = AshaScheduler.from_state_dict(
+                    rule, self.num_epochs, extra["asha"])
+
+        streams = [BatchIterator(_window_source(w), mesh=runner.mesh)
+                   for w in train_windows]
+
+        hyper = states = None
+        offsets = np.zeros(slots, np.int32)
+        active = np.zeros(slots, bool)
+        if stacked:
+            # lane tensors; on resume, occupied lanes restore from `live`
+            hyper = tree_stack([
+                specs[t].hyper if (t := sched.slots[j]) is not None
+                else specs[0].hyper for j in range(slots)])
+            states = [tree_stack([
+                live[t][f] if (t := sched.slots[j]) is not None
+                else specs[0].init(init_tables[f]) for j in range(slots)])
+                for f in range(folds)]
+            for j, t in sched.occupied():
+                offsets[j] = (sched.global_epoch - sched.local_epoch[t]) \
+                    * chunks
+                active[j] = True
+
+        halted = False
+        while not sched.finished():
+            for j, t in sched.admit():
+                if stacked:
+                    for f in range(folds):
+                        states[f] = _tree_set(states[f], j,
+                                              specs[t].init(init_tables[f]))
+                    hyper = _tree_set(hyper, j, specs[t].hyper)
+                    # admission at an epoch boundary: the offset is a
+                    # multiple of chunks, so the chunk phase (r % chunks)
+                    # matches a solo run exactly
+                    offsets[j] = sched.global_epoch * chunks
+                    active[j] = True
+                else:
+                    live[t] = [specs[t].init(init_tables[f])
+                               for f in range(folds)]
+            if not sched.occupied():
+                break  # budget exhausted with trials still pending
+            delta = sched.tick_size()
+            g0 = sched.global_epoch
+            if stacked:
+                mask = jnp.asarray(active)
+                offs = jnp.asarray(offsets)
+                for f, stream in enumerate(streams):
+                    states[f] = runner.run_stacked_epochs(
+                        stream, states[f], hyper, spec0.local_step,
+                        g0 + delta, combine=spec0.combine,
+                        update=spec0.update, active=mask,
+                        chunks_per_epoch=chunks, start_epoch=g0,
+                        round_offsets=offs)
+            else:
+                for j, t in sched.occupied():
+                    le = sched.local_epoch[t]
+                    spec = specs[t]
+                    h1 = tree_stack([spec.hyper])
+                    for f, stream in enumerate(streams):
+                        st = runner.run_stacked_epochs(
+                            stream, tree_stack([live[t][f]]), h1,
+                            spec.local_step, le + delta,
+                            combine=spec.combine, update=spec.update,
+                            chunks_per_epoch=chunks, start_epoch=le)
+                        live[t][f] = tree_unstack(st)[0]
+            sched.advance(delta)
+            due = sched.due()
+            if not due:
+                continue  # defensive: tick_size targets the nearest rung
+            if stacked:
+                fold_scores = np.stack([
+                    np.asarray(spec0.score(val_tables[f], states[f],
+                                           schedule),
+                               np.float64).reshape(slots)
+                    for f in range(folds)])
+                lane_scores = fold_scores.mean(axis=0)
+                due_scores = [float(lane_scores[j]) for j, _ in due]
+            else:
+                due_scores = []
+                for j, t in due:
+                    per_fold = [float(np.asarray(
+                        specs[t].score(val_tables[f],
+                                       tree_stack([live[t][f]]), schedule),
+                        np.float64).reshape(1)[0]) for f in range(folds)]
+                    due_scores.append(float(np.mean(per_fold)))
+
+            newly_terminal: List[int] = []
+            for (j, t), s in zip(due, due_scores):
+                if sched.report(t, s):
+                    continue  # promoted — keeps its slot
+                if stacked:
+                    done_states[t] = jax.tree.map(lambda x: x[j], states[0])
+                    active[j] = False
+                else:
+                    done_states[t] = live.pop(t)[0]
+                hist = _asha_history(sched, t)
+                done_info[t] = {
+                    "score": hist[-1],
+                    "rung_scores": hist,
+                    "stopped": sched.terminal[t] == "stopped",
+                }
+                newly_terminal.append(t)
+
+            if after_cbs:
+                evals = tuple(EvalEntry(t, metric_name, s, True)
+                              for (_, t), s in zip(due, due_scores))
+                env = CallbackEnv(
+                    epoch=sched.global_epoch, begin_epoch=0,
+                    end_epoch=self.num_epochs,
+                    round=sched.global_epoch * chunks,
+                    state=states[0] if stacked else None,
+                    hyper=hyper if stacked else None,
+                    active=active.copy() if stacked else None,
+                    unit=units_done, trial_ids=tuple(t for _, t in due),
+                    evals=evals)
+                try:
+                    swaps = fire_callbacks(after_cbs, env)
+                except EarlyStopException:
+                    halted = True
+                    swaps = {}
+                if swaps:
+                    if not stacked:
+                        raise ValueError(
+                            "hyper steering under ASHA requires stacked "
+                            "execution — sequential slots have no shared "
+                            "hyper tree")
+                    hyper = self._apply_search_swaps(swaps, hyper)
+
+            units_done += 1
+            if ckpt is not None:
+                if stacked:
+                    live = {t: [jax.tree.map(lambda x: x[j], states[f])
+                                for f in range(folds)]
+                            for j, t in sched.occupied()}
+                ckpt.save(done_states, done_info, units_done, live=live,
+                          extra={"asha": sched.state_dict()})
+            if self.unit_callback is not None:
+                self.unit_callback(len(done_info), newly_terminal)
+            if halted:
+                break
+
+        if halted:
+            # drain: running trials end as stopped with their last rung
+            # score; trials that never reached a rung are simply unreported
+            for j, t in sched.occupied():
+                hist = _asha_history(sched, t)
+                if not hist:
+                    continue
+                done_states[t] = (jax.tree.map(lambda x: x[j], states[0])
+                                  if stacked else live[t][0])
+                done_info[t] = {"score": hist[-1], "rung_scores": hist,
+                                "stopped": True}
+
+        trials = [
+            TrialResult(index=i, config=dict(self.configs[i]),
+                        score=done_info[i]["score"],
+                        rung_scores=list(done_info[i]["rung_scores"]),
+                        state=done_states[i],
+                        stopped=bool(done_info[i]["stopped"]),
+                        model=(specs[i].finalize(done_states[i])
+                               if specs[i].finalize else None))
+            for i in sorted(done_info)
+        ]
+        return SearchResult(trials=trials)
 
     def _apply_median_rule(self, group: List[int], active: np.ndarray,
                            rung_no: int,

@@ -155,33 +155,58 @@ class SearchCheckpointer:
         self.fingerprint = search_fingerprint
 
     def save(self, states: Dict[int, Any], info: Dict[int, Dict[str, Any]],
-             units_done: int) -> None:
+             units_done: int, *,
+             live: Optional[Dict[int, List[Any]]] = None,
+             extra: Optional[Dict[str, Any]] = None) -> None:
         """Snapshot all completed trials (cumulative) at ``units_done``.
 
         Each snapshot carries the *whole* completed set, so older steps are
         fully redundant — ``keep=2`` prunes them (the newest plus one
         published predecessor as insurance) instead of letting a long
         search accumulate O(units²) trial-state storage.
+
+        ``live`` (``{trial: [state per fold]}``) rides the snapshot
+        alongside the completed set: the mid-flight states of trials still
+        occupying execution slots, which an asynchronous search (ASHA)
+        needs to resume rung-for-rung instead of unit-for-unit.  ``extra``
+        is a JSON-able dict stored in the metadata — the slot scheduler's
+        control state lives here.  Both are atomic with the rest: one
+        file, one rename.
         """
         from repro.checkpoint.store import save_checkpoint
 
-        tree = {"states": {str(i): states[i] for i in sorted(states)}}
-        meta = {
+        tree: Dict[str, Any] = {
+            "states": {str(i): states[i] for i in sorted(states)}}
+        meta: Dict[str, Any] = {
             "fingerprint": self.fingerprint,
             "units_done": units_done,
             "trials": {str(i): info[i] for i in sorted(info)},
         }
+        if live is not None:
+            tree["live"] = {str(t): {str(f): fs
+                                     for f, fs in enumerate(live[t])}
+                            for t in sorted(live)}
+            meta["live_trials"] = sorted(live)
+            meta["num_folds"] = (len(next(iter(live.values())))
+                                 if live else 0)
+        if extra is not None:
+            meta["extra"] = extra
         save_checkpoint(self.ckpt_dir, units_done, tree, metadata=meta,
                         keep=2)
 
-    def resume(self, template_init: Callable[[int], Any]
-               ) -> Optional[Tuple[Dict[int, Any], Dict[int, Dict[str, Any]], int]]:
+    def resume(self, template_init: Callable[[int], Any], *,
+               with_live: bool = False) -> Optional[tuple]:
         """Restore the newest search snapshot, if any.
 
         ``template_init(trial_index) -> state pytree`` supplies the
         restore template for each completed trial (values ignored, only
         structure/shape/dtype matter).  Returns ``(states, info,
         units_done)`` or ``None`` when the directory holds no snapshot.
+
+        With ``with_live=True`` the return grows to ``(states, info,
+        units_done, live, extra)``: the in-flight trial states saved by
+        ``save(..., live=...)`` (``{}`` when the snapshot carried none)
+        and the extra metadata dict (``None`` when absent).
         """
         from repro.checkpoint.store import latest_step, load_metadata, \
             restore_checkpoint
@@ -195,8 +220,21 @@ class SearchCheckpointer:
                 f"checkpoint in {self.ckpt_dir} was written by a different "
                 f"search (fingerprint mismatch) — refusing to resume")
         indices = sorted(int(i) for i in meta["trials"])
-        template = {"states": {str(i): template_init(i) for i in indices}}
+        template: Dict[str, Any] = {
+            "states": {str(i): template_init(i) for i in indices}}
+        live_ids = [int(t) for t in meta.get("live_trials", [])]
+        num_folds = int(meta.get("num_folds", 0))
+        # the template must cover live entries whenever the snapshot has
+        # them — restore refuses checkpoints with unclaimed arrays
+        if "live_trials" in meta:
+            template["live"] = {str(t): {str(f): template_init(t)
+                                         for f in range(num_folds)}
+                                for t in live_ids}
         tree, _ = restore_checkpoint(self.ckpt_dir, template, step)
         states = {i: tree["states"][str(i)] for i in indices}
         info = {i: meta["trials"][str(i)] for i in indices}
-        return states, info, int(meta["units_done"])
+        if not with_live:
+            return states, info, int(meta["units_done"])
+        live = {t: [tree["live"][str(t)][str(f)] for f in range(num_folds)]
+                for t in live_ids} if "live" in tree else {}
+        return states, info, int(meta["units_done"]), live, meta.get("extra")

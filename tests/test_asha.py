@@ -1,0 +1,371 @@
+"""Asynchronous successive halving: scheduler invariants + the search driver.
+
+Three layers:
+
+  * :class:`AshaScheduler` unit behavior — slot-order decisions, FIFO
+    backfill, budget-gated admission, state_dict round-trip;
+  * hypothesis properties of random search traces — the rung ledger, slot
+    table, and terminal set stay consistent no matter the score sequence;
+  * the in-process :class:`ModelSearch` driver — backfilled trials, the
+    stacked/sequential promotion parity, rung-for-rung checkpoint resume,
+    and early-stop drain.
+
+The 8-device mesh determinism run (all three collective schedules,
+fp-equal scores) is the slow twin in ``test_tune_determinism.py`` /
+``test_tune_resume.py``; this file is tier-1 fast.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.numeric_table import MLNumericTable
+from repro.tune import (AshaScheduler, AsyncSuccessiveHalving, ModelSearch,
+                        grid)
+
+
+def mk_sched(n=6, epochs=9, slots=2, rf=3, min_rounds=1, budget=None):
+    rule = AsyncSuccessiveHalving(reduction_factor=rf, min_rounds=min_rounds,
+                                  slots=slots, epoch_budget=budget)
+    return AshaScheduler(rule, n, epochs, slots)
+
+
+# --------------------------------------------------------------------------- #
+# rule
+# --------------------------------------------------------------------------- #
+def test_rung_ladder_is_geometric_and_ends_at_budget():
+    rule = AsyncSuccessiveHalving(reduction_factor=3, min_rounds=1)
+    assert rule.rung_epochs(9) == [1, 3, 9]
+    assert rule.rung_epochs(10) == [1, 3, 9, 10]
+    assert rule.rung_epochs(2) == [1, 2]
+    # min_rounds at or past the budget: a single finish-line rung
+    assert AsyncSuccessiveHalving(min_rounds=8).rung_epochs(8) == [8]
+
+
+def test_rule_validates_parameters():
+    with pytest.raises(ValueError, match="reduction_factor"):
+        AsyncSuccessiveHalving(reduction_factor=1)
+    with pytest.raises(ValueError, match="min_rounds"):
+        AsyncSuccessiveHalving(min_rounds=0)
+    with pytest.raises(ValueError, match="slots"):
+        AsyncSuccessiveHalving(slots=0)
+
+
+def test_promotion_is_top_quantile_of_reports_so_far():
+    rule = AsyncSuccessiveHalving(reduction_factor=2)
+    # first report always promotes (it IS the top half of itself)
+    assert rule.promote(0.1, [0.1])
+    # median cut with rf=2
+    assert rule.promote(0.9, [0.5, 0.7, 0.9])
+    assert not rule.promote(0.5, [0.5, 0.7, 0.9])
+
+
+# --------------------------------------------------------------------------- #
+# scheduler transitions
+# --------------------------------------------------------------------------- #
+def test_admit_backfills_fifo_and_tracks_slots():
+    sched = mk_sched(n=5, slots=2)
+    assert sched.admit() == [(0, 0), (1, 1)]
+    assert sched.pending == [2, 3, 4]
+    sched.advance(1)
+    # trial 0 reports high (promoted), trial 1 low (stopped, slot freed)
+    assert sched.report(0, 1.0) is True
+    assert sched.report(1, 0.0) is False
+    assert sched.terminal[1] == "stopped"
+    # the freed slot backfills the FIFO head, not an arbitrary pending id
+    assert sched.admit() == [(1, 2)]
+
+
+def test_due_and_tick_follow_the_rung_ladder():
+    sched = mk_sched(n=2, epochs=9, slots=2)
+    sched.admit()
+    assert sched.tick_size() == 1            # first rung at epoch 1
+    sched.advance(1)
+    assert sched.due() == [(0, 0), (1, 1)]   # slot order
+    # equal scores: both sit at the quantile cut, both promote
+    assert sched.report(0, 1.0) is True
+    assert sched.report(1, 1.0) is True
+    assert sched.tick_size() == 2            # both promoted: rung 3 is 2 away
+    sched.advance(2)
+    sched.report(0, 1.0)
+    sched.report(1, 1.0)
+    assert sched.tick_size() == 6            # final rung at 9
+    sched.advance(6)
+    assert sched.report(0, 1.0) is False     # finish line frees the slot
+    assert sched.terminal[0] == "done"
+
+
+def test_mixed_rungs_tick_to_the_nearest_deadline():
+    """Slots sitting at different local epochs advance by the MINIMUM
+    remaining segment, so no trial overshoots its rung."""
+    sched = mk_sched(n=4, epochs=9, slots=2)
+    sched.admit()
+    sched.advance(1)
+    sched.report(0, 1.0)                     # promoted -> next rung at 3
+    sched.report(1, 0.0)                     # stopped
+    sched.admit()                            # trial 2 enters at local 0
+    # slot 0 needs 2 more epochs, slot 1 needs 1 -> tick is 1
+    assert sched.tick_size() == 1
+    sched.advance(1)
+    assert sched.due() == [(1, 2)]           # only the fresh trial is due
+
+
+def test_budget_gates_admission_but_not_running_trials():
+    sched = mk_sched(n=6, slots=2, budget=4)
+    sched.admit()
+    sched.advance(1)                         # 2 slot-epochs spent
+    assert sched.report(0, 1.0) is True      # promoted
+    assert sched.report(1, 0.0) is False     # stopped, slot freed
+    sched.advance(2)                         # trial 0 alone: meter hits 4
+    assert sched.exhausted()
+    assert sched.admit() == []               # budget spent: no backfill
+    assert not sched.finished()              # trial 0 still drains
+    assert sched.report(0, 1.0) is True      # rung-3 promote past the meter
+    sched.advance(6)
+    assert sched.report(0, 1.0) is False     # finish line
+    assert sched.finished()                  # slots empty, budget spent
+    assert sched.pending                     # trials 2..5 never admitted
+
+
+def test_state_dict_roundtrip_mid_rung():
+    sched = mk_sched(n=5, slots=2)
+    sched.admit()
+    sched.advance(1)
+    sched.report(0, 0.9)
+    sched.report(1, 0.2)
+    sched.admit()
+    rule = sched.rule
+    clone = AshaScheduler.from_state_dict(rule, 9, sched.state_dict())
+    assert clone.slots == sched.slots
+    assert clone.pending == sched.pending
+    assert clone.local_epoch == sched.local_epoch
+    assert clone.next_rung == sched.next_rung
+    assert clone.rung_scores == sched.rung_scores
+    assert clone.rung_trials == sched.rung_trials
+    assert clone.terminal == sched.terminal
+    assert clone.slot_epochs == sched.slot_epochs
+    assert clone.global_epoch == sched.global_epoch
+
+
+def test_from_state_dict_refuses_mismatched_ladder():
+    sched = mk_sched(rf=3)
+    state = sched.state_dict()
+    other = AsyncSuccessiveHalving(reduction_factor=2)
+    with pytest.raises(ValueError, match="rung ladder"):
+        AshaScheduler.from_state_dict(other, 9, state)
+
+
+# --------------------------------------------------------------------------- #
+# properties: random traces keep the invariants
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=12),
+    slots=st.integers(min_value=1, max_value=4),
+    epochs=st.integers(min_value=1, max_value=12),
+    rf=st.integers(min_value=2, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_random_trace_invariants(n, slots, epochs, rf, seed):
+    """Drive a scheduler with random scores to completion and check:
+    every trial terminates exactly once (no budget => whole pool runs);
+    rung populations shrink monotonically; per-rung promotion count
+    matches the rule applied report-by-report; local epochs of reports
+    equal the rung ladder; slots empty at the end."""
+    import random
+
+    rng = random.Random(seed)
+    rule = AsyncSuccessiveHalving(reduction_factor=rf, slots=slots)
+    sched = AshaScheduler(rule, n, epochs, slots)
+    rungs = sched.rungs
+    reports = []  # (trial, rung_index, score, promoted)
+    guard = 0
+    while not sched.finished():
+        guard += 1
+        assert guard < 10_000, "scheduler failed to converge"
+        sched.admit()
+        if not sched.occupied():
+            break
+        delta = sched.tick_size()
+        assert delta >= 1
+        sched.advance(delta)
+        for _, t in sched.due():
+            rung = sched.next_rung[t]
+            assert sched.local_epoch[t] == rungs[rung]
+            score = rng.random()
+            promoted = sched.report(t, score)
+            reports.append((t, rung, score, promoted))
+
+    assert sorted(sched.terminal) == list(range(n))
+    assert not sched.occupied() and not sched.pending
+    # rung populations shrink (never grow) up the ladder
+    pops = [len(r) for r in sched.rung_trials]
+    assert all(a >= b for a, b in zip(pops, pops[1:]))
+    assert pops[0] == n
+    # replay the ledger: each decision must match the rule at report time
+    so_far = [[] for _ in rungs]
+    for t, rung, score, promoted in reports:
+        so_far[rung].append(score)
+        want = (rung < len(rungs) - 1
+                and rule.promote(score, so_far[rung]))
+        assert promoted == want
+    # every terminal trial's last rung matches its status
+    for t, status in sched.terminal.items():
+        hist = [r for tr, r, _, _ in reports if tr == t]
+        assert status == ("done" if hist[-1] == len(rungs) - 1 else "stopped")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=10),
+    slots=st.integers(min_value=1, max_value=4),
+    budget=st.integers(min_value=1, max_value=30),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_budget_property(n, slots, budget, seed):
+    """With an epoch budget: admission stops once spent, running trials
+    drain to a decision, and total slot-epochs overshoot the budget by at
+    most slots * (the largest remaining segment)."""
+    import random
+
+    rng = random.Random(seed)
+    rule = AsyncSuccessiveHalving(reduction_factor=2, slots=slots,
+                                  epoch_budget=budget)
+    sched = AshaScheduler(rule, n, 8, slots)
+    admitted = set()
+    while not sched.finished():
+        for _, t in sched.admit():
+            assert sched.slot_epochs < budget  # never admit past the meter
+            admitted.add(t)
+        if not sched.occupied():
+            break
+        sched.advance(sched.tick_size())
+        for _, t in sched.due():
+            sched.report(t, rng.random())
+    assert set(sched.terminal) == admitted
+    # after the meter crosses the budget, only the <= slots occupants keep
+    # running, each for at most its full trial budget of 8 epochs
+    assert sched.slot_epochs <= budget + slots * 8
+
+
+# --------------------------------------------------------------------------- #
+# the driver (emulated partitions, in-process — fast)
+# --------------------------------------------------------------------------- #
+ROWS, D = 192, 4
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=D)
+    X = rng.normal(size=(ROWS, D)).astype(np.float32)
+    y = (X @ w > 0).astype(np.float32)
+    return MLNumericTable.from_numpy(np.column_stack([y, X]))
+
+
+CONFIGS = grid({"learning_rate": [0.02, 0.1, 0.5, 1.0], "l2": [0.0, 0.01]})
+
+
+def search(execution="auto", slots=4, ckpt=None, cb=None, budget=None,
+           callbacks=()):
+    return ModelSearch(
+        algorithm="logreg", configs=CONFIGS, num_epochs=9,
+        chunks_per_epoch=2, execution=execution,
+        early_stop=AsyncSuccessiveHalving(reduction_factor=3, min_rounds=1,
+                                          slots=slots, epoch_budget=budget),
+        callbacks=callbacks, ckpt_dir=ckpt, unit_callback=cb, seed=0)
+
+
+def test_asha_runs_whole_pool_with_backfill(table):
+    res = search().run(table)
+    assert len(res.trials) == len(CONFIGS)   # slots=4 < 8 trials: backfill
+    assert all(t.rung_scores for t in res.trials)
+    # stopped trials have strictly fewer rung looks than finishers
+    finished = [t for t in res.trials if not t.stopped]
+    stopped = [t for t in res.trials if t.stopped]
+    assert finished and stopped
+    assert all(len(t.rung_scores) == 3 for t in finished)
+    assert all(len(t.rung_scores) < 3 for t in stopped)
+    assert res.best.index in [t.index for t in finished]
+
+
+def test_asha_stacked_equals_sequential(table):
+    """The same host-side scheduler drives both executions: promotion
+    sequence identical, scores fp-equal."""
+    a = search("auto").run(table)
+    b = search("sequential").run(table)
+    assert [(t.index, len(t.rung_scores), t.stopped) for t in a.trials] == \
+           [(t.index, len(t.rung_scores), t.stopped) for t in b.trials]
+    for ta, tb in zip(a.trials, b.trials):
+        np.testing.assert_allclose(ta.rung_scores, tb.rung_scores, atol=1e-5)
+
+
+def test_asha_budget_limits_admission(table):
+    res = search(budget=12).run(table)       # 8 trials don't all fit
+    assert 0 < len(res.trials) < len(CONFIGS)
+
+
+def test_asha_resume_is_rung_for_rung(table, tmp_path):
+    """Kill at every decision batch in turn; each resume must reproduce
+    the uninterrupted search — same promotions, same scores, same final
+    weights."""
+    ref = search().run(table)
+
+    class Kill(Exception):
+        pass
+
+    kill_at = 1
+    while True:
+        ckpt = str(tmp_path / f"k{kill_at}")
+        calls = {"n": 0}
+
+        def killer(done, newly):
+            calls["n"] += 1
+            if calls["n"] == kill_at:
+                raise Kill()
+
+        try:
+            search(ckpt=ckpt, cb=killer).run(table)
+            break                            # ran to completion: done
+        except Kill:
+            pass
+        res = search(ckpt=ckpt).run(table, resume=True)
+        assert [(t.index, t.stopped) for t in res.trials] == \
+               [(t.index, t.stopped) for t in ref.trials]
+        for ta, tb in zip(ref.trials, res.trials):
+            np.testing.assert_allclose(ta.rung_scores, tb.rung_scores,
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.asarray(ta.state),
+                                       np.asarray(tb.state), atol=1e-6)
+        kill_at += 1
+    assert kill_at > 2                       # actually exercised mid-search
+
+
+def test_asha_search_early_stop_callback_drains(table):
+    """A rung-boundary early_stopping halt ends the search: already-scored
+    running trials are recorded as stopped, unadmitted ones are absent."""
+    from repro.tune import early_stopping
+
+    res = search(callbacks=(early_stopping(1),)).run(table)
+    assert 0 < len(res.trials) <= len(CONFIGS)
+    assert all(t.rung_scores for t in res.trials)
+
+
+def test_asha_rejects_pipeline_search(table):
+    from repro.features import Standardizer
+    from repro.pipeline import Pipeline
+
+    ms = ModelSearch(
+        algorithm=Pipeline([Standardizer()]), configs=CONFIGS,
+        early_stop=AsyncSuccessiveHalving())
+    with pytest.raises(NotImplementedError, match="ASHA"):
+        ms.run(table)
+
+
+def test_asha_fingerprint_separates_rules(table):
+    """A median-rule checkpoint must not resume an ASHA search: the rule
+    is part of the search fingerprint."""
+    med = ModelSearch(algorithm="logreg", configs=CONFIGS, num_epochs=9,
+                      chunks_per_epoch=2, seed=0)
+    asha = search()
+    assert med._fingerprint(table) != asha._fingerprint(table)

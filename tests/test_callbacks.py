@@ -1,0 +1,322 @@
+"""Callback protocol: dispatch, built-ins, and the runner/search hook points.
+
+The contract under test (``repro.tune.callback``): callbacks are host-side
+hooks fired between compiled epochs — ordering by ``cb.order``, the
+before/after split, carry swaps folding into the env later callbacks see,
+:class:`EarlyStopException` ending the loop with the tail checkpoint still
+written, and replay idempotence (a resumed run re-firing boundaries it
+already fired must not change what observers recorded).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.runner import CheckpointPolicy, DistributedRunner
+from repro.data import BatchIterator
+from repro.eval.metrics import MetricHistory
+from repro.tune.callback import (CallbackEnv, EarlyStopException, EvalEntry,
+                                 early_stopping, fire_callbacks,
+                                 hyper_schedule, record_evaluation,
+                                 split_callbacks)
+
+
+def env_with(evals=(), **kw):
+    return CallbackEnv(epoch=kw.pop("epoch", 1), evals=tuple(evals), **kw)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch: ordering, before/after split, swap folding
+# --------------------------------------------------------------------------- #
+def test_split_orders_and_partitions():
+    def mk(name, order=10, before=False):
+        def cb(env):
+            return None
+        cb.__name__ = name
+        cb.order = order
+        cb.before_epoch = before
+        return cb
+
+    a = mk("a", order=30)
+    b = mk("b", order=0)
+    c = mk("c")                       # default order 10, after
+    d = mk("d", order=5, before=True)
+    e = mk("e", order=1, before=True)
+    before, after = split_callbacks([a, b, c, d, e])
+    assert [cb.__name__ for cb in before] == ["e", "d"]
+    assert [cb.__name__ for cb in after] == ["b", "c", "a"]
+
+
+def test_equal_order_keeps_registration_order():
+    seen = []
+
+    def mk(tag):
+        def cb(env):
+            seen.append(tag)
+        return cb  # no .order attr: both default to 10
+
+    _, after = split_callbacks([mk("first"), mk("second")])
+    fire_callbacks(after, env_with())
+    assert seen == ["first", "second"]
+
+
+def test_fire_folds_swaps_into_later_envs():
+    def steer(env):
+        return {"hyper": {"lr": 99.0}}
+
+    seen = {}
+
+    def observe(env):
+        seen["hyper"] = env.hyper
+
+    steer.order = 0
+    observe.order = 10
+    swaps = fire_callbacks((steer, observe), env_with(hyper={"lr": 1.0}))
+    assert swaps == {"hyper": {"lr": 99.0}}
+    assert seen["hyper"] == {"lr": 99.0}  # later callback saw the swap
+
+
+def test_fire_refuses_unknown_swap_keys():
+    def bad(env):
+        return {"optimizer": object()}
+
+    with pytest.raises(ValueError, match="unknown carry keys"):
+        fire_callbacks((bad,), env_with())
+
+
+# --------------------------------------------------------------------------- #
+# built-ins
+# --------------------------------------------------------------------------- #
+def test_early_stopping_counts_stalls_and_raises():
+    cb = early_stopping(stopping_rounds=2)
+    cb(env_with([EvalEntry(0, "acc", 0.5)], epoch=1))      # baseline
+    cb(env_with([EvalEntry(0, "acc", 0.7)], epoch=2))      # improves
+    cb(env_with([EvalEntry(0, "acc", 0.7)], epoch=3))      # stall 1
+    with pytest.raises(EarlyStopException) as err:
+        cb(env_with([EvalEntry(0, "acc", 0.6)], epoch=4))  # stall 2
+    assert err.value.epoch == 4
+    assert cb.best[(0, "acc")] == 0.7
+
+
+def test_early_stopping_direction_and_min_delta():
+    # lower-is-better metric: decreasing values are improvements
+    cb = early_stopping(stopping_rounds=1, min_delta=0.05)
+    cb(env_with([EvalEntry(0, "loss", 1.0, False)], epoch=1))
+    cb(env_with([EvalEntry(0, "loss", 0.5, False)], epoch=2))   # big gain
+    with pytest.raises(EarlyStopException):
+        # a 0.01 gain is below min_delta — counts as a stall
+        cb(env_with([EvalEntry(0, "loss", 0.49, False)], epoch=3))
+    # the sub-delta gain still updated the tracked best
+    assert cb.best[(0, "loss")] == 0.49
+
+
+def test_early_stopping_ignores_hookpoints_without_evals():
+    cb = early_stopping(stopping_rounds=1)
+    cb(env_with([EvalEntry(0, "acc", 0.5)], epoch=1))
+    for epoch in range(2, 10):
+        cb(env_with([], epoch=epoch))  # no evidence — no stall counted
+    cb(env_with([EvalEntry(0, "acc", 0.9)], epoch=10))
+
+
+def test_early_stopping_any_trial_improvement_resets_the_stall():
+    cb = early_stopping(stopping_rounds=2)
+    both = [EvalEntry(0, "acc", 0.5), EvalEntry(1, "acc", 0.4)]
+    cb(env_with(both, epoch=1))
+    # trial 0 stalls but trial 1 improves: not a stalled hook point
+    cb(env_with([EvalEntry(0, "acc", 0.5), EvalEntry(1, "acc", 0.6)], epoch=2))
+    cb(env_with(both, epoch=3))
+    with pytest.raises(EarlyStopException):
+        cb(env_with(both, epoch=4))
+
+
+def test_record_evaluation_overwrites_on_replay():
+    hist = MetricHistory()
+    cb = record_evaluation(hist)
+    cb(env_with([EvalEntry(0, "acc", 0.5)], epoch=1))
+    cb(env_with([EvalEntry(0, "acc", 0.8)], epoch=2))
+    before = hist.to_dict()
+    # a resumed run replays the epoch-1 boundary it already recorded
+    cb(env_with([EvalEntry(0, "acc", 0.5)], epoch=1))
+    assert hist.to_dict() == before
+    assert hist.series(0, "acc") == [(1, 0.5), (2, 0.8)]
+    assert hist.last(0, "acc") == 0.8
+
+
+def test_record_evaluation_requires_a_recorder():
+    with pytest.raises(TypeError, match="record"):
+        record_evaluation([])
+
+
+def test_hyper_schedule_swaps_param_and_checks_names():
+    cb = hyper_schedule("lr", lambda e: 0.1 * (e + 1))
+    assert cb.before_epoch and cb.order == 0
+    out = cb(env_with(hyper={"lr": jnp.full((3,), 9.0)}, epoch=4))
+    np.testing.assert_allclose(np.asarray(out["hyper"]["lr"]),
+                               np.full(3, 0.5, np.float32))
+    assert cb(env_with(hyper=None)) is None        # plain loops: no-op
+    with pytest.raises(KeyError, match="momentum"):
+        hyper_schedule("momentum", lambda e: 0.0)(
+            env_with(hyper={"lr": jnp.ones(())}))
+
+
+# --------------------------------------------------------------------------- #
+# runner hook points (emulated partitions — host-side behavior under test)
+# --------------------------------------------------------------------------- #
+def _const_stream(X):
+    return BatchIterator(lambda step: {"data": X})
+
+
+def test_run_epochs_firing_order_and_epoch_counters(rng):
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+    fired = []
+
+    def before(env):
+        fired.append(("before", env.epoch))
+    before.before_epoch = True
+
+    def after(env):
+        fired.append(("after", env.epoch))
+
+    runner.run_epochs(_const_stream(X), jnp.zeros(2),
+                      lambda b, s, r: s + jnp.mean(b, 0), 3,
+                      callbacks=[before, after])
+    assert fired == [("before", 0), ("after", 1), ("before", 1), ("after", 2),
+                     ("before", 2), ("after", 3)]
+
+
+def test_run_epochs_early_stop_returns_partial_state_and_tail_checkpoint(
+        rng, tmp_path):
+    from repro.checkpoint import latest_step
+
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+    step = lambda b, s, r: s + jnp.mean(b, 0)
+
+    def stop_after_two(env):
+        if env.epoch >= 2:
+            raise EarlyStopException(env.epoch, "test stop")
+
+    want = runner.run_epochs(_const_stream(X), jnp.zeros(2), step, 2)
+    got = runner.run_epochs(
+        _const_stream(X), jnp.zeros(2), step, 10,
+        callbacks=[stop_after_two],
+        checkpoint=CheckpointPolicy(str(tmp_path), every_epochs=100))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the tail snapshot lands at the stop epoch, not the planned horizon
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_run_epochs_eval_fn_feeds_callbacks(rng):
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+    hist = MetricHistory()
+    runner.run_epochs(
+        _const_stream(X), jnp.zeros(2),
+        lambda b, s, r: s + jnp.mean(b, 0), 3,
+        callbacks=[record_evaluation(hist)],
+        eval_fn=lambda state, epoch: [EvalEntry(0, "norm",
+                                                float(jnp.sum(state ** 2)))])
+    assert [e for e, _ in hist.series(0, "norm")] == [1, 2, 3]
+    # the recorded trajectory is monotone for this accumulating step
+    values = [v for _, v in hist.series(0, "norm")]
+    assert values == sorted(values)
+
+
+def test_run_epochs_early_stopping_on_plateau_metric(rng):
+    """End-to-end built-in: an eval that plateaus after epoch 2 trips
+    early_stopping(2) at epoch 4 of a 10-epoch budget."""
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+    fired = []
+
+    def plateau_eval(state, epoch):
+        fired.append(epoch)
+        return [EvalEntry(0, "score", float(min(epoch, 2)))]
+
+    runner.run_epochs(_const_stream(X), jnp.zeros(2),
+                      lambda b, s, r: s + jnp.mean(b, 0), 10,
+                      callbacks=[early_stopping(2)], eval_fn=plateau_eval)
+    assert fired == [1, 2, 3, 4]  # baseline, improve, stall, stall -> stop
+
+
+def test_run_epochs_hyper_swap_requires_hyper_tree(rng):
+    """run_epochs has no hyper carry: a callback returning a hyper swap is
+    refused loudly instead of silently dropped."""
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+
+    def bad(env):
+        return {"hyper": {"lr": 0.0}}
+
+    with pytest.raises(ValueError, match="hyper"):
+        runner.run_epochs(_const_stream(X), jnp.zeros(2),
+                          lambda b, s, r: s + jnp.mean(b, 0), 2,
+                          callbacks=[bad])
+
+
+def test_run_epochs_state_swap_changes_the_carry(rng):
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+    step = lambda b, s, r: s + jnp.mean(b, 0)
+
+    def reset_at_two(env):
+        if env.epoch == 2:
+            return {"state": jnp.zeros(2)}
+    # resetting the carry at epoch 2 of 4 == running the last 2 epochs
+    got = runner.run_epochs(_const_stream(X), jnp.zeros(2), step, 4,
+                            callbacks=[reset_at_two])
+    want = runner.run_epochs(
+        BatchIterator(lambda step_no: {"data": X}, start_step=2),
+        jnp.zeros(2), step, 4, start_epoch=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# stacked hook points: the shim presents trial-level envs
+# --------------------------------------------------------------------------- #
+def test_stacked_hyper_schedule_steers_all_lanes(rng):
+    """lr-schedule fn(epoch)=0 freezes every lane: the stacked loop with
+    the schedule must end exactly at its initial states."""
+    from repro.tune.trials import tree_stack
+
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+
+    def trial_step(block, s, r, hyper):
+        return hyper["lr"] * jnp.mean(block, 0) + 0 * s
+
+    def trial_update(s, c, r, hyper):
+        return s + c
+
+    init = tree_stack([jnp.zeros(2), jnp.ones(2)])
+    hyper = tree_stack([{"lr": jnp.float32(1.0)}, {"lr": jnp.float32(2.0)}])
+    frozen = runner.run_stacked_epochs(
+        _const_stream(X), init, hyper, trial_step, 3, update=trial_update,
+        callbacks=[hyper_schedule("lr", lambda e: 0.0)])
+    np.testing.assert_array_equal(np.asarray(frozen), np.asarray(init))
+    # without the schedule the states move — the schedule was load-bearing
+    moved = runner.run_stacked_epochs(
+        _const_stream(X), init, hyper, trial_step, 3, update=trial_update)
+    assert not np.allclose(np.asarray(moved), np.asarray(init))
+
+
+def test_stacked_callbacks_see_active_mask_and_stop(rng):
+    from repro.tune.trials import tree_stack
+
+    X = np.asarray(rng.normal(size=(8, 2)), np.float32)
+    runner = DistributedRunner(num_shards=2)
+    seen = []
+
+    def watch(env):
+        seen.append((env.epoch, tuple(np.asarray(env.active))))
+        if env.epoch == 2:
+            raise EarlyStopException(env.epoch, "enough")
+
+    init = tree_stack([jnp.zeros(2), jnp.ones(2)])
+    hyper = tree_stack([{"lr": jnp.float32(1.0)}, {"lr": jnp.float32(1.0)}])
+    runner.run_stacked_epochs(
+        _const_stream(X), init, hyper,
+        lambda b, s, r, h: h["lr"] * jnp.mean(b, 0) + 0 * s, 5,
+        update=lambda s, c, r, h: s + c,
+        active=jnp.asarray([True, False]), callbacks=[watch])
+    assert seen == [(1, (True, False)), (2, (True, False))]

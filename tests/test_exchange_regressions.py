@@ -1,0 +1,193 @@
+"""Regressions for the SSP exchange fixes (ISSUE 7).
+
+Two host-side bugs in :class:`repro.core.exchange.ParamStore`, both found
+by the chaos harness and both reproducible without jax:
+
+  * ``wait_clock`` used a FIXED deadline: a slow-but-alive straggler that
+    kept publishing — but needed longer than ``timeout`` to cover the whole
+    clock gap — was declared dead mid-progress.  The deadline must reset on
+    every observed clock advance, so ``PeerTimeout`` fires only after
+    ``timeout`` seconds of *zero* progress (a corpse).
+  * ``read_at_most`` raced the peer's own ``keep=`` pruning: a round listed
+    by ``rounds()`` could be deleted before ``read()`` opened it, escaping
+    as ``FileNotFoundError`` between rounds.  A pruned miss is retried
+    against a fresh scan; ``None`` only when nothing ≤ the bound remains.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.exchange import ParamStore, PeerTimeout
+
+
+def tree(v: float):
+    return {"w": np.full(4, v, np.float32)}
+
+
+# --------------------------------------------------------------------------- #
+# wait_clock: straggler vs corpse
+# --------------------------------------------------------------------------- #
+def test_wait_clock_waits_out_slow_but_alive_straggler(tmp_path):
+    """Peer publishes one round every ~0.12s with timeout=0.3: each single
+    gap is inside the timeout but the TOTAL distance to the target clock is
+    far beyond it.  Under the old fixed deadline this raised PeerTimeout
+    mid-progress; with the per-advance reset the straggler is waited out."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2, timeout=0.3, poll=0.005)
+    b = ParamStore(root, 1, 2, timeout=0.3, poll=0.005)
+    target = 8  # 8 * 0.12s ≈ 1s of publishing >> the 0.3s timeout
+
+    def straggle():
+        for r in range(target):
+            time.sleep(0.12)
+            b.publish(r, tree(r))
+
+    t = threading.Thread(target=straggle)
+    t.start()
+    try:
+        assert a.wait_clock(1, target) >= target
+    finally:
+        t.join()
+
+
+def test_wait_clock_still_times_out_on_frozen_clock(tmp_path):
+    """A corpse — clock frozen short of the target — must still raise
+    after ~timeout seconds of zero progress (progress made BEFORE the
+    freeze must not extend the grace period indefinitely)."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2, timeout=0.25, poll=0.005)
+    b = ParamStore(root, 1, 2)
+    b.publish(0, tree(0.0))
+    b.publish(1, tree(1.0))  # clock = 2, then silence
+    t0 = time.monotonic()
+    with pytest.raises(PeerTimeout) as err:
+        a.wait_clock(1, 5)
+    elapsed = time.monotonic() - t0
+    assert err.value.peer == 1
+    assert 0.2 <= elapsed < 2.0  # one timeout window, not poll-forever
+
+
+def test_wait_clock_timeout_measures_silence_not_total_wait(tmp_path):
+    """Progress at t≈0.15 then silence: the total wait exceeds one timeout
+    window, but the raise must come ~timeout after the LAST advance, and
+    the error must name the still-missing round."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2, timeout=0.3, poll=0.005)
+    b = ParamStore(root, 1, 2)
+    b.publish(0, tree(0.0))
+
+    def one_late_publish():
+        time.sleep(0.15)
+        b.publish(1, tree(1.0))  # clock 1 -> 2, then a corpse
+
+    t = threading.Thread(target=one_late_publish)
+    t.start()
+    t0 = time.monotonic()
+    with pytest.raises(PeerTimeout):
+        a.wait_clock(1, 4)
+    elapsed = time.monotonic() - t0
+    t.join()
+    # deadline reset at the t≈0.15 advance: total ≈ 0.15 + 0.3, clearly
+    # more than one bare window and far less than two-from-start
+    assert elapsed >= 0.3
+
+
+def test_wait_clock_returns_early_for_departed_peer(tmp_path):
+    """LEFT markers still short-circuit the wait (no regression): a
+    graceful departure returns the final clock instead of timing out."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2, timeout=5.0, poll=0.005)
+    b = ParamStore(root, 1, 2)
+    b.publish(0, tree(0.0))
+    b.mark_left()
+    t0 = time.monotonic()
+    assert a.wait_clock(1, 100) == 1
+    assert time.monotonic() - t0 < 1.0
+
+
+# --------------------------------------------------------------------------- #
+# read_at_most: racing the peer's pruning
+# --------------------------------------------------------------------------- #
+def test_read_at_most_retries_when_listed_round_is_pruned(tmp_path):
+    """Injected race: the first scan lists rounds {0..3}, then round 3's
+    file vanishes (peer pruning) before the read.  The old code let the
+    FileNotFoundError escape; now the rescan falls back to the freshest
+    survivor ≤ the bound."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2)
+    b = ParamStore(root, 1, 2)
+    for r in range(4):
+        b.publish(r, tree(float(r)))
+
+    real_rounds = a.rounds
+    state = {"pruned": False}
+
+    def racing_rounds(host):
+        out = real_rounds(host)
+        if not state["pruned"]:
+            # delete the newest listed file AFTER the scan, BEFORE the read
+            state["pruned"] = True
+            os.unlink(os.path.join(root, "h1", f"step_{out[-1]}.npz"))
+        return out
+
+    a.rounds = racing_rounds  # inject the race on the reader side
+    got = a.read_at_most(1, 3, tree(0.0))
+    assert got is not None
+    restored, r = got
+    assert r == 2  # freshest survivor within the bound
+    np.testing.assert_allclose(restored["w"], np.full(4, 2.0, np.float32))
+
+
+def test_read_at_most_returns_none_when_everything_pruned(tmp_path):
+    """When the rescan shows nothing ≤ the bound remains, the answer is
+    None — not an exception and not an infinite retry loop."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2)
+    b = ParamStore(root, 1, 2)
+    for r in range(3):
+        b.publish(r, tree(float(r)))
+
+    real_rounds = a.rounds
+
+    def racing_rounds(host):
+        out = real_rounds(host)
+        # every listed round vanishes before the read, every time
+        for rr in out:
+            f = os.path.join(root, "h1", f"step_{rr}.npz")
+            if os.path.exists(f):
+                os.unlink(f)
+        return out
+
+    a.rounds = racing_rounds
+    assert a.read_at_most(1, 2, tree(0.0)) is None
+
+
+def test_read_at_most_survives_repeated_pruning_races(tmp_path):
+    """Several consecutive scans each lose their newest listed round to
+    pruning; the retry loop must keep falling back (never re-targeting a
+    deleted round) and land on the oldest survivor."""
+    root = str(tmp_path)
+    a = ParamStore(root, 0, 2)
+    b = ParamStore(root, 1, 2)
+    for r in range(5):
+        b.publish(r, tree(float(r)))
+
+    real_rounds = a.rounds
+    state = {"races": 0}
+
+    def racing_rounds(host):
+        out = real_rounds(host)
+        if state["races"] < 3 and len(out) > 1:
+            state["races"] += 1
+            os.unlink(os.path.join(root, "h1", f"step_{out[-1]}.npz"))
+        return out
+
+    a.rounds = racing_rounds
+    got = a.read_at_most(1, 4, tree(0.0))
+    assert got is not None
+    restored, r = got
+    assert r == 1 and state["races"] == 3
+    np.testing.assert_allclose(restored["w"], np.full(4, 1.0, np.float32))

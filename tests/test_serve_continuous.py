@@ -88,6 +88,54 @@ def test_scheduler_holds_future_arrivals():
     assert early.admitted_at == 1.0 and late.admitted_at == 6.0
 
 
+def test_scheduler_burst_release_is_arrival_fifo():
+    """Regression: a burst trace submitted out of arrival order used to be
+    released in *submission* order, letting a later-arriving request jump
+    the queue when one ``release(now)`` covered several arrivals.  Release
+    order must be ``(arrival, submission seq)`` — and stable for equal
+    arrivals."""
+    sched = SlotScheduler(1)
+    arrivals = [3.0, 1.0, 2.0, 1.0, 0.0]             # submitted out of order
+    reqs = [Request(prompt=np.zeros(4, np.int32), arrival=a)
+            for a in arrivals]
+    for r in reqs:
+        sched.submit(r)
+    # one release covering the whole burst: strict arrival order, with the
+    # two arrival=1.0 requests kept in submission order (seq 1 before 3)
+    order = []
+    now = 10.0
+    while sched.queued() or sched.busy:
+        for slot, r in sched.admit(now):
+            order.append(r)
+            sched.retire(slot, now)
+        now += 1.0
+    assert order == [reqs[4], reqs[1], reqs[3], reqs[2], reqs[0]]
+    assert [r.seq for r in order] == [4, 1, 3, 2, 0]
+
+
+def test_scheduler_incremental_release_matches_burst_release():
+    """The same trace released in many small ``admit`` calls (clock moving
+    past each arrival) must admit in the same global order as one big
+    release — FIFO cannot depend on the polling cadence."""
+    arrivals = [0.5, 2.5, 1.5, 2.5, 0.5, 3.5]
+
+    def drain(step):
+        sched = SlotScheduler(1)
+        reqs = [Request(prompt=np.zeros(4, np.int32), arrival=a)
+                for a in arrivals]
+        for r in reqs:
+            sched.submit(r)
+        order, now = [], 0.0
+        while sched.has_work():
+            for slot, r in sched.admit(now):
+                order.append(r.seq)
+                sched.retire(slot, now)
+            now += step
+        return order
+
+    assert drain(0.25) == drain(100.0)
+
+
 def test_engine_rejects_future_arrivals_on_frozen_clock(qwen_engine):
     req = Request(prompt=np.zeros(4, np.int32), max_new_tokens=1, arrival=9.9)
     with pytest.raises(ValueError, match="advancing clock"):
