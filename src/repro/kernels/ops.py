@@ -17,11 +17,12 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.kernels.logreg_grad import logreg_grad_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_scan
 
-__all__ = ["flash_attention", "kmeans_assign", "logreg_grad", "rmsnorm",
-           "ssd_chunk_scan", "on_tpu"]
+__all__ = ["flash_attention", "kmeans_assign", "logreg_grad", "quant_matmul",
+           "quantize_rows", "rmsnorm", "ssd_chunk_scan", "on_tpu"]
 
 
 @functools.lru_cache(None)
@@ -79,6 +80,48 @@ def logreg_grad(X, y, w, *, block_rows: int = 256, block_cols: int = 512) -> jnp
         return ref.logreg_grad_ref(X, y, w)
     return logreg_grad_pallas(X, y, w, block_rows=br, block_cols=bc,
                               interpret=_interp())
+
+
+def quantize_rows(x):
+    """Symmetric per-row int8 quantization: returns ``(xq, scale)`` with
+    ``xq`` int8 of ``x.shape`` and ``scale`` fp32 of ``x.shape[:-1]`` such
+    that ``xq * scale[..., None] ≈ x``.  The ``1e-8`` floor keeps all-zero
+    rows from dividing by zero (they quantize to zeros with a tiny scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-8
+    xq = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return xq, scale
+
+
+def quant_matmul(xq, x_scale, wq, w_scale, *, block_m: int = 256,
+                 block_n: int = 256, block_k: int = 512) -> jnp.ndarray:
+    """Quantized int8×int8 matmul with fp32 dequantizing epilogue.
+    xq: (M, K) int8, x_scale: (M,), wq: (K, N) int8, w_scale: (N,) → (M, N)
+    fp32 equal to ``(xq·wq) * x_scale[:,None] * w_scale[None,:]``.
+
+    On TPU with tilable shapes this is the Pallas kernel (int32 MXU
+    accumulation, bit-exact vs ``ref.quant_matmul_ref``).  Everywhere else —
+    including the CPU serving path — the dequantized product is taken in
+    fp32, which is mathematically the same sum and exact as long as every
+    int32 partial fits an fp32 mantissa (K·127² < 2²⁴, i.e. K ≲ 1000; true
+    for every config in this repo).  We do NOT run the interpret-mode kernel
+    here: per-element Pallas interpretation is orders of magnitude too slow
+    for a decode hot loop (same policy as ``use_flash_kernel`` off-TPU)."""
+    M, K = xq.shape
+    K2, N = wq.shape
+    if K != K2 or x_scale.shape != (M,) or w_scale.shape != (N,):
+        raise ValueError(f"shape mismatch: xq{xq.shape} wq{wq.shape} "
+                         f"x_scale{x_scale.shape} w_scale{w_scale.shape}")
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    if on_tpu() and not (M % bm or N % bn or K % bk):
+        return quant_matmul_pallas(xq, x_scale, wq, w_scale,
+                                   block_m=bm, block_n=bn, block_k=bk)
+    acc = jnp.dot(xq.astype(jnp.float32), wq.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * x_scale.astype(jnp.float32)[:, None]
+            * w_scale.astype(jnp.float32)[None, :])
 
 
 def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 64) -> jnp.ndarray:

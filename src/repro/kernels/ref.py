@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["flash_attention_ref", "kmeans_assign_ref", "logreg_grad_ref",
-           "rmsnorm_ref", "ssd_chunk_scan_ref"]
+           "quant_matmul_ref", "rmsnorm_ref", "ssd_chunk_scan_ref"]
 
 NEG_INF = -2.0e38
 
@@ -67,6 +67,25 @@ def kmeans_assign_ref(X: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
     Cf = C.astype(jnp.float32)
     score = jnp.sum(Cf * Cf, axis=1)[None, :] - 2.0 * (Xf @ Cf.T)
     return jnp.argmin(score, axis=1).astype(jnp.int32)
+
+
+def quant_matmul_ref(xq: jnp.ndarray, x_scale: jnp.ndarray,
+                     wq: jnp.ndarray, w_scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric int8×int8 matmul with per-row/per-column scales — the
+    *exact* oracle for the Pallas quantized-matmul kernel.
+
+    xq: (M, K) int8, x_scale: (M,) fp32 (row scales of the activation);
+    wq: (K, N) int8, w_scale: (N,) fp32 (output-channel scales).  Returns
+    ``(xq · wq) * x_scale[:, None] * w_scale[None, :]`` in fp32.  The
+    accumulation is *integer* (int32, exact — addition order cannot change
+    the sum), and the epilogue multiplies in the same operand order as the
+    kernel, so the kernel must match this bitwise, not merely to fp
+    tolerance (asserted in ``tests/test_quant_kernels.py``)."""
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * x_scale.astype(jnp.float32)[:, None]
+            * w_scale.astype(jnp.float32)[None, :])
 
 
 def logreg_grad_ref(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

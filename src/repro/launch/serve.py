@@ -48,7 +48,12 @@ def arrival_trace(kind: str, n: int, rate: float, seed: int) -> np.ndarray:
     ``all-at-once`` (rate<=0 or kind 'none') releases everything at t=0;
     ``poisson`` draws exponential inter-arrivals at ``rate`` req/s;
     ``uniform`` spaces arrivals evenly at the same mean rate; ``burst``
-    releases half at t=0 and half one mean-service-time later.
+    releases half at t=0 and half at a *fixed* ``1/rate`` seconds — one
+    mean inter-arrival gap, independent of ``n``.  (The old offset was
+    ``0.5/rate * n``: it grew with the trace length, so large traces
+    degenerated into two disjoint static batches that never overlapped in
+    the slot table and inflated the continuous-batching backfill win.
+    Pinned by ``tests/test_arrival_traces.py``.)
     """
     if kind == "none" or rate <= 0:
         return np.zeros(n)
@@ -59,7 +64,7 @@ def arrival_trace(kind: str, n: int, rate: float, seed: int) -> np.ndarray:
         return np.arange(n) / rate
     if kind == "burst":
         half = (n + 1) // 2
-        return np.concatenate([np.zeros(half), np.full(n - half, 0.5 / rate * n)])
+        return np.concatenate([np.zeros(half), np.full(n - half, 1.0 / rate)])
     raise ValueError(f"unknown arrival kind {kind!r}")
 
 
@@ -67,31 +72,97 @@ def arrival_trace(kind: str, n: int, rate: float, seed: int) -> np.ndarray:
 # --engine lm
 # --------------------------------------------------------------------------- #
 def run_lm(args) -> dict:
+    import dataclasses as _dc
+
     from repro.launch.mesh import host_serving_setup
     from repro.models.transformer import init_model
-    from repro.serve import Request, ServeEngine, SlotScheduler
+    from repro.serve import (QueueAutoscaler, ReplicaRouter, Request,
+                             ServeEngine, SlotScheduler)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encoder_layers or cfg.vision_tokens:
         print(f"note: {cfg.name} frontend is stubbed; serving text-only path")
+    if args.quantize != "none":
+        cfg = _dc.replace(cfg, quantize=args.quantize)
     params, axes = init_model(jax.random.PRNGKey(args.seed), cfg)
+    fleet = args.replicas > 0
     mesh = rules = param_axes = None
     if args.mesh:
+        if fleet:
+            raise SystemExit("--mesh and --replicas are mutually exclusive "
+                             "(the fleet shards lanes, not params)")
         mesh, rules = host_serving_setup(cfg)
         param_axes = axes
-    engine = ServeEngine(cfg, params, batch_size=args.slots,
-                         max_seq=args.max_seq, mesh=mesh, rules=rules,
-                         param_axes=param_axes)
 
     lens = [int(x) for x in args.prompt_lens.split(",") if x]
     rng = np.random.default_rng(args.seed)
     arrivals = arrival_trace(args.arrival, args.requests, args.rate, args.seed)
+    tenants = [f"t{i}" for i in range(max(1, args.tenants))]
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=lens[i % len(lens)]
                                         ).astype(np.int32),
-                    max_new_tokens=args.max_new, arrival=float(arrivals[i]))
+                    max_new_tokens=args.max_new, arrival=float(arrivals[i]),
+                    tenant=tenants[i % len(tenants)],
+                    slo_ms=args.slo_ms if args.slo_ms > 0 else None)
             for i in range(args.requests)]
 
+    if fleet:
+        autoscaler = None
+        if args.autoscale_min > 0:
+            autoscaler = QueueAutoscaler(
+                slots_per_replica=args.slots,
+                min_replicas=args.autoscale_min,
+                max_replicas=args.replicas)
+        router = ReplicaRouter(
+            cfg, params, slots_per_replica=args.slots,
+            max_replicas=args.replicas, max_seq=args.max_seq,
+            admission=args.admission, autoscaler=autoscaler,
+            min_replicas=args.autoscale_min or args.replicas)
+        if not args.no_warmup:
+            t0 = time.perf_counter()
+            spans = (range(args.autoscale_min, args.replicas + 1)
+                     if autoscaler else [args.replicas])
+            router.warmup(prompt_lens=lens, spans=spans)
+            print(f"warmup (compile) {time.perf_counter() - t0:.2f}s — "
+                  "excluded from the perf report")
+        start = time.perf_counter()
+        done = router.run(reqs, now_fn=lambda: time.perf_counter() - start)
+        dt = time.perf_counter() - start
+        served = [r for r in done if r.done]
+        total_new = sum(len(r.out_tokens) for r in served)
+        rep = router.report()
+        rep.pop("per_replica")
+        rep.update({
+            "engine": "lm", "arch": args.arch, "slots": args.slots,
+            "requests": len(served), "new_tokens": total_new,
+            "seconds": round(dt, 4),
+            "requests_per_sec": round(len(served) / dt, 2),
+            "tokens_per_sec": round(total_new / dt, 1),
+            "arrival": args.arrival, "rate": args.rate,
+            "quantize": args.quantize, "admission": args.admission,
+            "tenants_n": len(tenants), "mesh": "none",
+        })
+        print(f"fleet served {len(served)}/{len(done)} requests / "
+              f"{total_new} tokens in {dt:.2f}s "
+              f"({rep['requests_per_sec']} req/s, "
+              f"{rep['tokens_per_sec']} tok/s) | "
+              f"{args.replicas}x{args.slots} lanes, quantize={args.quantize}")
+        print(f"latency p50={rep['latency_p50']*1e3:.1f}ms "
+              f"p95={rep['latency_p95']*1e3:.1f}ms "
+              f"p99={rep['latency_p99']*1e3:.1f}ms | "
+              f"rejected={rep['rejected']} degraded={rep['degraded']} | "
+              f"backfills={rep['backfills']}")
+        for t, tr in sorted(rep["tenants"].items()):
+            print(f"  {t}: finished={tr['finished']} rejected={tr['rejected']}"
+                  f" slo_attainment={tr['slo_attainment']:.2f}")
+        if rep["autoscaler_events"]:
+            print(f"  autoscaler: {rep['autoscaler_events']}")
+        assert all(r.done or r.rejected for r in done)
+        return rep
+
+    engine = ServeEngine(cfg, params, batch_size=args.slots,
+                         max_seq=args.max_seq, mesh=mesh, rules=rules,
+                         param_axes=param_axes)
     if not args.no_warmup:
         t0 = time.perf_counter()
         engine.warmup(prompt_lens=lens)
@@ -113,6 +184,7 @@ def run_lm(args) -> dict:
         "requests_per_sec": round(len(done) / dt, 2),
         "tokens_per_sec": round(total_new / dt, 1),
         "arrival": args.arrival, "rate": args.rate,
+        "quantize": args.quantize,
         "mesh": (f"{tuple(mesh.devices.shape)}" if mesh is not None
                  else "none"),
         "ragged_prefill": engine.ragged_ok,
@@ -123,7 +195,8 @@ def run_lm(args) -> dict:
           f"mean={rep['queue_depth_mean']:.2f} | backfills={rep['backfills']} "
           f"| wait p50={rep['wait_p50']*1e3:.1f}ms p95={rep['wait_p95']*1e3:.1f}ms "
           f"| latency p50={rep['latency_p50']*1e3:.1f}ms "
-          f"p95={rep['latency_p95']*1e3:.1f}ms")
+          f"p95={rep['latency_p95']*1e3:.1f}ms "
+          f"p99={rep['latency_p99']*1e3:.1f}ms")
     for i, r in enumerate(done[:4]):
         print(f"  req{i}: {r.out_tokens[:8]}...")
     assert all(r.done for r in done)
@@ -215,7 +288,25 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4,
-                    help="decode slots (continuous-batching batch size)")
+                    help="decode slots (continuous-batching batch size; "
+                         "slots PER REPLICA with --replicas)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through a ReplicaRouter fleet of this many "
+                         "replicas (0 = single engine)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="synthetic tenants (requests round-robin t0..tN-1)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request arrival→finish SLO in ms (0 = none)")
+    ap.add_argument("--admission", default="none",
+                    choices=("none", "reject", "degrade"),
+                    help="fleet admission control when the predicted "
+                         "completion misses the SLO")
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "bf16", "int8"),
+                    help="weight quantization for the decode/prefill path")
+    ap.add_argument("--autoscale-min", type=int, default=0,
+                    help="enable queue-driven autoscale with this minimum "
+                         "replica count (0 = fixed fleet)")
     ap.add_argument("--prompt-lens", default="8,12,16,20",
                     help="comma list; request i uses length i mod list")
     ap.add_argument("--max-new", type=int, default=16)

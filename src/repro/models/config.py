@@ -108,6 +108,10 @@ class ArchConfig:
     q_chunk: int = 1024                     # q-block size for chunked attention scan
     use_flash_kernel: bool = False          # Pallas path (TPU); jnp path on CPU
     cache_dtype: str = "bfloat16"           # "int8" enables quantized KV cache
+    quantize: str = "none"                  # weight quantization for serving:
+    #   "none" | "bf16" (cast float params) | "int8" (symmetric per-channel
+    #   attention/MLP projections via models.layers.quant, served through the
+    #   quant_matmul kernel path)
 
     # provenance
     source: str = ""
@@ -120,6 +124,9 @@ class ArchConfig:
             )
         if self.num_heads and self.num_heads % max(self.num_kv_heads, 1) != 0:
             raise ValueError(f"{self.name}: heads must divide into kv groups")
+        if self.quantize not in ("none", "bf16", "int8"):
+            raise ValueError(
+                f"{self.name}: quantize={self.quantize!r} (want none|bf16|int8)")
 
     @property
     def resolved_head_dim(self) -> int:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig, BlockKind
+from repro.models.layers.quant import linear_or_quant
 from repro.models.layers.rope import apply_rope
 from repro.models.params import bias as bias_init
 from repro.models.params import linear, split_tree_of
@@ -226,7 +227,7 @@ def attn_apply(
     groups = h // kv
     rope_on = use_rope and kind != BlockKind.ATTN_NOPE
 
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = linear_or_quant(x, params["wq"], "bsd,dhk->bshk")
     if "bq" in params:
         q = q + params["bq"]
 
@@ -237,8 +238,8 @@ def attn_apply(
         new_cache = cache
     else:
         src = kv_src if cross else x
-        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+        k = linear_or_quant(src, params["wk"], "bsd,dhk->bshk")
+        v = linear_or_quant(src, params["wv"], "bsd,dhk->bshk")
         if "bk" in params:
             k = k + params["bk"]
             v = v + params["bv"]
@@ -360,4 +361,4 @@ def _prefill_fill_cache(cache, k, v, lengths=None):
 
 
 def _out_proj(out: jnp.ndarray, params) -> jnp.ndarray:
-    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return linear_or_quant(out, params["wo"], "bshk,hkd->bsd")

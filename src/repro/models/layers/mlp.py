@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig
+from repro.models.layers.quant import linear_or_quant
 from repro.models.params import linear, split_tree_of
 
 __all__ = ["mlp_init", "mlp_apply"]
@@ -33,13 +34,13 @@ def mlp_init(key: jax.Array, cfg: ArchConfig, dtype):
 
 def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
     if "w_gate" in params:
-        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"],
-                                   preferred_element_type=jnp.float32))
-        u = jnp.einsum("bsd,df->bsf", x, params["w_up"],
-                       preferred_element_type=jnp.float32)
+        g = jax.nn.silu(linear_or_quant(x, params["w_gate"], "bsd,df->bsf",
+                                        preferred_element_type=jnp.float32))
+        u = linear_or_quant(x, params["w_up"], "bsd,df->bsf",
+                            preferred_element_type=jnp.float32)
         h = (g * u).astype(x.dtype)
     else:
-        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_up"],
-                                   preferred_element_type=jnp.float32)).astype(x.dtype)
-    return jnp.einsum("bsf,fd->bsd", h, params["w_down"],
-                      preferred_element_type=jnp.float32).astype(x.dtype)
+        h = jax.nn.gelu(linear_or_quant(x, params["w_up"], "bsd,df->bsf",
+                                        preferred_element_type=jnp.float32)).astype(x.dtype)
+    return linear_or_quant(h, params["w_down"], "bsf,fd->bsd",
+                           preferred_element_type=jnp.float32).astype(x.dtype)

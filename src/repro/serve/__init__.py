@@ -1,8 +1,12 @@
 from repro.serve.step import make_prefill_step, make_decode_step, cache_axes
-from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.scheduler import (Request, FairQueue, SlotScheduler,
+                                   tenant_report)
 from repro.serve.engine import ServeEngine
 from repro.serve.predictor import ModelPredictor, PredictRequest
+from repro.serve.autoscaler import QueueAutoscaler
+from repro.serve.router import ReplicaRouter, PredictorFleet
 
 __all__ = ["make_prefill_step", "make_decode_step", "cache_axes",
-           "Request", "SlotScheduler", "ServeEngine",
-           "ModelPredictor", "PredictRequest"]
+           "Request", "FairQueue", "SlotScheduler", "tenant_report",
+           "ServeEngine", "ModelPredictor", "PredictRequest",
+           "QueueAutoscaler", "ReplicaRouter", "PredictorFleet"]

@@ -76,6 +76,13 @@ class ServeEngine:
             if param_axes is not None:
                 params = jax.device_put(
                     params, shardings_for(param_axes, params, mesh, self.rules))
+        if cfg.quantize != "none":
+            if mesh is not None:
+                raise ValueError(
+                    "quantize= is a single-host serving knob: the mesh "
+                    "param-sharding tables predate QTensor leaves")
+            from repro.models.layers.quant import quantize_model_params
+            params = quantize_model_params(params, cfg.quantize)
         self.params = params
         # ragged (batched mixed-length) prefill is exact only when no
         # cross-slot or sequential state exists; everything else prefills
@@ -123,20 +130,25 @@ class ServeEngine:
     # admission → prefill
     # ------------------------------------------------------------------ #
     def _prefill_into(self, cache, admits: List[Tuple[int, Request]],
-                      pad_to: int = 8) -> Tuple[Any, np.ndarray]:
+                      pad_to: int = 8,
+                      wave_pad: Optional[int] = None) -> Tuple[Any, np.ndarray]:
         """Prefill the admitted requests and scatter them into their slots.
         Returns (cache, first greedy token per admit).
 
         Mixed lengths go through ONE ragged right-padded prefill when the
         architecture allows it (``prefill_ragged``).  The admission wave is
         padded along *both* axes to keep compiled shapes stable across
-        waves: sequence to a ``pad_to`` bucket, batch to the engine's slot
-        count with dummy length-1 rows whose scatter destination is
-        out-of-range (dropped).  One compiled prefill per sequence bucket,
-        whatever the wave size — so a 1-request backfill and a full
-        admission wave share a program.  Architectures the ragged path
-        excludes prefill per-request (one compile per distinct prompt
-        length) and scatter batch-1 caches.
+        waves: sequence to a ``pad_to`` bucket, batch to a *wave bucket* —
+        a single-request backfill (the dominant steady-state wave once
+        slots start retiring one at a time) runs at batch 1, anything
+        larger pads to the engine's slot count with dummy length-1 rows
+        whose scatter destination is out-of-range (dropped).  Two compiled
+        prefills per sequence bucket, whatever the wave size.
+        ``wave_pad`` overrides the batch pad target (the router passes
+        power-of-2 wave buckets so a fleet-sized cache never pays a
+        full-fleet prefill for a two-request backfill).  Architectures the
+        ragged path excludes prefill per-request (one compile per distinct
+        prompt length) and scatter batch-1 caches.
         """
         slots = np.asarray([s for s, _ in admits], np.int32)
         reqs = [r for _, r in admits]
@@ -146,15 +158,19 @@ class ServeEngine:
             raise ValueError("prompt + max_new_tokens exceeds max_seq")
         if self.ragged_ok:
             n, B = len(reqs), self.batch
+            if wave_pad is not None:
+                wb = max(min(int(wave_pad), B), n)
+            else:
+                wb = 1 if n == 1 else B           # wave bucket (batch pad)
             S = min(int(-(-int(lens.max()) // pad_to) * pad_to), self.max_seq)
-            padded = np.zeros((B, S), np.int32)
-            full_lens = np.ones(B, np.int32)      # dummy rows: 1 real token
-            full_slots = np.full(B, B, np.int32)  # dummy rows: OOB → dropped
+            padded = np.zeros((wb, S), np.int32)
+            full_lens = np.ones(wb, np.int32)     # dummy rows: 1 real token
+            full_slots = np.full(wb, B, np.int32)  # dummy rows: OOB → dropped
             for i, r in enumerate(reqs):
                 padded[i, : lens[i]] = r.prompt
                 full_lens[i] = lens[i]
                 full_slots[i] = slots[i]
-            sub = self.model.init_cache(B, self.max_seq)
+            sub = self.model.init_cache(wb, self.max_seq)
             logits, sub = self._prefill_ragged(
                 self.params, jnp.asarray(padded), jnp.asarray(full_lens), sub)
             cache = self._scatter(cache, sub, jnp.asarray(full_slots))
@@ -319,10 +335,11 @@ class ServeEngine:
         the launcher's perf report) never pays compile time mid-stream.
 
         On the ragged path the compiled prefill shape depends only on the
-        sequence *bucket* (batch is always padded to the slot count), so
-        one warm prefill per distinct bucket covers admission waves of any
-        size; the per-request fallback path compiles one prefill per
-        distinct prompt length instead.
+        sequence *bucket* and the wave bucket (batch 1 for solo backfills,
+        the slot count otherwise), so two warm prefills per distinct
+        sequence bucket cover admission waves of any size; the per-request
+        fallback path compiles one prefill per distinct prompt length
+        instead.
         """
         lens = sorted(set(int(n) for n in prompt_lens))
         cache = self.init_shared_cache()
@@ -333,6 +350,11 @@ class ServeEngine:
                 req = Request(prompt=np.zeros(min(b, self.max_seq - 1),
                                               np.int32), max_new_tokens=1)
                 cache, _ = self._prefill_into(cache, [(0, req)], pad_to=pad_to)
+                if self.batch > 1:
+                    wave = [(s, Request(prompt=np.zeros(
+                        min(b, self.max_seq - 1), np.int32), max_new_tokens=1))
+                        for s in range(min(2, self.batch))]
+                    cache, _ = self._prefill_into(cache, wave, pad_to=pad_to)
         elif lens:
             for n in lens:
                 req = Request(prompt=np.zeros(n, np.int32), max_new_tokens=1)

@@ -120,13 +120,27 @@ class ModelPredictor:
         self._queue.append(req)
         return req
 
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
     def flush(self, now: float = 0.0) -> List[PredictRequest]:
-        """Serve everything queued; returns the completed requests."""
+        """Serve everything queued; returns the completed requests.
+
+        The queue is popped only AFTER every microbatch has succeeded: a
+        predict/compile error (a bad ``predict_fn``, an incompatible
+        feature width) must leave all queued requests intact for a retry
+        — clearing up front silently dropped the whole queue with
+        ``done=False`` and no way to resubmit (regression:
+        ``tests/test_serve.py::test_flush_failure_keeps_queue``).  The
+        per-microbatch stats roll back too, so a failed flush is
+        invisible in ``report()``."""
         reqs = list(self._queue)
         if not reqs:
             return []
-        # featurize raw requests BEFORE popping the queue: a featurizer
-        # error leaves every queued request intact for a retry
+        # featurize raw requests in place first — a featurizer error also
+        # leaves every queued request intact (featurization is idempotent
+        # here: ``raw`` flips off per request as it succeeds)
         blocks = []
         for r in reqs:
             if r.raw:
@@ -135,19 +149,25 @@ class ModelPredictor:
                 r.features = feats          # (n, d): featurized once
                 r.raw = False
             blocks.append(r.features)
-        self._queue.clear()
         rows = np.concatenate(blocks, axis=0)
         outs: List[np.ndarray] = []
-        for start in range(0, rows.shape[0], self.max_batch):
-            chunk = rows[start : start + self.max_batch]
-            pad = self.max_batch - chunk.shape[0]
-            if pad:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((pad,) + chunk.shape[1:], chunk.dtype)])
-                self.rows_padded += pad
-            outs.append(np.asarray(self._predict_batch(chunk))[
-                : self.max_batch - pad])
-            self.batches += 1
+        batches0, padded0 = self.batches, self.rows_padded
+        try:
+            for start in range(0, rows.shape[0], self.max_batch):
+                chunk = rows[start : start + self.max_batch]
+                pad = self.max_batch - chunk.shape[0]
+                if pad:
+                    chunk = np.concatenate(
+                        [chunk, np.zeros((pad,) + chunk.shape[1:], chunk.dtype)])
+                    self.rows_padded += pad
+                outs.append(np.asarray(self._predict_batch(chunk))[
+                    : self.max_batch - pad])
+                self.batches += 1
+        except Exception:
+            self.batches, self.rows_padded = batches0, padded0
+            raise
+        for _ in reqs:                      # all microbatches succeeded
+            self._queue.popleft()
         flat = np.concatenate(outs, axis=0)
         self.rows_served += rows.shape[0]
         ofs = 0

@@ -1,0 +1,75 @@
+"""Arrival-trace shapes for ``launch/serve.py`` (regression).
+
+The ``burst`` kind used to place its second wave at ``0.5 / rate * n``
+seconds — an offset that *grew with the trace length*, so large traces
+degenerated into two disjoint static batches that never overlapped in the
+slot table and inflated the continuous-batching backfill win.  The fix
+pins the second wave at one mean inter-arrival gap (``1 / rate``),
+independent of ``n``; these tests pin every kind's contract.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.serve import arrival_trace
+
+KINDS = ("none", "poisson", "uniform", "burst")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_trace_monotone_nonnegative(kind):
+    t = arrival_trace(kind, 64, rate=100.0, seed=3)
+    assert t.shape == (64,)
+    assert np.all(t >= 0)
+    assert np.all(np.diff(t) >= 0) or kind == "burst"  # burst sorted below
+    assert np.all(np.sort(t) == np.sort(t))  # finite, comparable
+    assert np.isfinite(t).all()
+
+
+@pytest.mark.parametrize("kind", ("poisson", "uniform"))
+def test_trace_mean_rate(kind):
+    """Mean inter-arrival time ~ 1/rate (exact for uniform, statistical
+    for poisson over a long trace)."""
+    rate = 50.0
+    n = 2000
+    t = arrival_trace(kind, n, rate=rate, seed=0)
+    mean_gap = t[-1] / (n - 1) if kind == "uniform" else t[-1] / n
+    assert mean_gap == pytest.approx(1.0 / rate, rel=0.1)
+
+
+def test_all_at_once_kinds():
+    assert np.all(arrival_trace("none", 8, rate=100.0, seed=0) == 0.0)
+    # rate <= 0 means "no pacing" for every kind
+    assert np.all(arrival_trace("poisson", 8, rate=0.0, seed=0) == 0.0)
+
+
+def test_burst_offset_is_n_independent():
+    """The second wave lands at exactly 1/rate regardless of n — the old
+    ``0.5 / rate * n`` offset scaled with the trace length."""
+    rate = 10.0
+    for n in (4, 40, 400):
+        t = arrival_trace("burst", n, rate=rate, seed=0)
+        half = (n + 1) // 2
+        assert np.all(t[:half] == 0.0)
+        assert np.all(t[half:] == 1.0 / rate)
+    # waves must be close enough to overlap in a slot table: the gap is
+    # one mean inter-arrival, not n/2 of them
+    big = arrival_trace("burst", 1000, rate=10.0, seed=0)
+    assert big.max() == pytest.approx(0.1)
+
+
+def test_burst_splits_evenly():
+    t = arrival_trace("burst", 7, rate=5.0, seed=0)
+    assert (t == 0.0).sum() == 4 and (t > 0).sum() == 3
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        arrival_trace("thundering-herd", 4, rate=1.0, seed=0)
+
+
+def test_poisson_deterministic_per_seed():
+    a = arrival_trace("poisson", 32, rate=20.0, seed=7)
+    b = arrival_trace("poisson", 32, rate=20.0, seed=7)
+    c = arrival_trace("poisson", 32, rate=20.0, seed=8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)

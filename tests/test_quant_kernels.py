@@ -1,0 +1,145 @@
+"""int8 quantized matmul: Pallas kernel vs the ``ref`` oracle (bit-exact),
+the ``ops`` wrapper fallback, and the QTensor / model-quantization layer.
+
+The acceptance contract (ISSUE 8): the kernel must be *bit-exact* against
+``ref.quant_matmul_ref`` — both accumulate the int8×int8 products in
+int32, which is order-independent, so there is no tolerance to hide
+behind.  The CPU fallback in ``ops.quant_matmul`` accumulates in f32
+instead (no int32 MXU off-TPU); that is exact as long as
+K · 127² < 2²⁴ ≈ K ≲ 1000, which every test and smoke model here obeys.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import quant_matmul, quantize_rows
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+RNG = np.random.default_rng(11)
+
+
+def _qpair(m, k, n):
+    xq = jnp.asarray(RNG.integers(-127, 128, size=(m, k)), jnp.int8)
+    wq = jnp.asarray(RNG.integers(-127, 128, size=(k, n)), jnp.int8)
+    xs = jnp.asarray(RNG.uniform(1e-3, 2e-2, size=(m,)), jnp.float32)
+    ws = jnp.asarray(RNG.uniform(1e-3, 2e-2, size=(n,)), jnp.float32)
+    return xq, xs, wq, ws
+
+
+class TestQuantMatmulKernel:
+    @pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+        (8, 128, 128, 8, 128, 128),
+        (16, 256, 512, 8, 256, 128),
+        (32, 384, 256, 16, 128, 128),
+        (256, 512, 256, 128, 256, 256),
+    ])
+    def test_bit_exact_vs_ref(self, m, k, n, bm, bn, bk):
+        xq, xs, wq, ws = _qpair(m, k, n)
+        got = quant_matmul_pallas(xq, xs, wq, ws, block_m=bm, block_n=bn,
+                                  block_k=bk, interpret=True)
+        expect = ref.quant_matmul_ref(xq, xs, wq, ws)
+        # bit-exact: int32 accumulation then one scale multiply, in both
+        assert np.array_equal(np.asarray(got), np.asarray(expect))
+
+    def test_extreme_values_no_overflow(self):
+        """±127 everywhere at K=512: |acc| = 512·127² ≈ 8.3e6 < 2³¹."""
+        m, k, n = 8, 512, 128
+        xq = jnp.full((m, k), 127, jnp.int8)
+        wq = jnp.full((k, n), -127, jnp.int8)
+        xs = jnp.ones(m, jnp.float32)
+        ws = jnp.ones(n, jnp.float32)
+        got = quant_matmul_pallas(xq, xs, wq, ws, block_m=8, block_n=128,
+                                  block_k=256, interpret=True)
+        assert np.array_equal(np.asarray(got),
+                              np.full((m, n), 512 * 127 * -127, np.float32))
+
+
+class TestQuantMatmulWrapper:
+    def test_fallback_matches_ref(self):
+        """Off-TPU the wrapper's f32-accumulation path must still equal
+        the int32 oracle exactly while K·127² fits f32's 24-bit mantissa."""
+        xq, xs, wq, ws = _qpair(24, 320, 96)     # non-tilable on purpose
+        got = quant_matmul(xq, xs, wq, ws)
+        expect = ref.quant_matmul_ref(xq, xs, wq, ws)
+        assert np.array_equal(np.asarray(got), np.asarray(expect))
+
+    def test_shape_validation(self):
+        xq, xs, wq, ws = _qpair(8, 64, 32)
+        with pytest.raises(ValueError):
+            quant_matmul(xq, xs[:4], wq, ws)
+        with pytest.raises(ValueError):
+            quant_matmul(xq, xs, wq[:32], ws)
+
+
+class TestQuantizeRows:
+    def test_roundtrip_error_half_step(self):
+        x = jnp.asarray(RNG.normal(size=(16, 256)) * 3.0, jnp.float32)
+        xq, scale = quantize_rows(x)
+        assert xq.dtype == jnp.int8 and scale.shape == (16,)
+        assert int(jnp.max(jnp.abs(xq))) <= 127
+        back = xq.astype(jnp.float32) * scale[:, None]
+        err = np.asarray(jnp.max(jnp.abs(back - x), axis=-1))
+        # symmetric rounding: worst case half a quantization step per row
+        assert np.all(err <= np.asarray(scale) * 0.5 + 1e-6)
+
+    def test_zero_row_stable(self):
+        xq, scale = quantize_rows(jnp.zeros((2, 64)))
+        assert np.all(np.asarray(xq) == 0) and np.all(np.asarray(scale) > 0)
+
+
+class TestModelQuantization:
+    def test_qtensor_pytree_roundtrip(self):
+        from repro.models.layers.quant import QTensor, quantize_weight
+
+        w = jnp.asarray(RNG.normal(size=(4, 64, 32)), jnp.float32)
+        qt = quantize_weight(w, n_contract=1, n_batch=1)
+        assert isinstance(qt, QTensor) and qt.q.dtype == jnp.int8
+        leaves, treedef = jax.tree_util.tree_flatten(qt)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert rebuilt.n_contract == qt.n_contract
+        assert np.array_equal(np.asarray(rebuilt.q), np.asarray(qt.q))
+        # dequantized weight close to original (per-channel half step)
+        # scale axes: batch (4,) + output channels (32,)
+        deq = qt.q.astype(jnp.float32) * qt.scale[:, None, :]
+        assert float(jnp.max(jnp.abs(deq - w))) <= float(
+            jnp.max(qt.scale)) * 0.5 + 1e-6
+
+    def test_linear_or_quant_dispatch(self):
+        from repro.models.layers.quant import linear_or_quant, quantize_weight
+
+        x = jnp.asarray(RNG.normal(size=(2, 8, 64)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(64, 32)) * 0.05, jnp.float32)
+        exact = linear_or_quant(x, w, "bsd,dk->bsk")
+        assert np.allclose(np.asarray(exact),
+                           np.asarray(jnp.einsum("bsd,dk->bsk", x, w)))
+        qt = quantize_weight(w, n_contract=1)
+        approx = linear_or_quant(x, qt, "bsd,dk->bsk")
+        assert approx.shape == exact.shape and approx.dtype == exact.dtype
+        # int8×int8: relative error bounded by the two half-steps
+        rel = float(jnp.max(jnp.abs(approx - exact))) / float(
+            jnp.max(jnp.abs(exact)))
+        assert rel < 0.05
+
+    def test_quantize_model_params_modes(self):
+        from repro.configs import get_smoke
+        from repro.models.layers.quant import QTensor, quantize_model_params
+        from repro.models.transformer import init_model
+
+        cfg = get_smoke("qwen2-1.5b")
+        params, _ = init_model(jax.random.PRNGKey(0), cfg)
+
+        same = quantize_model_params(params, "none")
+        assert same is params
+
+        bf = quantize_model_params(params, "bf16")
+        assert bf["blocks"]["b0"]["attn"]["wq"].dtype == jnp.bfloat16
+
+        q8 = quantize_model_params(params, "int8")
+        attn = q8["blocks"]["b0"]["attn"]
+        assert isinstance(attn["wq"], QTensor)
+        assert attn["wq"].q.dtype == jnp.int8
+        # embeddings / norms untouched: only the projection weights quantize
+        assert q8["embed"]["tok"].dtype == params["embed"]["tok"].dtype
+        assert q8["final_norm"]["scale"].dtype == jnp.float32

@@ -124,3 +124,40 @@ def test_mixed_length_requests_served_continuously():
             for n in (8, 16, 8, 16, 24)]          # 5 mixed lengths, 4 slots
     done = engine.run(reqs)
     assert all(r.done and len(r.out_tokens) == 4 for r in done)
+
+
+# --------------------------------------------------------------------------- #
+# ModelPredictor flush failure semantics (regression)
+# --------------------------------------------------------------------------- #
+def test_flush_failure_keeps_queue():
+    """A predict failure mid-flush must leave every queued request intact
+    and the stats untouched — the old flush cleared the queue *before*
+    running any microbatch, so a bad ``predict_fn`` (or a compile error)
+    silently dropped the whole queue with ``done=False`` and no way to
+    resubmit."""
+    from repro.serve.predictor import ModelPredictor, PredictRequest
+
+    calls = {"n": 0}
+
+    def bad_predict(X):
+        calls["n"] += 1
+        raise RuntimeError("boom")
+
+    svc = ModelPredictor(model=None, max_batch=4, predict_fn=bad_predict)
+    reqs = [svc.submit(PredictRequest(features=np.ones((2, 3), np.float32)))
+            for _ in range(3)]
+    with pytest.raises(RuntimeError, match="boom"):
+        svc.flush()
+    # the queue survives, nothing is marked done, stats rolled back
+    assert svc.queued == 3
+    assert all(not r.done and r.result is None for r in reqs)
+    assert svc.batches == 0 and svc.rows_padded == 0
+    assert svc.report()["rows_served"] == 0
+
+    # a retry with a working predict serves the SAME queued requests
+    svc._predict = lambda X: X.sum(axis=1)
+    svc._compiled = None
+    done = svc.flush()
+    assert [r is q for r, q in zip(done, reqs)] == [True] * 3
+    assert all(r.done and r.result.shape == (2,) for r in reqs)
+    assert svc.queued == 0 and svc.rows_served == 6
