@@ -24,6 +24,9 @@ Examples (CPU):
         --smoke --requests 8 --slots 4 --prompt-lens 8,12,16,20 --max-new 8
     PYTHONPATH=src python -m repro.launch.serve --engine lm --arch qwen2-1.5b \
         --smoke --requests 8 --arrival poisson --rate 4 --json
+    PYTHONPATH=src python -m repro.launch.serve --engine lm --arch qwen2-1.5b \
+        --smoke --requests 16 --prefix-cache on --prefix-share 0.8 \
+        --prefix-len 32 --prefix-block 16 --json
     PYTHONPATH=src python -m repro.launch.serve --engine model \
         --algorithm kmeans --rows 512 --features 16 --batch 64 --json
 """
@@ -76,8 +79,8 @@ def run_lm(args) -> dict:
 
     from repro.launch.mesh import host_serving_setup
     from repro.models.transformer import init_model
-    from repro.serve import (QueueAutoscaler, ReplicaRouter, Request,
-                             ServeEngine, SlotScheduler)
+    from repro.serve import (QueueAutoscaler, RadixPrefixCache, ReplicaRouter,
+                             Request, ServeEngine, SlotScheduler)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encoder_layers or cfg.vision_tokens:
@@ -98,13 +101,44 @@ def run_lm(args) -> dict:
     rng = np.random.default_rng(args.seed)
     arrivals = arrival_trace(args.arrival, args.requests, args.rate, args.seed)
     tenants = [f"t{i}" for i in range(max(1, args.tenants))]
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
-                                        size=lens[i % len(lens)]
-                                        ).astype(np.int32),
+    # with --prefix-share p, fraction p of the requests open with ONE shared
+    # --prefix-len token prefix (a synthetic system prompt); the rest are
+    # fully random at the SAME total length, so cache-on vs cache-off runs
+    # and shared vs unshared requests all prefill identical token counts
+    shared_prefix = rng.integers(0, cfg.vocab_size,
+                                 size=args.prefix_len).astype(np.int32)
+
+    def _prompt(i: int) -> np.ndarray:
+        n = args.prefix_len + lens[i % len(lens)]
+        if args.prefix_share > 0 and rng.random() < args.prefix_share:
+            tail = rng.integers(0, cfg.vocab_size,
+                                size=n - args.prefix_len).astype(np.int32)
+            return np.concatenate([shared_prefix, tail])
+        return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+    reqs = [Request(prompt=_prompt(i) if args.prefix_share > 0
+                    else rng.integers(0, cfg.vocab_size,
+                                      size=lens[i % len(lens)]
+                                      ).astype(np.int32),
                     max_new_tokens=args.max_new, arrival=float(arrivals[i]),
                     tenant=tenants[i % len(tenants)],
                     slo_ms=args.slo_ms if args.slo_ms > 0 else None)
             for i in range(args.requests)]
+    prefix_cache = (RadixPrefixCache(block_size=args.prefix_block,
+                                     capacity_blocks=args.prefix_capacity)
+                    if args.prefix_cache == "on" else None)
+
+    def _prefix_fields(rep: dict) -> None:
+        s = prefix_cache.stats() if prefix_cache is not None else None
+        rep["prefix_cache"] = s
+        rep["prefill_tokens"] = (s["prompt_tokens"] if s
+                                 else sum(len(r.prompt) for r in reqs))
+        rep["cached_prefill_tokens"] = s["cached_tokens"] if s else 0
+        rep["prefix_hit_rate"] = s["hit_rate"] if s else 0.0
+        if s:
+            print(f"  prefix cache: {s['cached_tokens']}/{s['prompt_tokens']} "
+                  f"prefill tokens served cached (hit rate "
+                  f"{s['hit_rate']:.2f}), {s['evictions']} evictions")
 
     if fleet:
         autoscaler = None
@@ -117,7 +151,8 @@ def run_lm(args) -> dict:
             cfg, params, slots_per_replica=args.slots,
             max_replicas=args.replicas, max_seq=args.max_seq,
             admission=args.admission, autoscaler=autoscaler,
-            min_replicas=args.autoscale_min or args.replicas)
+            min_replicas=args.autoscale_min or args.replicas,
+            prefix_cache=prefix_cache)
         if not args.no_warmup:
             t0 = time.perf_counter()
             spans = (range(args.autoscale_min, args.replicas + 1)
@@ -157,12 +192,13 @@ def run_lm(args) -> dict:
                   f" slo_attainment={tr['slo_attainment']:.2f}")
         if rep["autoscaler_events"]:
             print(f"  autoscaler: {rep['autoscaler_events']}")
+        _prefix_fields(rep)
         assert all(r.done or r.rejected for r in done)
         return rep
 
     engine = ServeEngine(cfg, params, batch_size=args.slots,
                          max_seq=args.max_seq, mesh=mesh, rules=rules,
-                         param_axes=param_axes)
+                         param_axes=param_axes, prefix_cache=prefix_cache)
     if not args.no_warmup:
         t0 = time.perf_counter()
         engine.warmup(prompt_lens=lens)
@@ -189,6 +225,7 @@ def run_lm(args) -> dict:
                  else "none"),
         "ragged_prefill": engine.ragged_ok,
     })
+    _prefix_fields(rep)
     print(f"served {len(done)} requests / {total_new} tokens in {dt:.2f}s "
           f"({rep['requests_per_sec']} req/s, {rep['tokens_per_sec']} tok/s)")
     print(f"queue depth max={rep['queue_depth_max']} "
@@ -304,6 +341,19 @@ def main() -> None:
     ap.add_argument("--quantize", default="none",
                     choices=("none", "bf16", "int8"),
                     help="weight quantization for the decode/prefill path")
+    ap.add_argument("--prefix-cache", default="off", choices=("on", "off"),
+                    help="radix prefix KV cache: reuse repeated prompt "
+                         "prefixes across requests (and replicas)")
+    ap.add_argument("--prefix-block", type=int, default=16,
+                    help="prefix cache block size in tokens")
+    ap.add_argument("--prefix-capacity", type=int, default=256,
+                    help="prefix cache capacity in blocks (LRU beyond)")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of requests opening with one shared "
+                         "--prefix-len token prefix (synthetic system "
+                         "prompt); the rest are random at the same length")
+    ap.add_argument("--prefix-len", type=int, default=32,
+                    help="shared prefix length for --prefix-share traffic")
     ap.add_argument("--autoscale-min", type=int, default=0,
                     help="enable queue-driven autoscale with this minimum "
                          "replica count (0 = fixed fleet)")

@@ -220,6 +220,7 @@ def attn_apply(
     is_cross: bool = False,
     use_rope: bool = True,
     lengths: Optional[jnp.ndarray] = None,     # (B,) ragged prefill lengths
+    start_pos: Optional[jnp.ndarray] = None,   # (B,) tail-prefill offsets
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """Returns (output (B,S,D), updated_cache_or_None)."""
     B, S, D = x.shape
@@ -256,6 +257,11 @@ def attn_apply(
             out = _sdpa(q, kf, vf, mask, hd ** -0.5)
             cross_cache = {"k": k, "v": v} if cache is not None else None
             return _out_proj(out, params), cross_cache
+        if start_pos is not None:
+            return _prefill_offset(params, q, k, v, cfg=cfg, kind=kind,
+                                   cache=cache, lengths=lengths,
+                                   start_pos=start_pos, groups=groups,
+                                   rope_on=rope_on)
         pos_q = positions if positions is not None else jnp.arange(S)
         if rope_on:
             q = apply_rope(q, pos_q[None, :], cfg.rope_base)
@@ -307,7 +313,62 @@ def attn_apply(
     return _out_proj(out, params), new_cache
 
 
-def _prefill_fill_cache(cache, k, v, lengths=None):
+def _prefill_offset(params, q, k, v, *, cfg: ArchConfig, kind: BlockKind,
+                    cache, lengths, start_pos, groups: int, rope_on: bool):
+    """Offset ragged prefill: slot b's tokens are its prompt *tail*,
+    occupying absolute positions ``start_pos[b] .. start_pos[b]+lengths[b]-1``
+    on top of a cache whose ring already holds the prefix K/V (restored by
+    ``serve/prefix_cache.py``).  Tail queries attend the concatenation of
+    the prefix cache (read BEFORE the tail write, so restored bits are
+    attended verbatim) and the in-flight tail keys, each under its exact
+    positional mask; rows with ``start_pos == 0`` see no valid prefix
+    slot, so one compiled program serves hit and miss rows alike."""
+    if cache is None or lengths is None:
+        raise ValueError("start_pos= prefill needs cache= and lengths=")
+    B, S = q.shape[0], q.shape[1]
+    hd = cfg.resolved_head_dim
+    start = jnp.asarray(start_pos, jnp.int32)                  # (B,)
+    L = jnp.asarray(lengths, jnp.int32)                        # (B,)
+    pos_bq = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    if rope_on:
+        q = apply_rope(q, pos_bq, cfg.rope_base)
+        k = apply_rope(k, pos_bq, cfg.rope_base)
+    kc, vc = _cache_read(cache)
+    ring = cache["k"].shape[1]
+    slot_ids = jnp.arange(ring, dtype=jnp.int32)[None, :]      # (1, ring)
+    last = (start - 1)[:, None]                                # (B, 1)
+    # the position each ring slot holds: largest value ≡ slot (mod ring)
+    # that is ≤ start-1; negative ⇒ never written (start=0 rows: all)
+    slot_pos = last - (last - slot_ids) % ring                 # (B, ring)
+    mp = (slot_pos >= 0)[:, None, :]
+    pq = pos_bq[:, :, None]                                    # (B, S, 1)
+    if kind == BlockKind.ATTN_LOCAL:
+        mp = mp & (pq - slot_pos[:, None, :] < cfg.window)
+    elif kind == BlockKind.ATTN_CHUNKED:
+        mp = mp & ((slot_pos[:, None, :] // cfg.attn_chunk)
+                   == (pq // cfg.attn_chunk))
+    else:
+        # global: prefix positions (≤ start-1) precede every tail query,
+        # so causality is automatic — the term only shapes mp to (B,S,r)
+        mp = mp & (slot_pos[:, None, :] <= pq)
+    # tail self-attention: ragged causal over real tail columns
+    jk = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    pk = pos_bq[:, None, :]                                    # (B, 1, S)
+    mt = (jk < L[:, None, None]) & (pk <= pq)
+    if kind == BlockKind.ATTN_LOCAL:
+        mt = mt & (pq - pk < cfg.window)
+    elif kind == BlockKind.ATTN_CHUNKED:
+        mt = mt & ((pk // cfg.attn_chunk) == (pq // cfg.attn_chunk))
+    mask = jnp.concatenate([mp, mt], axis=-1)[:, None]         # (B,1,S,r+S)
+    k_all = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+    out = _sdpa(q, _repeat_kv(k_all, groups), _repeat_kv(v_all, groups),
+                mask, hd ** -0.5)
+    cache = _prefill_fill_cache(cache, k, v, lengths, start=start)
+    return _out_proj(out, params), cache
+
+
+def _prefill_fill_cache(cache, k, v, lengths=None, start=None):
     """Copy the last ``slots`` tokens of prefill K/V into the decode cache,
     laid out so ring addressing (slot = pos % slots) stays consistent.
 
@@ -317,7 +378,14 @@ def _prefill_fill_cache(cache, k, v, lengths=None):
     ``min(lengths[b], slots)`` real columns and every pad / evicted column
     is routed to an out-of-bounds destination and dropped by the scatter —
     pad tokens never enter the cache, so the decode-side validity mask
-    (slot_pos ≤ pos) stays exact per slot."""
+    (slot_pos ≤ pos) stays exact per slot.
+
+    ``start`` (B,) shifts row b's columns to absolute positions
+    ``start[b]+j`` (tail prefill over a restored prefix — see
+    ``_prefill_offset``): the kept window becomes the last ≤``slots``
+    positions before ``start[b]+lengths[b]``, so prefix entries still
+    inside the ring are never clobbered and the final ring state is
+    exactly what a full prefill of the whole prompt would have left."""
     B, S = k.shape[0], k.shape[1]
     slots = cache["k"].shape[1]
     out = dict(cache)
@@ -342,8 +410,14 @@ def _prefill_fill_cache(cache, k, v, lengths=None):
 
     L = jnp.asarray(lengths, jnp.int32)[:, None]               # (B, 1)
     j = jnp.arange(S, dtype=jnp.int32)[None, :]                # (1, S)
-    keep = (j < L) & (j >= L - slots)     # last ≤slots real columns per row
-    dest = jnp.where(keep, j % slots, slots)     # ``slots`` is OOB → dropped
+    if start is None:
+        keep = (j < L) & (j >= L - slots)  # last ≤slots real columns per row
+        dest = jnp.where(keep, j % slots, slots)  # ``slots`` OOB → dropped
+    else:
+        s0 = jnp.asarray(start, jnp.int32)[:, None]            # (B, 1)
+        abspos = s0 + j
+        keep = (j < L) & (abspos >= s0 + L - slots)
+        dest = jnp.where(keep, abspos % slots, slots)
     bidx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, S))
     if "k_scale" in cache:
         kq, ksc = _quantize(k)

@@ -198,7 +198,7 @@ class TransformerLM:
     # ---------------- block application ---------------- #
     def _apply_block(self, cfg: ArchConfig, kind: BlockKind, bp: Dict, x, *,
                      mode: str, positions=None, pos=None, cache=None,
-                     memory=None, lengths=None):
+                     memory=None, lengths=None, start_pos=None):
         aux = jnp.zeros((), jnp.float32)
         new_cache: Dict[str, Any] = {}
         if kind in ATTENTION_KINDS:
@@ -206,7 +206,8 @@ class TransformerLM:
             h, c = attn_apply(bp["attn"], h, cfg=cfg, kind=kind, mode=mode,
                               positions=positions, pos=pos,
                               cache=None if cache is None else cache.get("attn"),
-                              use_rope=cfg.use_rope, lengths=lengths)
+                              use_rope=cfg.use_rope, lengths=lengths,
+                              start_pos=start_pos)
             if c is not None:
                 new_cache["attn"] = c
             x = x + h
@@ -247,7 +248,7 @@ class TransformerLM:
         return x, new_cache, aux
 
     def _run_stack(self, params, x, *, mode, positions=None, pos=None,
-                   cache=None, memory=None, lengths=None):
+                   cache=None, memory=None, lengths=None, start_pos=None):
         cfg = self.cfg
 
         def period_fn(carry, scanned):
@@ -261,7 +262,7 @@ class TransformerLM:
                 x, nc, aux = self._apply_block(
                     cfg, kind, pp[f"b{i}"], x, mode=mode, positions=positions,
                     pos=pos, cache=None if pc is None else pc[f"b{i}"],
-                    memory=memory, lengths=lengths)
+                    memory=memory, lengths=lengths, start_pos=start_pos)
                 new_pc[f"b{i}"] = nc
                 aux_tot = aux_tot + aux
             return (x, aux_tot), (new_pc if cache is not None else None)
@@ -340,7 +341,8 @@ class TransformerLM:
         return logits_from(params["embed"], x), new_cache
 
     def prefill_ragged(self, params: Dict, tokens: jnp.ndarray,
-                       lengths: jnp.ndarray, cache: Dict):
+                       lengths: jnp.ndarray, cache: Dict,
+                       start_pos: Optional[jnp.ndarray] = None):
         """Mixed-length prefill for continuous batching: ``tokens`` is
         (B, S) with slot b's prompt *right-padded* — real tokens in columns
         0..lengths[b]-1, pad after.  Causal masking means a real token never
@@ -354,6 +356,14 @@ class TransformerLM:
         capacity-factor routing couples slots through the shared token
         budget — those architectures prefill per-request instead (the serve
         engine handles the fallback).
+
+        ``start_pos`` (B,) turns this into a **tail** prefill: slot b's
+        tokens are the uncached suffix of its prompt, occupying absolute
+        positions ``start_pos[b]..start_pos[b]+lengths[b]-1``, and the
+        cache arrives with the prefix K/V already restored
+        (``serve/prefix_cache.py``).  Rows with ``start_pos[b] == 0``
+        degrade to a plain full prefill, so one compiled program serves
+        waves mixing cache hits and misses.
         """
         cfg = self.cfg
         if any(k not in ATTENTION_KINDS for k in cfg.pattern):
@@ -365,12 +375,18 @@ class TransformerLM:
                              "text-only decoders")
         lengths = jnp.asarray(lengths, jnp.int32)
         B, S = tokens.shape
-        x = embed_tokens(params["embed"], tokens,
-                         jnp.arange(S) if cfg.learned_pos else None)
+        if start_pos is None:
+            emb_pos = jnp.arange(S) if cfg.learned_pos else None
+        else:
+            start_pos = jnp.asarray(start_pos, jnp.int32)
+            emb_pos = (start_pos[:, None] + jnp.arange(S)[None, :]
+                       if cfg.learned_pos else None)
+        x = embed_tokens(params["embed"], tokens, emb_pos)
         positions = jnp.arange(S)
         x, aux, new_cache = self._run_stack(params, x, mode="prefill",
                                             positions=positions, cache=cache,
-                                            lengths=lengths)
+                                            lengths=lengths,
+                                            start_pos=start_pos)
         # gather each slot's last *real* token (right-padding puts it at
         # column lengths[b]-1), then norm + LM head on (B, 1, D) only
         x_last = jnp.take_along_axis(

@@ -1,6 +1,7 @@
 from repro.serve.step import make_prefill_step, make_decode_step, cache_axes
 from repro.serve.scheduler import (Request, FairQueue, SlotScheduler,
                                    tenant_report)
+from repro.serve.prefix_cache import RadixPrefixCache, PrefixMatch
 from repro.serve.engine import ServeEngine
 from repro.serve.predictor import ModelPredictor, PredictRequest
 from repro.serve.autoscaler import QueueAutoscaler
@@ -8,5 +9,6 @@ from repro.serve.router import ReplicaRouter, PredictorFleet
 
 __all__ = ["make_prefill_step", "make_decode_step", "cache_axes",
            "Request", "FairQueue", "SlotScheduler", "tenant_report",
+           "RadixPrefixCache", "PrefixMatch",
            "ServeEngine", "ModelPredictor", "PredictRequest",
            "QueueAutoscaler", "ReplicaRouter", "PredictorFleet"]

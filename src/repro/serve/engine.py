@@ -63,7 +63,8 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ArchConfig, params, batch_size: int, max_seq: int,
-                 greedy: bool = True, mesh=None, rules=None, param_axes=None):
+                 greedy: bool = True, mesh=None, rules=None, param_axes=None,
+                 prefix_cache=None):
         self.cfg = cfg
         self.model = TransformerLM(cfg)
         self.batch = int(batch_size)
@@ -98,6 +99,24 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, pos, c: self.model.decode_step(p, t, pos, c))
         self._scatter = jax.jit(self._scatter_impl)
+        # radix prefix KV cache (serve/prefix_cache.py): admission becomes
+        # match → restore cached blocks → prefill the uncached tail only
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            if not self.ragged_ok:
+                raise ValueError(
+                    "prefix_cache requires the ragged-prefill path "
+                    "(attention-only dense decoder)")
+            if cfg.cache_dtype == "int8":
+                raise ValueError(
+                    "prefix_cache needs exact KV restore, but cache_dtype="
+                    "'int8' stores quantized K/V while prefill attends raw "
+                    "— greedy streams would not be bit-identical cache-on "
+                    "vs off.  Use quantize= for int8 weights instead")
+            prefix_cache.bind(self.model, self.max_seq)
+            self._prefill_ragged_start = jax.jit(
+                lambda p, t, n, s, c: self.model.prefill_ragged(
+                    p, t, n, c, start_pos=s))
 
     # ------------------------------------------------------------------ #
     # shared-cache plumbing
@@ -162,6 +181,9 @@ class ServeEngine:
                 wb = max(min(int(wave_pad), B), n)
             else:
                 wb = 1 if n == 1 else B           # wave bucket (batch pad)
+            if self.prefix_cache is not None:
+                return self._prefill_into_cached(cache, reqs, slots, lens,
+                                                 wb, pad_to)
             S = min(int(-(-int(lens.max()) // pad_to) * pad_to), self.max_seq)
             padded = np.zeros((wb, S), np.int32)
             full_lens = np.ones(wb, np.int32)     # dummy rows: 1 real token
@@ -183,6 +205,98 @@ class ServeEngine:
                 self.params, jnp.asarray(r.prompt, jnp.int32)[None, :], sub)
             cache = self._scatter(cache, sub, jnp.asarray(slots[i : i + 1]))
             first[i] = int(jnp.argmax(logits[0, -1]))
+        return cache, first
+
+    def _prefill_into_cached(self, cache, reqs: List[Request],
+                             slots: np.ndarray, lens: np.ndarray,
+                             wb: int, pad_to: int):
+        """Admission wave with the radix prefix cache: match each prompt's
+        longest cached block-aligned prefix (pinned), then **split the
+        wave** — miss rows (no cached prefix) run the plain ragged prefill
+        (the exact cache-off compiled program, so their streams are
+        trivially identical), hit rows get their matched blocks scattered
+        into a sub-cache with one jitted restore and run ONE ragged
+        **tail** prefill over the uncached suffixes
+        (``prefill_ragged(start_pos=)``) whose sequence bucket is sized by
+        the longest *tail* alone.  Without the split, a single miss in an
+        80%-shared wave dragged every hit row's bucket back to full prompt
+        width — through the wider prefix-attending program, i.e. slower
+        than no cache at all.  Finally every full prompt block (fresh or
+        ``valid_end``-improved) is gathered back into the pool with one
+        jitted extract per sub-cache."""
+        pc = self.prefix_cache
+        n, B = len(reqs), self.batch
+        matches = [pc.match(r.prompt) for r in reqs]
+        starts = np.asarray([m.length for m in matches], np.int32)
+        hit = np.nonzero(starts > 0)[0]
+        miss = np.nonzero(starts == 0)[0]
+        first = np.zeros(n, np.int32)
+        groups = []                               # (sub_cache, req indices)
+
+        def _bucket_batch(k: int) -> int:
+            p = 1
+            while p < k:
+                p <<= 1
+            return min(p, wb)                     # 1,2,4,… capped at wave pad
+
+        if len(miss):
+            idx = miss
+            k, wbg = len(idx), _bucket_batch(len(miss))
+            S = min(int(-(-int(lens[idx].max()) // pad_to) * pad_to),
+                    self.max_seq)
+            padded = np.zeros((wbg, S), np.int32)
+            glens = np.ones(wbg, np.int32)        # dummy rows: 1 real token
+            gslots = np.full(wbg, B, np.int32)    # dummy rows: OOB → dropped
+            for j, i in enumerate(idx):
+                padded[j, : lens[i]] = reqs[i].prompt
+                glens[j] = lens[i]
+                gslots[j] = slots[i]
+            sub = self.model.init_cache(wbg, self.max_seq)
+            logits, sub = self._prefill_ragged(
+                self.params, jnp.asarray(padded), jnp.asarray(glens), sub)
+            cache = self._scatter(cache, sub, jnp.asarray(gslots))
+            first[idx] = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                                    np.int32)[:k]
+            groups.append((sub, idx))
+        if len(hit):
+            idx = hit
+            k, wbg = len(idx), _bucket_batch(len(hit))
+            tails = lens[idx] - starts[idx]       # ≥ 1 (match leaves a tail)
+            S = min(int(-(-int(tails.max()) // pad_to) * pad_to),
+                    self.max_seq)
+            padded = np.zeros((wbg, S), np.int32)
+            glens = np.ones(wbg, np.int32)
+            gstarts = np.zeros(wbg, np.int32)
+            gslots = np.full(wbg, B, np.int32)
+            for j, i in enumerate(idx):
+                padded[j, : tails[j]] = reqs[i].prompt[starts[i]:]
+                glens[j] = tails[j]
+                gstarts[j] = starts[i]
+                gslots[j] = slots[i]
+            sub = self.model.init_cache(wbg, self.max_seq)
+            restores = [(j, node.block_id, d * pc.block_size,
+                         int(starts[i]))
+                        for j, i in enumerate(idx)
+                        for d, node in enumerate(matches[i].nodes)]
+            sub = pc.restore_into(sub, restores)
+            logits, sub = self._prefill_ragged_start(
+                self.params, jnp.asarray(padded), jnp.asarray(glens),
+                jnp.asarray(gstarts), sub)
+            cache = self._scatter(cache, sub, jnp.asarray(gslots))
+            first[idx] = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                                    np.int32)[:k]
+            groups.append((sub, idx))
+        # record this wave's full prompts: freshly computed blocks (and
+        # blocks whose valid_end improves) flow back into the pool from
+        # whichever sub-cache holds the row
+        for sub, idx in groups:
+            inserts = [(j, bid, st)
+                       for j, i in enumerate(idx)
+                       for bid, st in pc.plan_insert(reqs[i].prompt)]
+            pc.extract_from(sub, inserts)
+        for r, m in zip(reqs, matches):
+            r.cached_prefill = int(m.length)
+            pc.release(m)
         return cache, first
 
     # ------------------------------------------------------------------ #
@@ -340,6 +454,16 @@ class ServeEngine:
         sequence bucket cover admission waves of any size; the per-request
         fallback path compiles one prefill per distinct prompt length
         instead.
+
+        With a prefix cache the same waves run the match→restore→tail
+        pipeline: the first wave per bucket misses (compiling the
+        full-length tail prefill and the pool extract), the second wave
+        hits the blocks the first just inserted (compiling the restore
+        scatter and the short-tail bucket).  Tail buckets are
+        traffic-dependent, so an unseen tail length can still cost one
+        mid-stream compile of the (small) tail program; the warm-probe
+        blocks are dropped from the trie afterwards (``reset``) so warmup
+        never pollutes live hit-rate stats.
         """
         lens = sorted(set(int(n) for n in prompt_lens))
         cache = self.init_shared_cache()
@@ -363,3 +487,5 @@ class ServeEngine:
                          jnp.asarray(np.zeros((self.batch, 1), np.int32)),
                          jnp.asarray(np.zeros(self.batch, np.int32)), cache)
         jax.block_until_ready(_)
+        if self.prefix_cache is not None:
+            self.prefix_cache.reset()

@@ -20,7 +20,7 @@ lifetime — so rows never gather to one host.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable, Deque, List, Optional, Union
 
 import jax
@@ -75,6 +75,13 @@ class ModelPredictor:
     under the Model contract).  Each microbatch is served by one compiled
     predict; the final short batch is zero-padded to the same shape and
     the pad rows sliced off before results are scattered back.
+
+    Raw (string) rows pass a host-side **featurize memo** first — a
+    bounded LRU keyed by row content, the classical-model twin of the
+    serving stack's radix prefix KV cache: repeated raw-text rows skip
+    re-featurization entirely (fitted featurizers replay frozen
+    statistics, so a row's features are a pure function of its content).
+    ``featurize_cache=0`` disables it.
     """
 
     def __init__(self, model: Any, *, max_batch: int = 256,
@@ -82,7 +89,8 @@ class ModelPredictor:
                  schedule: Union[str, CollectiveSchedule]
                  = CollectiveSchedule.GATHER_BROADCAST,
                  predict_fn: Optional[Callable] = None,
-                 featurize: Optional[Callable] = None):
+                 featurize: Optional[Callable] = None,
+                 featurize_cache: int = 512):
         if max_batch < 1:
             raise ValueError("max_batch must be positive")
         if num_shards > 1 and max_batch % num_shards:
@@ -102,10 +110,16 @@ class ModelPredictor:
                            else getattr(model, "featurize_rows", None))
         self._compiled = None
         self._queue: Deque[PredictRequest] = deque()
+        # bounded LRU over featurized raw rows, keyed by row content
+        self._feat_cap = int(featurize_cache)
+        self._feat_memo: Optional[OrderedDict] = (
+            OrderedDict() if self._feat_cap > 0 else None)
         # stats
         self.batches = 0
         self.rows_served = 0
         self.rows_padded = 0
+        self.featurize_hits = 0
+        self.featurize_misses = 0
 
     # ------------------------------------------------------------------ #
     # service surface
@@ -144,10 +158,8 @@ class ModelPredictor:
         blocks = []
         for r in reqs:
             if r.raw:
-                feats = np.asarray(self._featurize(list(r.features)),
-                                   np.float32)
-                r.features = feats          # (n, d): featurized once
-                r.raw = False
+                r.features = self._featurize_rows(list(r.features))
+                r.raw = False               # (n, d): featurized once
             blocks.append(r.features)
         rows = np.concatenate(blocks, axis=0)
         outs: List[np.ndarray] = []
@@ -178,6 +190,49 @@ class ModelPredictor:
             r.finished_at = now
             ofs += n
         return reqs
+
+    @staticmethod
+    def _row_key(row):
+        """Content key for one raw row (str/bytes hash directly; anything
+        array-like keys on dtype+shape+bytes)."""
+        if isinstance(row, (str, bytes)):
+            return row
+        arr = np.asarray(row)
+        if arr.dtype.kind in "OUS":
+            return str(row)
+        return (arr.dtype.str, arr.shape, arr.tobytes())
+
+    def _featurize_rows(self, rows: List[Any]) -> np.ndarray:
+        """Featurize ``rows`` through the LRU memo: only content-new rows
+        reach the featurizer; repeats are served from the memo (valid
+        because a fitted featurizer is a pure per-row function)."""
+        if self._feat_memo is None:
+            return np.asarray(self._featurize(rows), np.float32)
+        memo = self._feat_memo
+        keys = [self._row_key(r) for r in rows]
+        local: dict = {}
+        miss_keys: List[Any] = []
+        miss_rows: List[Any] = []
+        for k, r in zip(keys, rows):
+            if k in local:
+                continue
+            if k in memo:
+                memo.move_to_end(k)
+                local[k] = memo[k]
+            else:
+                local[k] = None
+                miss_keys.append(k)
+                miss_rows.append(r)
+        if miss_rows:
+            feats = np.asarray(self._featurize(miss_rows), np.float32)
+            for k, f in zip(miss_keys, feats):
+                local[k] = f
+                memo[k] = f
+                if len(memo) > self._feat_cap:
+                    memo.popitem(last=False)
+        self.featurize_misses += len(miss_rows)
+        self.featurize_hits += len(rows) - len(miss_rows)
+        return np.stack([local[k] for k in keys])
 
     def predict_many(self, blocks: List[np.ndarray],
                      now: float = 0.0) -> List[np.ndarray]:
@@ -225,4 +280,7 @@ class ModelPredictor:
             "pad_fraction": self.rows_padded / (served + self.rows_padded),
             "max_batch": self.max_batch,
             "shards": self.num_shards if self.mesh is None else "mesh",
+            "featurize_hits": self.featurize_hits,
+            "featurize_misses": self.featurize_misses,
+            "featurize_cache": self._feat_cap,
         }

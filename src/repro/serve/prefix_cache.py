@@ -1,0 +1,418 @@
+"""Fleet-wide radix prefix KV cache: reuse repeated prompt prefixes.
+
+Production traffic re-prefills the same token prefixes (system prompts,
+few-shot templates, multi-tenant boilerplate) thousands of times.  This
+module turns that redundancy into skipped work — the Petuum principle of
+exploiting repeated structure, applied to serving: the host keeps a
+**token-block trie** over every prompt the fleet has prefilled, and the
+device keeps a **block pool** holding the corresponding KV-cache entries.
+At admission the engine asks for the longest cached block-aligned prefix,
+copies its K/V blocks into the request's slot lane with ONE jitted
+scatter, and runs prefill over the *uncached tail only*
+(``TransformerLM.prefill_ragged(start_pos=)``).
+
+Host half (pure Python, no device state — property-tested in
+``tests/test_prefix_cache.py``):
+
+  * fixed-size blocks (``block_size`` tokens) keyed by exact content, so
+    the radix trie never needs mid-edge splits — a node IS a block;
+  * refcounted nodes: ``match`` pins its chain until ``release`` so an
+    eviction can never free a block mid-restore;
+  * LRU eviction of **unreferenced leaves** only (an interior node is by
+    construction older than its children and still reachable through
+    them), bounded by ``capacity_blocks``;
+  * hit/miss/evict statistics for the launcher's RESULT:: report.
+
+Device half (bound to a model via :meth:`bind`):
+
+  * the pool is one pytree shaped like the model's KV cache with
+    ``(periods, capacity, block_size, …)`` leaves;
+  * ``restore_into`` scatters any number of (lane, block) pairs into a
+    wave's sub-cache in one jitted call; ``extract_from`` gathers freshly
+    prefilled blocks back into the pool in one jitted call.  Both pad
+    their block list to a power-of-two bucket so compiled shapes form a
+    small ladder.
+
+Ring-buffer correctness: sliding-window / chunked-attention layers keep
+only ``window``/``attn_chunk`` cache slots, so a block extracted from a
+prompt of length E holds garbage at positions < E - ring for those
+layers.  Each node records ``valid_end`` (the E of the extract that wrote
+it; re-extracts from shorter prompts shrink it — the prefix property
+guarantees equal content where both are valid) and ``match`` truncates to
+the longest prefix whose *needed* positions — the last ``ring`` of each
+ring size — avoid every block's garbage region.  Global-attention layers
+(ring = max_seq) never truncate.
+
+Exactness: restored blocks are the bits a full prefill wrote (extracted
+after that prefill, re-scattered verbatim), so greedy streams are
+bit-identical cache-on vs cache-off — the invariant
+``tests/test_serve_prefix.py`` pins across ragged, windowed, and
+weight-quantized (int8/bf16) paths.  ``cache_dtype="int8"`` (quantized
+KV *storage*) is the one exclusion: prefill attends raw K/V while the
+cache stores quantized, so a restored prefix would be attended
+dequantized — ``ServeEngine`` refuses the combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["RadixPrefixCache", "PrefixMatch"]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+class _Node:
+    """One cached block: a trie edge labelled by ``block_size`` tokens."""
+
+    __slots__ = ("key", "parent", "children", "block_id", "start",
+                 "valid_end", "refs", "last_used")
+
+    def __init__(self, key: bytes, parent: Optional["_Node"], block_id: int,
+                 start: int, valid_end: int):
+        self.key = key
+        self.parent = parent
+        self.children: Dict[bytes, "_Node"] = {}
+        self.block_id = block_id
+        self.start = start              # absolute token offset of the block
+        self.valid_end = valid_end      # prompt length at pool-write time
+        self.refs = 0
+        self.last_used = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """A pinned match: ``length`` tokens over ``nodes`` (one per block).
+    Hold it across the restore, then :meth:`RadixPrefixCache.release` it."""
+
+    length: int
+    nodes: Tuple[_Node, ...]
+
+    @property
+    def block_ids(self) -> Tuple[int, ...]:
+        return tuple(n.block_id for n in self.nodes)
+
+
+class RadixPrefixCache:
+    """Token-block trie + device KV block pool (see module docstring).
+
+    The host trie works standalone (``match``/``plan_insert``/``release``
+    need no device state); :meth:`bind` attaches the pool and the jitted
+    restore/extract for a concrete model.  One instance is shared by a
+    whole :class:`~repro.serve.router.ReplicaRouter` fleet — its replicas
+    are lane groups on one engine, so sharing is free.
+    """
+
+    def __init__(self, block_size: int = 16, capacity_blocks: int = 256,
+                 ring_sizes: Sequence[int] = ()):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if capacity_blocks < 1:
+            raise ValueError("capacity_blocks must be >= 1")
+        self.block_size = int(block_size)
+        self.capacity = int(capacity_blocks)
+        # ring_sizes is normally set by bind(); the ctor knob exists so the
+        # host-only property tests can exercise ring-validity truncation
+        self._ring_sizes: Tuple[int, ...] = tuple(sorted(set(ring_sizes)))
+        self._root = _Node(b"", None, -1, -self.block_size, 0)
+        self._registry: set = set()     # all live nodes (eviction scan)
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+        self._clock = 0
+        # device half (None until bind)
+        self._pool = None
+        self._max_seq: Optional[int] = None
+        self._restore_jit = None
+        self._extract_jit = None
+        self._reset_stats()
+
+    def _reset_stats(self) -> None:
+        self.requests = 0
+        self.hits = 0
+        self.misses = 0
+        self.cached_tokens = 0          # prefill tokens served from the pool
+        self.prompt_tokens = 0          # total prefill tokens requested
+        self.evictions = 0
+        self.inserted_blocks = 0
+
+    # ------------------------------------------------------------------ #
+    # host trie
+    # ------------------------------------------------------------------ #
+    @property
+    def blocks(self) -> int:
+        """Live blocks in the trie (≤ capacity — property-tested)."""
+        return len(self._registry)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _keys(self, tokens: np.ndarray, nblocks: int) -> List[bytes]:
+        bs = self.block_size
+        return [tokens[d * bs:(d + 1) * bs].tobytes() for d in range(nblocks)]
+
+    def _walk(self, tokens: np.ndarray, max_blocks: int) -> List[_Node]:
+        chain: List[_Node] = []
+        node = self._root
+        for key in self._keys(tokens, max_blocks):
+            child = node.children.get(key)
+            if child is None:
+                break
+            chain.append(child)
+            node = child
+        return chain
+
+    def _usable_blocks(self, chain: List[_Node], cap: int) -> int:
+        """Longest usable prefix (in blocks): every ring size must find its
+        needed positions — the last ``ring`` before the match end — outside
+        each block's garbage region (positions < valid_end - ring)."""
+        bs = self.block_size
+        m = min(len(chain), cap)
+        while m > 0:
+            L = m * bs
+            ok = True
+            for ring in self._ring_sizes:
+                lo = max(0, L - ring)           # needed: positions [lo, L)
+                for d in range(lo // bs, m):
+                    garbage_end = chain[d].valid_end - ring
+                    if max(lo, chain[d].start) < min(L, garbage_end):
+                        ok = False
+                        break
+                if not ok:
+                    break
+            if ok:
+                return m
+            m -= 1
+        return 0
+
+    def match(self, tokens: np.ndarray) -> PrefixMatch:
+        """Longest usable cached block-aligned prefix of ``tokens``,
+        **pinned** (refcounts incremented) until :meth:`release`.  Always
+        leaves ≥ 1 uncached tail token so the tail prefill can produce the
+        first greedy logits.  Updates hit/miss stats and LRU clocks."""
+        toks = np.ascontiguousarray(tokens, np.int32)
+        cap = max(0, (len(toks) - 1) // self.block_size)
+        chain = self._walk(toks, cap)
+        m = self._usable_blocks(chain, cap)
+        chain = chain[:m]
+        t = self._tick()
+        for node in chain:
+            node.refs += 1
+            node.last_used = t
+        length = m * self.block_size
+        self.requests += 1
+        if length > 0:
+            self.hits += 1
+        else:
+            self.misses += 1
+        self.cached_tokens += length
+        self.prompt_tokens += len(toks)
+        return PrefixMatch(length=length, nodes=tuple(chain))
+
+    def release(self, match: PrefixMatch) -> None:
+        """Unpin a match's chain (refcounts back down, never below 0)."""
+        for node in match.nodes:
+            if node.refs <= 0:
+                raise RuntimeError("release without matching pin")
+            node.refs -= 1
+
+    def peek(self, tokens: np.ndarray) -> int:
+        """Match length (tokens) WITHOUT pinning, stats, or LRU touches —
+        the router's SLO predictor uses this to estimate tail-prefill
+        length before dispatch."""
+        toks = np.ascontiguousarray(tokens, np.int32)
+        cap = max(0, (len(toks) - 1) // self.block_size)
+        chain = self._walk(toks, cap)
+        return self._usable_blocks(chain, cap) * self.block_size
+
+    def plan_insert(self, tokens: np.ndarray) -> List[Tuple[int, int]]:
+        """Record every full block of ``tokens`` in the trie; returns the
+        ``(block_id, start)`` writes whose pool data the caller must fill
+        (via :meth:`extract_from`) **before the next match** — new blocks,
+        plus existing blocks whose ``valid_end`` shrinks (a shorter prompt
+        strictly improves ring validity; content is equal where both are
+        valid by the prefix property).  Allocation evicts LRU unreferenced
+        leaves when full and stops planning when nothing is evictable."""
+        toks = np.ascontiguousarray(tokens, np.int32)
+        end = len(toks)
+        bs = self.block_size
+        writes: List[Tuple[int, int]] = []
+        pinned: List[_Node] = []
+        node = self._root
+        t = self._tick()
+        try:
+            for d, key in enumerate(self._keys(toks, end // bs)):
+                child = node.children.get(key)
+                if child is None:
+                    bid = self._alloc()
+                    if bid is None:
+                        break           # full of pinned/interior blocks
+                    child = _Node(key, node, bid, d * bs, end)
+                    node.children[key] = child
+                    self._registry.add(child)
+                    self.inserted_blocks += 1
+                    writes.append((bid, d * bs))
+                elif end < child.valid_end:
+                    child.valid_end = end
+                    writes.append((child.block_id, d * bs))
+                child.last_used = t
+                # pin the path so allocating block d+1 can never evict the
+                # freshly inserted (still-leaf) block d
+                child.refs += 1
+                pinned.append(child)
+                node = child
+        finally:
+            for n in pinned:
+                n.refs -= 1
+        return writes
+
+    def _alloc(self) -> Optional[int]:
+        if self._free:
+            return self._free.pop()
+        victims = [n for n in self._registry
+                   if not n.children and n.refs == 0]
+        if not victims:
+            return None
+        victim = min(victims, key=lambda n: n.last_used)
+        del victim.parent.children[victim.key]
+        self._registry.discard(victim)
+        self.evictions += 1
+        return victim.block_id
+
+    def reset(self) -> None:
+        """Drop every cached block and zero the stats; the device pool and
+        its compiled restore/extract survive (warmup calls this so compile
+        probes never pollute the live trie)."""
+        self._root = _Node(b"", None, -1, -self.block_size, 0)
+        self._registry.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._clock = 0
+        self._reset_stats()
+
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": (self.cached_tokens / self.prompt_tokens
+                         if self.prompt_tokens else 0.0),
+            "cached_tokens": self.cached_tokens,
+            "prompt_tokens": self.prompt_tokens,
+            "evictions": self.evictions,
+            "inserted_blocks": self.inserted_blocks,
+            "blocks": self.blocks,
+            "capacity_blocks": self.capacity,
+            "block_size": self.block_size,
+        }
+
+    # ------------------------------------------------------------------ #
+    # device pool
+    # ------------------------------------------------------------------ #
+    def bind(self, model, max_seq: int) -> None:
+        """Attach the block pool for ``model``'s cache layout.  Idempotent
+        for a matching layout; a second engine with a different cache
+        shape (other arch / max_seq) is refused — one pool, one layout."""
+        import jax
+        import jax.numpy as jnp
+
+        template = model.init_cache(1, max_seq)
+        shapes = tuple((leaf.shape[0], leaf.shape[2]) + tuple(leaf.shape[3:])
+                       for leaf in jax.tree.leaves(template))
+        if self._pool is not None:
+            if shapes != self._bound_shapes or int(max_seq) != self._max_seq:
+                raise ValueError(
+                    "prefix cache already bound to a different cache layout "
+                    "— one RadixPrefixCache serves one model/max_seq")
+            return
+        self._bound_shapes = shapes
+        self._max_seq = int(max_seq)
+        self._ring_sizes = tuple(sorted(
+            {int(leaf.shape[2]) for leaf in jax.tree.leaves(template)}))
+        cap, bs = self.capacity, self.block_size
+        self._pool = jax.tree.map(
+            lambda leaf: jnp.zeros((leaf.shape[0], cap, bs)
+                                   + tuple(leaf.shape[3:]), leaf.dtype),
+            template)
+        self._restore_jit = jax.jit(self._restore_impl)
+        self._extract_jit = jax.jit(self._extract_impl)
+
+    @property
+    def bound(self) -> bool:
+        return self._pool is not None
+
+    def _restore_impl(self, cache, pool, lanes, ids, starts, match_lens):
+        import jax
+        import jax.numpy as jnp
+
+        bs = self.block_size
+        pos = starts[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
+
+        def leaf(c, p):
+            ring = c.shape[2]
+            vals = p[:, ids]                       # (periods, nb, bs, …)
+            # a ring keeps only the last ``ring`` positions before the
+            # match end; everything else (and padding, match_len=0) routes
+            # out of bounds and is dropped
+            keep = (pos < match_lens[:, None]) & (pos >= match_lens[:, None]
+                                                  - ring)
+            dest = jnp.where(keep, pos % ring, ring)
+            return c.at[:, lanes[:, None], dest].set(vals, mode="drop")
+
+        return jax.tree.map(leaf, cache, pool)
+
+    def _extract_impl(self, cache, pool, lanes, ids, starts):
+        import jax
+        import jax.numpy as jnp
+
+        bs = self.block_size
+        pos = starts[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
+
+        def leaf(c, p):
+            ring = c.shape[2]
+            vals = c[:, lanes[:, None], pos % ring]  # (periods, nb, bs, …)
+            # padding carries id == capacity → dropped
+            return p.at[:, ids].set(vals, mode="drop")
+
+        return jax.tree.map(leaf, cache, pool)
+
+    def _pad(self, entries: List[Tuple[int, ...]], pad_id: int):
+        import jax.numpy as jnp
+
+        nb = _next_pow2(len(entries))
+        cols = [np.zeros(nb, np.int32) for _ in range(4)]
+        cols[1][:] = pad_id
+        for i, e in enumerate(entries):
+            for c, v in zip(cols, e):
+                c[i] = v
+        return [jnp.asarray(c) for c in cols]
+
+    def restore_into(self, cache, entries: List[Tuple[int, int, int, int]]):
+        """Scatter cached blocks into a wave sub-cache in ONE jitted call.
+        ``entries``: (lane, block_id, start, match_len) per block — the
+        match_len of the owning request bounds each ring's keep window.
+        Returns the updated cache (input is not donated)."""
+        if not entries:
+            return cache
+        if self._pool is None:
+            raise RuntimeError("restore_into before bind()")
+        lanes, ids, starts, lens = self._pad(
+            [(e[0], e[1], e[2], e[3]) for e in entries], pad_id=0)
+        # padded rows carry match_len 0 → every position OOB-dropped
+        return self._restore_jit(cache, self._pool, lanes, ids, starts, lens)
+
+    def extract_from(self, cache, entries: List[Tuple[int, int, int]]) -> None:
+        """Gather freshly prefilled blocks out of a wave sub-cache into the
+        pool in ONE jitted call.  ``entries``: (lane, block_id, start)."""
+        if not entries:
+            return
+        if self._pool is None:
+            raise RuntimeError("extract_from before bind()")
+        lanes, ids, starts, _ = self._pad(
+            [(e[0], e[1], e[2], 0) for e in entries], pad_id=self.capacity)
+        self._pool = self._extract_jit(cache, self._pool, lanes, ids, starts)

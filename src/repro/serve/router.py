@@ -18,11 +18,17 @@ table); the router in front owns three decisions:
   * **dispatch** — each arrival goes to the active replica with the least
     load (busy + queued), after admission control;
   * **admission** — when the request carries a deadline (``slo_ms`` or a
-    per-priority-class default), predicted completion = EMA service time ×
-    (queued-ahead / slots + 1); a hopeless request is *rejected* (or
-    *degraded*: ``max_new_tokens`` halved, then re-tested) rather than
-    queued to miss.  Until the EMA has warmed (3 completions) everything
-    is admitted — the router never sheds load it knows nothing about;
+    per-priority-class default), predicted completion = per-generated-token
+    EMA service time × (queued-ahead tokens / slots + the request's own
+    ``max_new_tokens`` + a weighted tail-prefill length, shortened by the
+    prefix cache's matched prefix when one is configured); a hopeless
+    request is *rejected* (or *degraded*: ``max_new_tokens`` halved, then
+    re-tested) rather than queued to miss.  Normalizing per token is what
+    makes a 512-token request predict 256× longer than a 2-token one —
+    the raw per-request EMA gave both the same prediction (regression:
+    ``tests/test_serve_router.py``).  Until the EMA has warmed
+    (3 completions) everything is admitted — the router never sheds load
+    it knows nothing about;
   * **elasticity** — a :class:`QueueAutoscaler` maps demand to a target
     replica count each tick.  Scale-up activates the next lane group
     (compile-warm if ``warmup`` ran).  Scale-down *drains*: the highest
@@ -74,7 +80,9 @@ class ReplicaRouter:
                  admission: str = "none",          # "none"|"reject"|"degrade"
                  class_slo_ms: Optional[Dict[int, float]] = None,
                  autoscaler: Optional[QueueAutoscaler] = None,
-                 ema_beta: float = 0.8):
+                 ema_beta: float = 0.8,
+                 prefix_cache=None,
+                 prefill_weight: float = 0.1):
         if admission not in ("none", "reject", "degrade"):
             raise ValueError(f"admission={admission!r}")
         if slots_per_replica < 1 or max_replicas < 1:
@@ -82,9 +90,12 @@ class ReplicaRouter:
         self.spr = int(slots_per_replica)
         self.max_replicas = int(max_replicas)
         self.min_replicas = max(1, min(int(min_replicas), self.max_replicas))
+        # one engine ⇒ one cache ⇒ the prefix trie is shared fleet-wide
+        # for free: a prefix any replica prefilled is a hit for all lanes
         self.engine = ServeEngine(cfg, params,
                                   batch_size=self.spr * self.max_replicas,
-                                  max_seq=max_seq)
+                                  max_seq=max_seq,
+                                  prefix_cache=prefix_cache)
         self.scheds = [SlotScheduler(self.spr, tenant_weights)
                        for _ in range(self.max_replicas)]
         self.admission = admission
@@ -93,9 +104,12 @@ class ReplicaRouter:
         # no autoscaler → fixed fleet at max
         self.active = self.max_replicas if autoscaler is None else self.min_replicas
         self.rejected: List[Request] = []
-        self._ema_service: Optional[float] = None
+        # EMA of service seconds PER GENERATED TOKEN (a per-request EMA
+        # made a 1-token and a 512-token request predict identically)
+        self._ema_tok: Optional[float] = None
         self._ema_beta = float(ema_beta)
         self._completions = 0
+        self._prefill_weight = float(prefill_weight)
         self._span_step = {}           # span → jitted slice-decode-writeback
 
     # ------------------------------------------------------------------ #
@@ -106,29 +120,47 @@ class ReplicaRouter:
             self.class_slo_ms.get(req.priority)
         return None if ms is None else ms / 1e3
 
-    def _predicted_completion(self, replica: int) -> Optional[float]:
-        """Seconds until a request dispatched to ``replica`` now would
-        finish: (queued-ahead / slots + 1) service times.  None until the
-        service-time EMA has warmed."""
-        if self._ema_service is None or self._completions < 3:
+    def _request_tokens(self, req: Request,
+                        max_new: Optional[int] = None) -> float:
+        """Token-equivalents of serving ``req``: its generated tokens plus
+        its tail-prefill length weighted down by ``prefill_weight``
+        (prefill tokens are batched, decode tokens are steps).  With a
+        prefix cache the tail shrinks by the currently matched prefix —
+        saved prefill feeds straight into the admission prediction."""
+        gen = req.max_new_tokens if max_new is None else max_new
+        tail = len(req.prompt)
+        pc = self.engine.prefix_cache
+        if pc is not None:
+            tail -= pc.peek(req.prompt)
+        return gen + self._prefill_weight * tail
+
+    def _predicted_completion(self, replica: int, req: Request,
+                              max_new: Optional[int] = None
+                              ) -> Optional[float]:
+        """Seconds until ``req`` dispatched to ``replica`` now would
+        finish: per-token EMA × (queued-ahead tokens / slots + the
+        request's own token-equivalents).  None until the EMA has
+        warmed."""
+        if self._ema_tok is None or self._completions < 3:
             return None
-        queued = self.scheds[replica].queued()
-        return self._ema_service * (queued / self.spr + 1.0)
+        queued_tok = self.scheds[replica].queued_tokens()
+        return self._ema_tok * (queued_tok / self.spr
+                                + self._request_tokens(req, max_new))
 
     def _admit_or_shed(self, req: Request, replica: int, now: float) -> bool:
         """Returns True to dispatch ``req`` (possibly degraded)."""
         deadline = self._deadline_s(req)
         if self.admission == "none" or deadline is None:
             return True
-        predicted = self._predicted_completion(replica)
+        predicted = self._predicted_completion(replica, req)
         if predicted is None or predicted <= deadline:
             return True
         if self.admission == "degrade" and req.max_new_tokens > 1:
             # a shorter answer is a shorter service: retest at half length
-            scaled = self._ema_service * (
-                self.scheds[replica].queued() / self.spr + 0.5)
-            if scaled <= deadline:
-                req.max_new_tokens = max(1, req.max_new_tokens // 2)
+            half = max(1, req.max_new_tokens // 2)
+            scaled = self._predicted_completion(replica, req, max_new=half)
+            if scaled is not None and scaled <= deadline:
+                req.max_new_tokens = half
                 req.degraded = True
                 return True
         req.rejected = True
@@ -278,9 +310,10 @@ class ReplicaRouter:
     def _retire(self, sched: SlotScheduler, slot: int, t: float) -> None:
         req = sched.retire(slot, t)
         if req.admitted_at is not None and req.finished_at is not None:
-            s = req.finished_at - req.admitted_at
-            self._ema_service = s if self._ema_service is None else (
-                self._ema_beta * self._ema_service + (1 - self._ema_beta) * s)
+            s = (req.finished_at - req.admitted_at) / max(
+                1, len(req.out_tokens))
+            self._ema_tok = s if self._ema_tok is None else (
+                self._ema_beta * self._ema_tok + (1 - self._ema_beta) * s)
             self._completions += 1
 
     # ------------------------------------------------------------------ #
@@ -320,6 +353,9 @@ class ReplicaRouter:
                             jnp.zeros((span, 1), jnp.int32),
                             jnp.zeros(span, jnp.int32), cache)
             jax.block_until_ready(nxt)
+        if self.engine.prefix_cache is not None:
+            # drop the warm-probe blocks the wave loop above inserted
+            self.engine.prefix_cache.reset()
 
     def report(self) -> dict:
         """Fleet rollup: per-replica scheduler reports, fleet-wide latency
@@ -340,7 +376,10 @@ class ReplicaRouter:
             "latency_p95": _pct(totals, 95),
             "latency_p99": _pct(totals, 99),
             "backfills": sum(s.backfills for s in self.scheds),
-            "ema_service_s": self._ema_service,
+            "ema_tok_s": self._ema_tok,
+            "prefix_cache": (self.engine.prefix_cache.stats()
+                             if self.engine.prefix_cache is not None
+                             else None),
             "tenants": tenant_report(finished + self.rejected),
             "autoscaler_events": (list(self.autoscaler.events)
                                   if self.autoscaler else []),

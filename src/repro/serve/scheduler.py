@@ -64,6 +64,9 @@ class Request:
     # scheduler-stamped accounting
     admitted_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # engine-stamped at admission: prompt tokens whose KV entries came out
+    # of the radix prefix cache instead of prefill (serve/prefix_cache.py)
+    cached_prefill: int = 0
     # monotone submission sequence stamped by SlotScheduler.submit — the
     # FIFO tiebreak for equal arrival times
     seq: int = -1
@@ -213,6 +216,13 @@ class SlotScheduler:
     def queued(self) -> int:
         return len(self._queue) + len(self._pending)
 
+    def queued_tokens(self) -> int:
+        """Generation tokens still owed by queued + pending requests — the
+        work-ahead measure the router's SLO admission predictor scales by
+        (a queue of 1-token requests is not a queue of 512-token ones)."""
+        return (sum(r.max_new_tokens for r in self._queue)
+                + sum(r.max_new_tokens for r in self._pending))
+
     def has_work(self) -> bool:
         return bool(self._queue or self._pending or self.busy)
 
@@ -294,6 +304,7 @@ def tenant_report(requests: List[Request]) -> Dict[str, dict]:
     for r in requests:
         t = out.setdefault(r.tenant, {
             "finished": 0, "rejected": 0, "degraded": 0,
+            "prefill_tokens": 0, "cached_prefill_tokens": 0,
             "slo_total": 0, "slo_attained": 0, "_lat": []})
         if r.rejected:
             t["rejected"] += 1
@@ -301,6 +312,10 @@ def tenant_report(requests: List[Request]) -> Dict[str, dict]:
             t["finished"] += 1
             if r.degraded:
                 t["degraded"] += 1
+            # per-tenant prefix-cache accounting (0/0 → hit rate 0.0 when
+            # no prefix cache is configured)
+            t["prefill_tokens"] += len(r.prompt)
+            t["cached_prefill_tokens"] += r.cached_prefill
             if r.finished_at is not None:
                 t["_lat"].append(r.finished_at - r.arrival)
         if r.slo_ms is not None:
@@ -314,6 +329,9 @@ def tenant_report(requests: List[Request]) -> Dict[str, dict]:
         t["latency_p99"] = _pct(lat, 99)
         t["slo_attainment"] = (t["slo_attained"] / t["slo_total"]
                                if t["slo_total"] else 1.0)
+        t["prefix_hit_rate"] = (t["cached_prefill_tokens"]
+                                / t["prefill_tokens"]
+                                if t["prefill_tokens"] else 0.0)
     return out
 
 

@@ -1,0 +1,224 @@
+"""Host-trie tests for ``repro.serve.prefix_cache`` — unit coverage plus
+the property suite over random op interleavings (hypothesis when
+installed, the deterministic fallback otherwise).  Device-half behaviour
+(restore/extract exactness through a real model) lives in
+``tests/test_serve_prefix.py``."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.serve.prefix_cache import RadixPrefixCache  # noqa: E402
+
+
+def _toks(seed, n):
+    return np.random.default_rng(seed).integers(0, 1000, size=n).astype(np.int32)
+
+
+# --------------------------------------------------------------------------- #
+# unit coverage
+# --------------------------------------------------------------------------- #
+class TestTrieUnits:
+    def test_miss_then_insert_then_hit(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=16)
+        toks = _toks(0, 17)
+        m = pc.match(toks)
+        assert m.length == 0 and m.nodes == ()
+        pc.release(m)
+        writes = pc.plan_insert(toks)
+        assert [s for _, s in writes] == [0, 4, 8, 12]   # 4 full blocks
+        m = pc.match(toks)
+        # the last *matchable* block is capped so >= 1 tail token remains
+        assert m.length == 16
+        pc.release(m)
+
+    def test_full_prompt_match_leaves_tail_token(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=16)
+        toks = _toks(1, 16)                              # exactly 4 blocks
+        pc.plan_insert(toks)
+        m = pc.match(toks)
+        assert m.length == 12                            # (16-1)//4 blocks
+        pc.release(m)
+
+    def test_match_is_block_aligned_prefix(self):
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=16)
+        toks = _toks(2, 30)
+        pc.plan_insert(toks)
+        other = toks.copy()
+        other[20] += 1                                   # diverge in block 2
+        m = pc.match(other)
+        assert m.length == 16                            # blocks 0-1 only
+        pc.release(m)
+
+    def test_release_twice_raises(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=8)
+        toks = _toks(3, 9)
+        pc.plan_insert(toks)
+        m = pc.match(toks)
+        pc.release(m)
+        with pytest.raises(RuntimeError):
+            pc.release(m)
+
+    def test_valid_end_shrinks_on_shorter_reinsert(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=8)
+        long = _toks(4, 12)
+        pc.plan_insert(long)
+        node = pc._root.children[long[:4].tobytes()]
+        assert node.valid_end == 12
+        writes = pc.plan_insert(long[:8])                # shorter prefix
+        assert node.valid_end == 8
+        assert (node.block_id, 0) in writes              # pool rewrite queued
+
+    def test_ring_truncation(self):
+        """A windowed ring keeps only the last ``ring`` positions of the
+        extraction, so a match must drop blocks whose needed positions fall
+        in the garbage region."""
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=16,
+                              ring_sizes=(8,))
+        toks = _toks(5, 17)
+        pc.plan_insert(toks)                             # valid_end = 17
+        # matching 16 needs positions [8, 16); garbage is [0, 17-8=9):
+        # block 2 (positions 8..11) overlaps → no usable prefix at all
+        # (shorter matches need even earlier positions)
+        assert pc.peek(toks) == 0
+        pc.plan_insert(toks[:8])                         # valid_end -> 8
+        m = pc.match(toks)
+        # blocks 0-1 now fully valid for ring 8; blocks 2-3 still garbage
+        assert m.length == 8
+        pc.release(m)
+
+    def test_global_ring_never_truncates(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=16,
+                              ring_sizes=(64,))
+        toks = _toks(6, 17)
+        pc.plan_insert(toks)
+        assert pc.peek(toks) == 16
+
+    def test_eviction_prefers_lru_unreferenced_leaf(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=2)
+        a, b = _toks(7, 5), _toks(8, 5)
+        pc.plan_insert(a)
+        pc.plan_insert(b)
+        assert pc.blocks == 2
+        pc.match(b).nodes                                # touch b's LRU clock
+        pc.release(pc.match(b))
+        c = _toks(9, 5)
+        pc.plan_insert(c)                                # evicts a (oldest)
+        assert pc.peek(a) == 0 and pc.peek(b) == 4 and pc.peek(c) == 4
+        assert pc.evictions >= 1
+
+    def test_pinned_blocks_never_evicted(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=2)
+        a = _toks(10, 9)
+        pc.plan_insert(a)                                # fills capacity
+        m = pc.match(a)                                  # pins both blocks
+        writes = pc.plan_insert(_toks(11, 9))            # nothing evictable
+        assert writes == []
+        assert pc.peek(a) == 8                           # chain intact
+        pc.release(m)
+
+    def test_insert_does_not_evict_own_fresh_blocks(self):
+        """Allocating block d+1 under pressure must never evict the
+        freshly inserted (still unreferenced leaf) block d of the same
+        prompt — the path is pinned for the duration of the insert."""
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=3)
+        toks = _toks(12, 13)                             # wants 3 blocks
+        writes = pc.plan_insert(toks)
+        assert len(writes) == 3
+        assert pc.peek(toks) == 12                       # whole chain alive
+
+    def test_reset_clears_trie_and_stats(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=8)
+        toks = _toks(13, 9)
+        pc.plan_insert(toks)
+        pc.release(pc.match(toks))
+        pc.reset()
+        assert pc.blocks == 0 and pc.stats()["requests"] == 0
+        assert pc.peek(toks) == 0
+
+    def test_stats_shape(self):
+        pc = RadixPrefixCache(block_size=4, capacity_blocks=8)
+        toks = _toks(14, 9)
+        pc.release(pc.match(toks))
+        pc.plan_insert(toks)
+        pc.release(pc.match(toks))
+        s = pc.stats()
+        assert s["requests"] == 2 and s["hits"] == 1 and s["misses"] == 1
+        assert s["cached_tokens"] == 8 and s["prompt_tokens"] == 18
+        assert 0.0 < s["hit_rate"] < 1.0
+
+    def test_ctor_validation(self):
+        with pytest.raises(ValueError):
+            RadixPrefixCache(block_size=0)
+        with pytest.raises(ValueError):
+            RadixPrefixCache(capacity_blocks=0)
+
+
+# --------------------------------------------------------------------------- #
+# property suite: random interleavings of match / release / insert
+# --------------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_interleaving_invariants(seed):
+    """Under random match/plan_insert/release/reset interleavings over a
+    small token universe (forcing shared prefixes, evictions, and ring
+    truncation):
+
+      * every match is a block-aligned true prefix of the probe, shorter
+        than the probe (>= 1 tail token);
+      * refcounts never go negative and pinned chains survive eviction
+        pressure (their tokens still match while pinned);
+      * live blocks never exceed ``capacity_blocks``;
+      * insert/match round-trip: right after a successful full insert, the
+        prompt matches to its full matchable length unless a ring's
+        validity rule forbids it.
+    """
+    rng = np.random.default_rng(seed)
+    bs = int(rng.choice([2, 4]))
+    cap = int(rng.choice([3, 6, 12]))
+    rings = [(), (2 * bs,), (2 * bs, 64)][rng.integers(0, 3)]
+    pc = RadixPrefixCache(block_size=bs, capacity_blocks=cap,
+                          ring_sizes=rings)
+    # tiny universe: 3 base prompts + random perturbations → heavy sharing
+    bases = [rng.integers(0, 5, size=int(rng.integers(bs, 6 * bs)))
+             .astype(np.int32) for _ in range(3)]
+    pinned = []                                          # (match, tokens)
+    for _ in range(60):
+        op = rng.integers(0, 10)
+        toks = bases[rng.integers(0, 3)].copy()
+        if rng.random() < 0.3 and len(toks) > 1:
+            toks[rng.integers(0, len(toks))] += 1
+        if op < 4:                                       # match (and pin)
+            m = pc.match(toks)
+            assert m.length % bs == 0
+            assert m.length <= (len(toks) - 1) // bs * bs
+            assert all(n.refs > 0 for n in m.nodes)
+            pinned.append((m, toks))
+        elif op < 7:                                     # insert
+            writes = pc.plan_insert(toks)
+            assert len({bid for bid, _ in writes}) == len(writes)
+            if not rings and len(writes) == len(toks) // bs:
+                # full insert + no ring rules → full round-trip
+                assert pc.peek(toks) == (len(toks) - 1) // bs * bs
+        elif op < 9 and pinned:                          # release one pin
+            m, _ = pinned.pop(rng.integers(0, len(pinned)))
+            pc.release(m)
+        elif op == 9 and not pinned and rng.random() < 0.1:
+            pc.reset()
+        # global invariants after every op
+        assert pc.blocks <= cap
+        assert all(n.refs >= 0 for n in pc._registry)
+        for m, toks in pinned:                           # pins survive
+            assert all(n in pc._registry for n in m.nodes)
+            assert np.array_equal(
+                np.concatenate([np.frombuffer(n.key, np.int32)
+                                for n in m.nodes])
+                if m.nodes else np.empty(0, np.int32),
+                toks[:m.length])
+    for m, _ in pinned:
+        pc.release(m)
+    assert all(n.refs == 0 for n in pc._registry)

@@ -1,0 +1,255 @@
+"""Serving-path tests for the radix prefix KV cache: greedy streams must
+be BIT-IDENTICAL cache-on vs cache-off across ragged, sliding-window, and
+weight-quantized (int8/bf16) paths — restored blocks are the bits a full
+prefill wrote, so there is no tolerance, only equality.  Also pins the
+engine's refusals (int8 KV storage, non-ragged stacks), warmup hygiene
+(probe blocks dropped), the fleet-shared trie, and the predictor's
+featurize memo (the classical-model twin of prefix caching)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.transformer import init_model
+from repro.serve import (ModelPredictor, PredictRequest, RadixPrefixCache,
+                         ReplicaRouter, Request, ServeEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke("qwen2-1.5b")                    # dense GQA, global attn
+    params, _ = init_model(KEY, cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_smoke("gemma3-1b")                     # sliding-window rings
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _shared_trace(cfg, *, prefix_len=24, n=6, lead_with_prefix=False,
+                  max_new=5, seed=3):
+    """Requests sharing a ``prefix_len``-token prefix (1 in 3 fully
+    random); deterministic in ``seed`` so cache-on and cache-off runs see
+    identical prompts."""
+    rng = np.random.default_rng(seed)
+    shared = np.random.default_rng(1000 + prefix_len).integers(
+        0, cfg.vocab_size, size=prefix_len).astype(np.int32)
+    reqs = []
+    if lead_with_prefix:                             # inserts valid_end=prefix_len
+        reqs.append(Request(prompt=shared.copy(), max_new_tokens=max_new))
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, size=4 + i % 4).astype(np.int32)
+        if i % 3 == 0 and not lead_with_prefix:
+            p = rng.integers(0, cfg.vocab_size,
+                             size=prefix_len + 4 + i % 4).astype(np.int32)
+        else:
+            p = np.concatenate([shared, tail])
+        reqs.append(Request(prompt=p, max_new_tokens=max_new))
+    return reqs
+
+
+def _streams(engine, reqs):
+    return [list(r.out_tokens) for r in engine.run(reqs)]
+
+
+class TestEngineParity:
+    def test_ragged_global_bit_identical_with_hits(self, qwen):
+        cfg, params = qwen
+        base = _streams(ServeEngine(cfg, params, batch_size=3, max_seq=96),
+                        _shared_trace(cfg))
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ServeEngine(cfg, params, batch_size=3, max_seq=96,
+                         prefix_cache=pc)
+        served = on.run(_shared_trace(cfg))
+        assert [list(r.out_tokens) for r in served] == base
+        s = pc.stats()
+        assert s["cached_tokens"] > 0 and s["hits"] > 0
+        assert any(r.cached_prefill > 0 for r in served)
+
+    def test_second_identical_prefix_wave_hits(self, qwen):
+        cfg, params = qwen
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ServeEngine(cfg, params, batch_size=3, max_seq=96,
+                         prefix_cache=pc)
+        base = _streams(ServeEngine(cfg, params, batch_size=3, max_seq=96),
+                        _shared_trace(cfg, seed=8))
+        assert _streams(on, _shared_trace(cfg, seed=8)) == base
+        first = pc.stats()["cached_tokens"]
+        # the re-run re-prefills the SAME prompts: every shared prefix hits
+        assert _streams(on, _shared_trace(cfg, seed=8)) == base
+        assert pc.stats()["cached_tokens"] > first
+
+    def test_windowed_hit_parity(self, gemma):
+        """Sliding-window rings reuse a prefix only when its blocks were
+        extracted at a valid_end the window can still see — the
+        lead-with-prefix trace guarantees that, and streams stay exact."""
+        cfg, params = gemma
+        kw = dict(prefix_len=40, lead_with_prefix=True, n=5)
+        base = _streams(ServeEngine(cfg, params, batch_size=2, max_seq=96),
+                        _shared_trace(cfg, **kw))
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ServeEngine(cfg, params, batch_size=2, max_seq=96,
+                         prefix_cache=pc)
+        assert _streams(on, _shared_trace(cfg, **kw)) == base
+        assert pc.stats()["cached_tokens"] > 0
+
+    def test_windowed_truncation_still_exact(self, gemma):
+        """Prefix blocks extracted from LONGER prompts hold ring garbage
+        for windowed layers; the match must truncate (here: to zero) and
+        the streams must still be bit-identical."""
+        cfg, params = gemma
+        kw = dict(prefix_len=40, n=5)
+        base = _streams(ServeEngine(cfg, params, batch_size=2, max_seq=96),
+                        _shared_trace(cfg, **kw))
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ServeEngine(cfg, params, batch_size=2, max_seq=96,
+                         prefix_cache=pc)
+        assert _streams(on, _shared_trace(cfg, **kw)) == base
+        assert pc.stats()["cached_tokens"] == 0      # truncated, not corrupt
+
+    @pytest.mark.parametrize("q", ["int8", "bf16"])
+    def test_quantized_weights_parity(self, qwen, q):
+        cfg0, params = qwen
+        cfg = dataclasses.replace(cfg0, quantize=q)
+        base = _streams(ServeEngine(cfg, params, batch_size=2, max_seq=96),
+                        _shared_trace(cfg, n=5))
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ServeEngine(cfg, params, batch_size=2, max_seq=96,
+                         prefix_cache=pc)
+        assert _streams(on, _shared_trace(cfg, n=5)) == base
+        assert pc.stats()["cached_tokens"] > 0
+
+    def test_warmup_drops_probe_blocks(self, qwen):
+        cfg, params = qwen
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        engine = ServeEngine(cfg, params, batch_size=3, max_seq=96,
+                             prefix_cache=pc)
+        engine.warmup()
+        s = pc.stats()
+        assert s["requests"] == 0 and pc.blocks == 0
+
+
+class TestEngineRefusals:
+    def test_int8_kv_storage_refused(self, qwen):
+        cfg0, params = qwen
+        cfg = dataclasses.replace(cfg0, cache_dtype="int8")
+        with pytest.raises(ValueError, match="cache_dtype"):
+            ServeEngine(cfg, params, batch_size=2, max_seq=96,
+                        prefix_cache=RadixPrefixCache())
+
+    def test_non_ragged_stack_refused(self):
+        cfg = get_smoke("mamba2-2.7b")               # recurrent: no ragged
+        params, _ = init_model(jax.random.PRNGKey(2), cfg)
+        with pytest.raises(ValueError, match="ragged"):
+            ServeEngine(cfg, params, batch_size=2, max_seq=64,
+                        prefix_cache=RadixPrefixCache())
+
+    def test_rebind_different_layout_refused(self, qwen, gemma):
+        cfg_q, params_q = qwen
+        cfg_g, params_g = gemma
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=16)
+        ServeEngine(cfg_q, params_q, batch_size=2, max_seq=96,
+                    prefix_cache=pc)
+        with pytest.raises(ValueError, match="already bound"):
+            ServeEngine(cfg_g, params_g, batch_size=2, max_seq=96,
+                        prefix_cache=pc)
+
+
+class TestFleet:
+    def test_fleet_parity_and_shared_trie(self, qwen):
+        cfg, params = qwen
+        off = ReplicaRouter(cfg, params, slots_per_replica=2,
+                            max_replicas=2, max_seq=96)
+        base = sorted(tuple(r.out_tokens)
+                      for r in off.run(_shared_trace(cfg, n=8)))
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ReplicaRouter(cfg, params, slots_per_replica=2,
+                           max_replicas=2, max_seq=96, prefix_cache=pc)
+        on.warmup()
+        assert pc.stats()["requests"] == 0           # warmup left no trace
+        got = sorted(tuple(r.out_tokens)
+                     for r in on.run(_shared_trace(cfg, n=8)))
+        assert got == base
+        rep = on.report()
+        assert rep["prefix_cache"]["cached_tokens"] > 0
+        # a prefix prefilled by one replica's lane hits for the other:
+        # more hit requests than any single 2-slot replica admitted waves
+        assert rep["prefix_cache"]["hits"] > 0
+
+    def test_scheduler_tenant_hit_rate_accounting(self, qwen):
+        cfg, params = qwen
+        pc = RadixPrefixCache(block_size=8, capacity_blocks=64)
+        on = ReplicaRouter(cfg, params, slots_per_replica=2,
+                           max_replicas=1, max_seq=96, prefix_cache=pc)
+        reqs = _shared_trace(cfg, n=6)
+        for r in reqs:
+            r.tenant = "acme"
+        on.run(reqs)
+        t = on.report()["tenants"]["acme"]
+        assert t["prefill_tokens"] == sum(len(r.prompt) for r in reqs)
+        assert t["cached_prefill_tokens"] > 0
+        assert 0.0 < t["prefix_hit_rate"] < 1.0
+
+
+# --------------------------------------------------------------------------- #
+# predictor featurize memo (satellite: classical twin of the prefix cache)
+# --------------------------------------------------------------------------- #
+class TestFeaturizeMemo:
+    @staticmethod
+    def _service(cache=512):
+        calls = {"rows": 0}
+
+        def featurize(rows):
+            calls["rows"] += len(rows)
+            return np.stack([np.full(3, float(len(r)), np.float32)
+                             for r in rows])
+
+        svc = ModelPredictor(model=None, max_batch=4,
+                             predict_fn=lambda X: X.sum(axis=1),
+                             featurize=featurize, featurize_cache=cache)
+        return svc, calls
+
+    def test_repeated_rows_skip_featurizer(self):
+        svc, calls = self._service()
+        svc.submit(PredictRequest(features=np.asarray(["ab", "cde"], object)))
+        svc.flush()
+        assert calls["rows"] == 2
+        svc.submit(PredictRequest(features=np.asarray(["ab", "cde"], object)))
+        out = svc.flush()
+        assert calls["rows"] == 2                    # all hits, no new calls
+        np.testing.assert_allclose(out[0].result, [6.0, 9.0])
+        assert svc.featurize_hits == 2 and svc.featurize_misses == 2
+
+    def test_within_flush_duplicates_featurized_once(self):
+        svc, calls = self._service()
+        svc.submit(PredictRequest(features=np.asarray(["x", "x", "yy"],
+                                                      object)))
+        out = svc.flush()
+        assert calls["rows"] == 2                    # "x" featurized once
+        np.testing.assert_allclose(out[0].result, [3.0, 3.0, 6.0])
+
+    def test_memo_off_matches_memo_on(self):
+        rows = np.asarray(["aa", "b", "aa", "ccc"], object)
+        on, _ = self._service(cache=512)
+        off, calls_off = self._service(cache=0)
+        on.submit(PredictRequest(features=rows.copy()))
+        off.submit(PredictRequest(features=rows.copy()))
+        r_on, r_off = on.flush()[0].result, off.flush()[0].result
+        np.testing.assert_array_equal(r_on, r_off)
+        assert off._feat_memo is None and calls_off["rows"] == 4
+
+    def test_lru_bound_and_eviction(self):
+        svc, calls = self._service(cache=2)
+        for batch in (["a", "b"], ["c"], ["a"]):     # "a" evicted by "c"
+            svc.submit(PredictRequest(features=np.asarray(batch, object)))
+            svc.flush()
+        assert len(svc._feat_memo) <= 2
+        assert calls["rows"] == 4                    # "a" re-featurized
+        assert svc.report()["featurize_misses"] == 4

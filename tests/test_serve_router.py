@@ -188,13 +188,14 @@ class TestReplicaRouter:
         assert rep["light"]["latency_p50"] < rep["heavy"]["latency_p50"]
 
     def test_slo_rejection_accounting(self, smoke_lm):
-        """With a warmed EMA predicting 10 s service against a 1 ms SLO,
-        every SLO-carrying request is shed; no-SLO traffic still serves."""
+        """With a warmed EMA predicting 10 s per generated token against a
+        1 ms SLO, every SLO-carrying request is shed; no-SLO traffic still
+        serves."""
         cfg, params = smoke_lm
         router = ReplicaRouter(cfg, params, slots_per_replica=2,
                                max_replicas=1, max_seq=64,
                                admission="reject")
-        router._ema_service = 10.0
+        router._ema_tok = 10.0
         router._completions = 5
         doomed = [_req(tenant="slo", slo_ms=1.0, n=5, max_new=2, seed=i,
                        vocab=cfg.vocab_size) for i in range(3)]
@@ -216,14 +217,35 @@ class TestReplicaRouter:
         router = ReplicaRouter(cfg, params, slots_per_replica=2,
                                max_replicas=1, max_seq=64,
                                admission="degrade")
-        router._ema_service = 10.0
+        router._ema_tok = 1.0
         router._completions = 5
-        # deadline between 0.5× and 1× the predicted service → degrade path
+        # full length predicts 8 + 0.1*5 = 8.5 s, half predicts 4.5 s —
+        # a 7 s deadline lands between the two → degrade path
         req = _req(slo_ms=7000.0, n=5, max_new=8, vocab=cfg.vocab_size)
         router.run([req])
         assert req.degraded and req.done and not req.rejected
         assert len(req.out_tokens) == 4
         assert router.report()["degraded"] == 1
+
+    def test_admission_scales_with_request_length(self, smoke_lm):
+        """Regression: the pre-fix per-REQUEST EMA predicted the same
+        completion time for a 4-token and a 40-token generation, so both
+        were admitted or both shed.  Normalized per generated token, the
+        long request must be rejected at the same queue state where the
+        short one (same prompt, same SLO) is admitted."""
+        cfg, params = smoke_lm
+        router = ReplicaRouter(cfg, params, slots_per_replica=2,
+                               max_replicas=1, max_seq=64,
+                               admission="reject")
+        router._ema_tok = 1.0
+        router._completions = 5
+        long_req = _req(tenant="long", slo_ms=10_000.0, n=5, max_new=40,
+                        seed=0, vocab=cfg.vocab_size)
+        short_req = _req(tenant="short", slo_ms=10_000.0, n=5, max_new=4,
+                         seed=1, vocab=cfg.vocab_size)
+        router.run([long_req, short_req])
+        assert long_req.rejected and not long_req.done
+        assert short_req.done and not short_req.rejected
 
     def test_autoscale_up_then_drain(self, smoke_lm):
         """A burst spins extra lane groups up; the drain after the burst
