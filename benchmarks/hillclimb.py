@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import sys
 
@@ -139,10 +138,11 @@ def main() -> None:
                    multi_pod=spec.get("multi_pod", False),
                    rules=spec.get("rules", DEFAULT_RULES),
                    cfg_override=spec.get("cfg"), mesh=mesh)
+    from repro.checkpoint.store import atomic_write_json
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, args.run + ".json")
-    with open(path, "w") as f:
-        json.dump(res, f, indent=1)
+    # atomic publish — a killed run must not leave a torn result file
+    atomic_write_json(path, res, indent=1)
     print(f"{args.run}: compute={res['compute_s']:.3e}s "
           f"memory={res['memory_s']:.3e}s collective={res['collective_s']:.3e}s "
           f"bottleneck={res['bottleneck']} -> {path}")

@@ -13,6 +13,8 @@
   pipeline_e2e          (beyond paper)  Fig. A2 pipeline fit+serve rows/sec
   elastic_ssp           (beyond paper)  BSP vs SSP under a straggler +
                                         elastic host-kill recovery timing
+  shardlint_bench       (beyond paper)  lint + hot-path jaxpr audit cost
+                                        vs the 30s CI budget
 
 (streaming_throughput, model_search, serving_throughput, and elastic_ssp
 can also run standalone: ``python -m benchmarks.<name>``.)
@@ -35,7 +37,7 @@ def main() -> None:
     from benchmarks import (als_scaling, collective_schedules, elastic_ssp,
                             kernel_bench, loc_table, logreg_scaling,
                             model_search, pipeline_e2e, roofline,
-                            serving_throughput)
+                            serving_throughput, shardlint_bench)
 
     devices = "1,2,4" if args.fast else "1,2,4,8"
     jobs = [
@@ -49,6 +51,7 @@ def main() -> None:
         ("serving_throughput", serving_throughput.main, []),
         ("pipeline_e2e", pipeline_e2e.main, []),
         ("elastic_ssp", elastic_ssp.main, []),
+        ("shardlint_bench", shardlint_bench.main, ["--check"]),
     ]
     failures = 0
     for name, fn, argv in jobs:

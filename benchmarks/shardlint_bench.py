@@ -1,0 +1,57 @@
+"""ShardLint cost benchmark (beyond-paper; guards the CI budget).
+
+Times the two static-analysis legs CI runs on every push — the AST lint
+over ``src/`` and the jaxpr audit of every registered hot path — and
+enforces the <30s audit budget so the tier-1 leg cannot silently grow
+into the nightly tier.  ``--check`` exits nonzero on budget overrun OR
+on any finding (the same contract as ``python -m repro.analysis``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks._util import emit
+
+AUDIT_BUDGET_S = 30.0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on findings or budget overrun")
+    args = ap.parse_args()
+
+    from repro.analysis import lint_paths, run_audit
+
+    t0 = time.perf_counter()
+    lint_findings = lint_paths(["src"])
+    lint_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    audit_findings, audited, skipped = run_audit()
+    audit_s = time.perf_counter() - t0
+
+    emit("shardlint", [{
+        "lint_s": round(lint_s, 2),
+        "lint_findings": len(lint_findings),
+        "audit_s": round(audit_s, 2),
+        "hot_paths_audited": len(audited),
+        "hot_paths_skipped": len(skipped),
+        "audit_findings": len(audit_findings),
+        "audit_budget_s": AUDIT_BUDGET_S,
+    }])
+    for f in lint_findings + audit_findings:
+        print(f"  {f}", file=sys.stderr)
+
+    if args.check:
+        if lint_findings or audit_findings:
+            sys.exit("shardlint: findings present")
+        if audit_s > AUDIT_BUDGET_S:
+            sys.exit(f"shardlint: audit took {audit_s:.1f}s "
+                     f"(budget {AUDIT_BUDGET_S:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Static analysis & sanitizers for the distributed hot paths (ShardLint).
+
+Three tiers, one currency (:class:`~repro.analysis.finding.Finding`):
+
+1. **Jaxpr auditor** (:mod:`repro.analysis.jaxpr_audit` +
+   :mod:`repro.analysis.manifest`) — walks the closed jaxprs of every
+   registered hot path and flags host callbacks/transfers, f64
+   promotions, non-donated large carries, and collectives on undeclared
+   mesh axes.  ``python -m repro.analysis audit --check``.
+2. **Retrace sentinel** (:mod:`repro.analysis.retrace`) — runtime
+   compile-event instrumentation; ``assert_no_retrace()`` turns the
+   "a warmed loop never recompiles" claims into asserted contracts.
+3. **AST lint** (:mod:`repro.analysis.lint`) — repo-invariant rules over
+   the source tree (traced-value leaks, wallclock/RNG in traced code,
+   donated-buffer reuse, non-atomic store writes, jit-in-loop).
+   ``python -m repro.analysis lint src/``.
+"""
+from .finding import Finding, format_findings
+from .jaxpr_audit import AuditSpec, audit_jaxpr, iter_eqns
+from .lint import RULES, lint_file, lint_paths, lint_source
+from .manifest import (AuditTarget, HotPath, audit_hot_path, hot_paths,
+                       register, run_audit)
+from .retrace import (CompileWatch, RetraceError, assert_no_retrace,
+                      watch_compiles)
+
+__all__ = [
+    "AuditSpec", "AuditTarget", "CompileWatch", "Finding", "HotPath",
+    "RULES", "RetraceError", "assert_no_retrace", "audit_hot_path",
+    "audit_jaxpr", "format_findings", "hot_paths", "iter_eqns",
+    "lint_file", "lint_paths", "lint_source", "register", "run_audit",
+    "watch_compiles",
+]

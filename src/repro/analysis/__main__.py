@@ -1,0 +1,91 @@
+"""CLI for the analysis subsystem.
+
+    python -m repro.analysis lint [paths...]          # default: src/
+    python -m repro.analysis audit [--check] [--require-mesh] [names...]
+    python -m repro.analysis audit --list
+
+Exit code 0 = clean, 1 = findings (or, with ``--require-mesh``, skipped
+mesh paths).  Output is one finding per line, stable order, so the CI
+log diff against a previous run is meaningful.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from .finding import format_findings
+    from .lint import lint_paths
+
+    paths = args.paths or ["src"]
+    findings = lint_paths(paths)
+    if findings:
+        print(format_findings(findings))
+        print(f"\nlint: {len(findings)} finding(s) in {', '.join(paths)}",
+              file=sys.stderr)
+        return 1
+    print(f"lint: clean ({', '.join(paths)})")
+    return 0
+
+
+def _cmd_audit(args: argparse.Namespace) -> int:
+    from .finding import format_findings
+    from .manifest import hot_paths, run_audit
+
+    if args.list:
+        for hp in hot_paths():
+            mesh = (f"  [needs {hp.requires_devices} devices]"
+                    if hp.requires_devices > 1 else "")
+            print(f"{hp.name:32s} {hp.description}{mesh}")
+        return 0
+
+    start = time.perf_counter()
+    findings, audited, skipped = run_audit(args.names or None,
+                                           require_mesh=args.require_mesh)
+    elapsed = time.perf_counter() - start
+
+    for name in audited:
+        hits = [f for f in findings if f.where == f"hotpath:{name}"]
+        print(f"{'FAIL' if hits else 'ok  '} {name}")
+    for name in skipped:
+        print(f"skip {name} (not enough devices)")
+    if findings:
+        print()
+        print(format_findings(findings))
+    print(f"\naudit: {len(audited)} hot path(s) audited, "
+          f"{len(skipped)} skipped, {len(findings)} finding(s) "
+          f"in {elapsed:.1f}s", file=sys.stderr)
+    if args.check:
+        return 1 if findings else 0
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    lint_p = sub.add_parser("lint", help="AST lint over source trees")
+    lint_p.add_argument("paths", nargs="*", help="files/dirs (default: src)")
+    lint_p.set_defaults(fn=_cmd_lint)
+
+    audit_p = sub.add_parser("audit", help="jaxpr audit of registered hot paths")
+    audit_p.add_argument("names", nargs="*",
+                         help="hot-path names (default: all)")
+    audit_p.add_argument("--check", action="store_true",
+                         help="exit 1 on any finding")
+    audit_p.add_argument("--require-mesh", action="store_true",
+                         help="fail instead of skipping paths that need "
+                              "more devices")
+    audit_p.add_argument("--list", action="store_true",
+                         help="list registered hot paths and exit")
+    audit_p.set_defaults(fn=_cmd_audit)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""The one currency every analysis tier trades in: a ``Finding``.
+
+A finding is a *located, rule-attributed* claim that an invariant is
+violated — the jaxpr auditor, the AST linter, and the retrace sentinel
+all emit the same shape so the CLI, CI leg, and tests can treat them
+uniformly.  Rules are short kebab-case ids (``"host-callback"``,
+``"traced-leak"``); ``where`` is either a ``path:line`` source location
+(lint) or a ``hotpath:<name>`` manifest location (audit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+__all__ = ["Finding", "format_findings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location."""
+
+    rule: str       # kebab-case rule id, stable across releases
+    where: str      # "src/repro/foo.py:42" or "hotpath:serve.fused_decode"
+    message: str    # human-readable: what tripped and why it matters
+
+    def __str__(self) -> str:
+        return f"{self.where}: [{self.rule}] {self.message}"
+
+
+def format_findings(findings: Iterable[Finding]) -> str:
+    """Render findings one per line, grouped by rule, stable order."""
+    items: List[Finding] = sorted(findings,
+                                  key=lambda f: (f.rule, f.where, f.message))
+    return "\n".join(str(f) for f in items)

@@ -1,0 +1,538 @@
+"""Repo-invariant AST lint: `python -m repro.analysis lint src/`.
+
+Five rules over plain Python source (no imports executed):
+
+* ``traced-leak`` — ``float()`` / ``bool()`` / ``.item()`` /
+  ``np.asarray()`` / ``jax.device_get()`` on values inside a traced
+  region (a function that is jitted, shard_mapped, vmapped, or passed to
+  ``lax.scan``/``fori_loop``/``while_loop``/``cond``): each forces a
+  concrete value out of the tracer — either a TracerConversionError at
+  runtime or, worse, a silent device→host sync per step.
+* ``wallclock-in-trace`` — ``time.time()`` / ``perf_counter()`` /
+  ``datetime.now()`` / ``np.random.*`` / ``random.*`` inside a traced
+  region: the value is baked in at trace time, so the code reads like it
+  samples per step but doesn't (and defeats determinism contracts).
+* ``donated-reuse`` — a variable passed at a ``donate_argnums`` position
+  of a locally-jitted function and *read again* afterwards without
+  rebinding: the buffer may already be aliased/invalidated.
+* ``non-atomic-write`` — inside store directories (``checkpoint/``,
+  ``core/exchange.py``): ``open(path, "w"/"wb"/"a")``, ``np.save``,
+  ``np.savez``, ``json.dump`` targeting anything that is not a temp
+  file.  Durable state must go tmp → fsync → ``os.replace`` or a
+  concurrent reader sees a torn file — the race class PR 7 patched
+  reactively in ``read_at_most``.
+* ``jit-in-loop`` — ``jax.jit(...)`` constructed inside a ``for``/
+  ``while`` body: a fresh jit wrapper has a fresh cache, so the loop
+  recompiles every iteration.
+
+Allowlist: append ``# lint: allow[rule-id] <one-line justification>`` on
+the flagged line (or the line above) to suppress a finding.  The
+justification is mandatory by convention and reviewed like code.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .finding import Finding
+
+__all__ = ["lint_paths", "lint_file", "lint_source", "RULES"]
+
+RULES = (
+    "traced-leak",
+    "wallclock-in-trace",
+    "donated-reuse",
+    "non-atomic-write",
+    "jit-in-loop",
+)
+
+# Files whose writes must be atomic (tmp -> fsync -> os.replace).  Matched
+# as substrings of the normalized relative path.
+STORE_PATH_MARKERS = ("checkpoint/", "core/exchange.py")
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([a-z0-9\-,\s]+)\]")
+
+# Entry points that trace the callable handed to them.
+_TRACING_CALLEES = {
+    "jit", "shard_map", "vmap", "pmap", "scan", "fori_loop",
+    "while_loop", "cond", "switch", "checkpoint", "remat", "grad",
+    "value_and_grad", "custom_vjp", "custom_jvp", "make_jaxpr",
+}
+
+_TRACED_LEAK_CALLS = {"float", "bool"}  # int() is legit on static shapes
+_TRACED_LEAK_ATTRS = {"item", "tolist", "block_until_ready"}
+_TRACED_LEAK_QUALIFIED = {
+    ("np", "asarray"), ("numpy", "asarray"),
+    ("np", "array"), ("numpy", "array"),
+    ("jax", "device_get"),
+}
+
+_WALLCLOCK_QUALIFIED = {
+    ("time", "time"), ("time", "monotonic"), ("time", "perf_counter"),
+    ("time", "process_time"), ("time", "time_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"),
+}
+_WALLCLOCK_MODULES = {"random"}          # random.random(), random.randint…
+_WALLCLOCK_NP_RANDOM = True              # np.random.* inside trace
+
+
+@dataclasses.dataclass
+class _Ctx:
+    path: str            # display path (as passed by the caller)
+    tree: ast.AST
+    lines: Sequence[str]
+    allows: Dict[int, Set[str]]
+    findings: List[Finding]
+
+    def flag(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        allowed = self.allows.get(line, set()) | self.allows.get(line - 1, set())
+        if rule in allowed or "*" in allowed:
+            return
+        self.findings.append(Finding(rule, f"{self.path}:{line}", message))
+
+
+def _parse_allows(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    allows: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            allows[i] = rules
+    return allows
+
+
+# ---------------------------------------------------------------------------
+# traced-region discovery
+# ---------------------------------------------------------------------------
+
+def _callee_name(func: ast.AST) -> Optional[str]:
+    """Terminal name of a call target: jax.jit -> 'jit', jit -> 'jit'."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_tracing_call(call: ast.Call) -> bool:
+    name = _callee_name(call.func)
+    if name in _TRACING_CALLEES:
+        return True
+    # functools.partial(jax.jit, ...) used as a decorator factory
+    if name == "partial" and call.args:
+        inner = _callee_name(call.args[0])
+        return inner in _TRACING_CALLEES
+    return False
+
+
+def _decorated_traced(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        if isinstance(dec, ast.Call) and _is_tracing_call(dec):
+            return True
+        if _callee_name(dec) in _TRACING_CALLEES:
+            return True
+    return False
+
+
+class _TracedRegions(ast.NodeVisitor):
+    """Collect (start, end) line spans of functions that jax traces.
+
+    A function is traced if it is decorated with a tracing transform, or
+    appears (by name or inline) as an argument to one.  Nested defs
+    inherit the region (the tracer doesn't stop at an inner ``def``).
+    """
+
+    def __init__(self) -> None:
+        self.spans: List[Tuple[int, int]] = []
+        self._fn_defs: Dict[str, ast.AST] = {}
+        self._traced_names: Set[str] = set()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._fn_defs[node.name] = node
+        if _decorated_traced(node):
+            self._add(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _is_tracing_call(node):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, (ast.Lambda, ast.Call)):
+                    if isinstance(arg, ast.Lambda):
+                        self._add(arg)
+                elif isinstance(arg, ast.Name):
+                    self._traced_names.add(arg.id)
+        self.generic_visit(node)
+
+    def _add(self, node: ast.AST) -> None:
+        start = getattr(node, "lineno", None)
+        end = getattr(node, "end_lineno", None)
+        if start is not None and end is not None:
+            self.spans.append((start, end))
+
+    def finish(self) -> List[Tuple[int, int]]:
+        for name in self._traced_names:
+            node = self._fn_defs.get(name)
+            if node is not None:
+                self._add(node)
+        return sorted(set(self.spans))
+
+
+def _in_spans(line: int, spans: Sequence[Tuple[int, int]]) -> bool:
+    return any(start <= line <= end for start, end in spans)
+
+
+# ---------------------------------------------------------------------------
+# rule: traced-leak + wallclock-in-trace (walk calls inside traced spans)
+# ---------------------------------------------------------------------------
+
+def _qualified(func: ast.AST) -> Optional[Tuple[str, str]]:
+    """('np', 'asarray') for np.asarray; ('datetime','now') for datetime.datetime.now."""
+    if isinstance(func, ast.Attribute):
+        base = func.value
+        if isinstance(base, ast.Name):
+            return (base.id, func.attr)
+        if isinstance(base, ast.Attribute):
+            return (base.attr, func.attr)
+    return None
+
+
+def _check_traced_calls(ctx: _Ctx, spans: Sequence[Tuple[int, int]]) -> None:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        line = getattr(node, "lineno", 0)
+        if not _in_spans(line, spans):
+            continue
+
+        # --- traced-leak ---------------------------------------------------
+        if isinstance(node.func, ast.Name) and node.func.id in _TRACED_LEAK_CALLS:
+            if node.args and not isinstance(node.args[0], ast.Constant):
+                ctx.flag(
+                    "traced-leak", node,
+                    f"'{node.func.id}()' on a value inside a traced region "
+                    f"forces concretization (host sync or TracerError).")
+        qual = _qualified(node.func)
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _TRACED_LEAK_ATTRS):
+            ctx.flag(
+                "traced-leak", node,
+                f"'.{node.func.attr}()' inside a traced region pulls the "
+                f"value to host.")
+        elif qual in _TRACED_LEAK_QUALIFIED:
+            ctx.flag(
+                "traced-leak", node,
+                f"'{qual[0]}.{qual[1]}()' inside a traced region is a "
+                f"device->host transfer per step.")
+
+        # --- wallclock-in-trace -------------------------------------------
+        if qual in _WALLCLOCK_QUALIFIED:
+            ctx.flag(
+                "wallclock-in-trace", node,
+                f"'{qual[0]}.{qual[1]}()' inside a traced region is frozen "
+                f"at trace time — it will not advance per step.")
+        elif (qual and qual[0] in _WALLCLOCK_MODULES
+              and isinstance(node.func, ast.Attribute)
+              and isinstance(node.func.value, ast.Name)):
+            # bare `random.x()` only: jax.random.x / np.random.x reach here
+            # with qual ("random", x) too but are not the stdlib module
+            ctx.flag(
+                "wallclock-in-trace", node,
+                f"'{qual[0]}.{qual[1]}()' (host RNG) inside a traced region "
+                f"is sampled once at trace time; use jax.random with a "
+                f"threaded key.")
+        elif _WALLCLOCK_NP_RANDOM and isinstance(node.func, ast.Attribute):
+            base = node.func.value
+            if (isinstance(base, ast.Attribute) and base.attr == "random"
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id in ("np", "numpy")):
+                ctx.flag(
+                    "wallclock-in-trace", node,
+                    f"'np.random.{node.func.attr}()' inside a traced region "
+                    f"is sampled once at trace time; use jax.random.")
+
+
+# ---------------------------------------------------------------------------
+# rule: donated-reuse
+# ---------------------------------------------------------------------------
+
+def _donated_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """If `call` is jax.jit(..., donate_argnums=...), return the positions."""
+    if _callee_name(call.func) != "jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            value = kw.value
+            if isinstance(value, ast.Constant) and isinstance(value.value, int):
+                return (value.value,)
+            if isinstance(value, (ast.Tuple, ast.List)):
+                out = []
+                for elt in value.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                        out.append(elt.value)
+                return tuple(out)
+    return None
+
+
+class _DonatedReuse(ast.NodeVisitor):
+    """Within each function body, track names jitted with donate_argnums,
+    calls through them, and loads of donated arguments after the call."""
+
+    def __init__(self, ctx: _Ctx) -> None:
+        self.ctx = ctx
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._scan_scope(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Module(self, node: ast.Module) -> None:
+        self._scan_scope(node)
+        self.generic_visit(node)
+
+    def _scan_scope(self, scope: ast.AST) -> None:
+        donating: Dict[str, Tuple[int, ...]] = {}
+        # calls: (call line, donated arg name, rebound names at that stmt)
+        events: List[Tuple[int, str]] = []
+        rebinds: Dict[str, List[int]] = {}
+
+        body = getattr(scope, "body", [])
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Assign):
+                    value = node.value
+                    if isinstance(value, ast.Call):
+                        pos = _donated_positions(value)
+                        if pos is not None:
+                            for tgt in node.targets:
+                                if isinstance(tgt, ast.Name):
+                                    donating[tgt.id] = pos
+                    for tgt in node.targets:
+                        for name_node in ast.walk(tgt):
+                            if isinstance(name_node, ast.Name):
+                                rebinds.setdefault(name_node.id, []).append(
+                                    node.lineno)
+                if isinstance(node, ast.Call):
+                    fn_name = (node.func.id
+                               if isinstance(node.func, ast.Name) else None)
+                    if fn_name in donating:
+                        for pos in donating[fn_name]:
+                            if pos < len(node.args):
+                                arg = node.args[pos]
+                                if isinstance(arg, ast.Name):
+                                    events.append((node.lineno, arg.id))
+
+        if not events:
+            return
+        # any Load of a donated name strictly after the donating call,
+        # with no rebind in between, is a reuse
+        loads: Dict[str, List[Tuple[int, ast.Name]]] = {}
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                loads.setdefault(node.id, []).append((node.lineno, node))
+        for call_line, name in events:
+            for load_line, load_node in loads.get(name, []):
+                if load_line <= call_line:
+                    continue
+                rebound = any(call_line <= r <= load_line
+                              for r in rebinds.get(name, []))
+                if not rebound:
+                    self.ctx.flag(
+                        "donated-reuse", load_node,
+                        f"'{name}' was passed at a donate_argnums position "
+                        f"on line {call_line} and read again here: the "
+                        f"buffer may already be invalidated.")
+                    break  # one finding per (call, name) pair
+
+
+# ---------------------------------------------------------------------------
+# rule: non-atomic-write
+# ---------------------------------------------------------------------------
+
+def _expr_text(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ""
+
+
+def _is_tmpish(node: ast.AST, tmp_names: Set[str]) -> bool:
+    """Heuristic: the write target is a temp path (later os.replace'd)."""
+    if isinstance(node, ast.Name) and node.id in tmp_names:
+        return True
+    text = _expr_text(node).lower()
+    return "tmp" in text or "temp" in text
+
+
+def _write_mode(call: ast.Call) -> Optional[str]:
+    """Mode string of an open() call if it writes, else None."""
+    mode_node: Optional[ast.AST] = None
+    if len(call.args) >= 2:
+        mode_node = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode_node = kw.value
+    if mode_node is None:
+        return None
+    if isinstance(mode_node, ast.Constant) and isinstance(mode_node.value, str):
+        mode = mode_node.value
+        if any(ch in mode for ch in "wax+"):
+            return mode
+    return None
+
+
+def _check_atomic_writes(ctx: _Ctx) -> None:
+    # names bound by `with open(tmpish, ...) as f:` are themselves tmp-ish
+    tmp_names: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                call = item.context_expr
+                if (isinstance(call, ast.Call)
+                        and _callee_name(call.func) == "open"
+                        and call.args and _is_tmpish(call.args[0], set())
+                        and isinstance(item.optional_vars, ast.Name)):
+                    tmp_names.add(item.optional_vars.id)
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            if (_callee_name(call.func) == "open" and call.args
+                    and _is_tmpish(call.args[0], set())):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        tmp_names.add(tgt.id)
+        # names assigned from tempfile APIs are tmp-ish
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            qual = _qualified(node.value.func)
+            if qual and qual[0] == "tempfile":
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        tmp_names.add(tgt.id)
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _callee_name(node.func)
+        qual = _qualified(node.func)
+
+        if name == "open" and node.args:
+            mode = _write_mode(node)
+            if mode and not _is_tmpish(node.args[0], tmp_names):
+                ctx.flag(
+                    "non-atomic-write", node,
+                    f"open(..., {mode!r}) writes a durable path in place; "
+                    f"write to a '<path>.<pid>.tmp', fsync, then os.replace "
+                    f"so readers never see a torn file.")
+        elif qual in (("np", "save"), ("numpy", "save"),
+                      ("np", "savez"), ("numpy", "savez"),
+                      ("np", "savez_compressed"), ("numpy", "savez_compressed")):
+            if node.args and not _is_tmpish(node.args[0], tmp_names):
+                ctx.flag(
+                    "non-atomic-write", node,
+                    f"{qual[0]}.{qual[1]} targets a durable path directly; "
+                    f"route through an atomic tmp->fsync->os.replace writer.")
+        elif qual and qual[1] == "dump" and qual[0] in ("json", "pickle"):
+            if len(node.args) >= 2 and not _is_tmpish(node.args[1], tmp_names):
+                ctx.flag(
+                    "non-atomic-write", node,
+                    f"{qual[0]}.dump into a non-temp handle; route through "
+                    f"an atomic tmp->fsync->os.replace writer.")
+
+
+# ---------------------------------------------------------------------------
+# rule: jit-in-loop
+# ---------------------------------------------------------------------------
+
+class _JitInLoop(ast.NodeVisitor):
+    def __init__(self, ctx: _Ctx) -> None:
+        self.ctx = ctx
+        self._loop_depth = 0
+
+    def _loop(self, node: ast.AST) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = _loop
+    visit_While = _loop
+    visit_AsyncFor = _loop
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # a def inside a loop body resets loop context: the jit inside it
+        # is constructed at call time, not per loop iteration here
+        saved, self._loop_depth = self._loop_depth, 0
+        self.generic_visit(node)
+        self._loop_depth = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+    visit_Lambda = visit_FunctionDef            # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._loop_depth > 0 and _callee_name(node.func) == "jit":
+            self.ctx.flag(
+                "jit-in-loop", node,
+                "jax.jit(...) constructed inside a loop body gets a fresh "
+                "compile cache each iteration — hoist it (or cache by key).")
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _is_store_path(path: str) -> bool:
+    normalized = path.replace(os.sep, "/")
+    return any(marker in normalized for marker in STORE_PATH_MARKERS)
+
+
+def lint_source(source: str, path: str = "<string>", *,
+                store_rules: Optional[bool] = None) -> List[Finding]:
+    """Lint one source text.  ``store_rules`` forces/suppresses the
+    atomic-write rule; by default it applies iff ``path`` is a store path."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Finding("syntax-error", f"{path}:{exc.lineno or 0}",
+                        f"cannot parse: {exc.msg}")]
+    lines = source.splitlines()
+    ctx = _Ctx(path=path, tree=tree, lines=lines,
+               allows=_parse_allows(lines), findings=[])
+
+    finder = _TracedRegions()
+    finder.visit(tree)
+    spans = finder.finish()
+
+    _check_traced_calls(ctx, spans)
+    _DonatedReuse(ctx).visit(tree)
+    _JitInLoop(ctx).visit(tree)
+    if store_rules if store_rules is not None else _is_store_path(path):
+        _check_atomic_writes(ctx)
+
+    return ctx.findings
+
+
+def lint_file(path: str, *, store_rules: Optional[bool] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    return lint_source(source, path, store_rules=store_rules)
+
+
+def lint_paths(paths: Iterable[str]) -> List[Finding]:
+    """Lint every ``.py`` file under the given files/directories."""
+    findings: List[Finding] = []
+    for root in paths:
+        if os.path.isfile(root):
+            findings.extend(lint_file(root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fname in sorted(filenames):
+                if fname.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, fname)))
+    return findings

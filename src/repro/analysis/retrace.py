@@ -1,0 +1,117 @@
+"""Retrace sentinel: turn "a warmed hot loop never recompiles" into an assert.
+
+jax emits monitoring events for every backend compilation
+(``/jax/core/compile/backend_compile_duration`` fires exactly once per
+XLA compile; a cache hit emits nothing).  This module installs a pair of
+process-wide listeners — once, lazily — and exposes:
+
+* :func:`watch_compiles` — context manager yielding a :class:`CompileWatch`
+  whose ``.compiles`` counts backend compiles inside the block.
+* :func:`assert_no_retrace` — context manager that raises
+  :class:`RetraceError` if more than ``allow`` compiles happen inside the
+  block.  This is the asserted form of the PR-3 "one compiled epoch
+  serves the whole search" and PR-8 "a fixed fleet never compiles
+  mid-stream" claims.
+
+Listeners are never unregistered (jax's unregister API is private and
+fragile); instead a stack of active watches receives each event.  The
+listeners themselves are free when no watch is active, so importing this
+module costs nothing on the hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, List
+
+__all__ = [
+    "CompileWatch",
+    "RetraceError",
+    "assert_no_retrace",
+    "watch_compiles",
+]
+
+# One event per XLA backend compile; cache hits emit no event at all.
+# (A single user-visible trace may legitimately produce several of these
+# — e.g. ``jnp.ones`` compiles its own fill program — which is exactly
+# what we want to count: *any* compile inside a warmed loop is a miss.)
+_BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_watches: List["CompileWatch"] = []
+_installed = False
+
+
+class RetraceError(AssertionError):
+    """A region that promised zero recompiles compiled anyway."""
+
+
+class CompileWatch:
+    """Counts backend compiles observed while the watch is active."""
+
+    def __init__(self) -> None:
+        self.compiles = 0
+
+    def _record(self) -> None:
+        self.compiles += 1
+
+
+def _on_event_duration(event: str, duration: float, **kwargs) -> None:
+    if event != _BACKEND_COMPILE_EVENT:
+        return
+    with _lock:
+        active = list(_watches)
+    for watch in active:
+        watch._record()
+
+
+def _install_listener() -> None:
+    global _installed
+    with _lock:
+        if _installed:
+            return
+        import jax.monitoring
+
+        jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
+        _installed = True
+
+
+@contextlib.contextmanager
+def watch_compiles() -> Iterator[CompileWatch]:
+    """Count jax backend compiles that happen inside the ``with`` block."""
+    _install_listener()
+    watch = CompileWatch()
+    with _lock:
+        _watches.append(watch)
+    try:
+        yield watch
+    finally:
+        with _lock:
+            _watches.remove(watch)
+
+
+@contextlib.contextmanager
+def assert_no_retrace(what: str = "", *, allow: int = 0) -> Iterator[CompileWatch]:
+    """Fail with :class:`RetraceError` if the block compiles anything.
+
+    Args:
+      what: label for the guarded region, used in the error message.
+      allow: number of compiles to tolerate (default 0 — fully warmed).
+
+    Usage::
+
+        router.warmup(prompt_lens=[16, 64])
+        with assert_no_retrace("fleet serve after warmup"):
+            router.run(requests)
+    """
+    with watch_compiles() as inner:
+        yield inner
+    count = inner.compiles
+    if count > allow:
+        label = f" in {what!r}" if what else ""
+        raise RetraceError(
+            f"expected at most {allow} jax compile(s){label}, observed "
+            f"{count}: a warmed hot loop retraced.  Look for shape drift, "
+            f"weak-type promotion, non-hashable static args, or a jit "
+            f"constructed inside the loop."
+        )

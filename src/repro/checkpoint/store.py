@@ -44,6 +44,8 @@ __all__ = [
     "prune_checkpoints",
     "save_artifact",
     "load_artifact",
+    "atomic_write_text",
+    "atomic_write_json",
 ]
 
 # anchored on both ends: "step_3.npz.tmp", "xstep_3.npz", "notes.txt" never match
@@ -88,6 +90,35 @@ def _fsync_dir(dirname: str) -> None:
         os.fsync(fd)
     finally:
         os.close(fd)
+
+
+def atomic_write_text(path: str, text: str) -> str:
+    """Durably publish ``text`` at ``path``: pid-unique tmp sibling →
+    fsync → atomic ``os.replace`` → directory fsync.  The primitive every
+    small host-side result/marker file goes through (the
+    ``non-atomic-write`` lint rule enforces this inside store
+    directories): a reader either sees the old complete file or the new
+    complete file, never a torn one."""
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    try:
+        with open(tmp, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    _fsync_dir(parent)
+    return path
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: Optional[int] = 2) -> str:
+    """Atomic JSON publish (see :func:`atomic_write_text`): the standard
+    sink for benchmark/launcher result emission."""
+    return atomic_write_text(path, json.dumps(obj, indent=indent) + "\n")
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,

@@ -33,6 +33,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.checkpoint.store import (
+    atomic_write_text,
     _STEP_RE,
     latest_step,
     prune_checkpoints,
@@ -111,11 +112,10 @@ class ParamStore:
         """Graceful departure: peers stop waiting for this host as soon as
         they next scan (the ``drop`` fault / an elastic scale-down)."""
         d = self._host_dir(self.host_id)
-        os.makedirs(d, exist_ok=True)
-        with open(os.path.join(d, _LEFT_MARKER), "w") as f:
-            f.write("left")
-            f.flush()
-            os.fsync(f.fileno())
+        # atomic publish: a peer scanning mid-write must see either no
+        # marker or a complete one, and the rename makes the departure
+        # durable before has_left() can observe it
+        atomic_write_text(os.path.join(d, _LEFT_MARKER), "left")
 
     # ------------------------------------------------------------------ #
     # observing peers

@@ -313,8 +313,11 @@ class DistributedRunner:
         across segments.
         """
         upd: UpdateFn = update or _default_update
-        rounds = jnp.arange(start_round, start_round + num_rounds)
+        rounds = jnp.asarray(np.arange(start_round,
+                                       start_round + num_rounds,
+                                       dtype=np.int32))
         donate_argnums = (0,) if self.donate else ()
+        init_state = self._canonical_state(init_state)
         if self.donate:
             # donate a private copy, never the caller's buffer: init_state is
             # typically a params field (w_init) the caller may reuse
@@ -371,6 +374,27 @@ class DistributedRunner:
             raise ValueError(
                 f"rows-per-shard {per_shard} must divide into "
                 f"chunks_per_epoch={chunks_per_epoch}")
+
+    def _canonical_state(self, state: Any) -> Any:
+        """Replicate the state carry onto the mesh (no-op when emulated or
+        already placed).  Segmented callers alternate host-built carries
+        (first segment) with device outputs of the previous segment;
+        without one canonical input sharding the jitted epoch compiles
+        TWICE for the same shapes — the exact miss
+        ``repro.analysis.assert_no_retrace`` flags on the rung loop."""
+        if self.mesh is None or not jax.core.trace_state_clean():
+            # placement is a host-side concern; under an outer trace the
+            # caller governs placement and a staged device_put would read
+            # as a per-step transfer in the jaxpr audit
+            return state
+        sharding = jax.sharding.NamedSharding(self.mesh, P())
+
+        def place(x):
+            if getattr(x, "sharding", None) == sharding:
+                return x
+            return jax.device_put(x, sharding)
+
+        return jax.tree.map(place, state)
 
     def _epoch_fn(self, local_step: LocalStep, upd: UpdateFn, combine: str,
                   chunks: int) -> Callable:
@@ -430,6 +454,27 @@ class DistributedRunner:
 
         return epoch
 
+    def epoch_fn(self, local_step: LocalStep,
+                 update: Optional[UpdateFn] = None, *,
+                 combine: str = "mean", chunks_per_epoch: int = 1) -> Callable:
+        """The cached jitted one-epoch function ``(state, window, rounds)
+        -> state`` that :meth:`run_epochs` drives.
+
+        Public so callers can warm it ahead of a latency-sensitive stream
+        and so :mod:`repro.analysis` can audit the exact jaxpr the epoch
+        loop executes (same cache, same donation flags — not a
+        reconstruction)."""
+        upd: UpdateFn = update or _default_update
+        chunks = int(chunks_per_epoch)
+        if chunks < 1:
+            raise ValueError(f"chunks_per_epoch must be >= 1, got {chunks}")
+        cache_key = (local_step, upd, combine, chunks)
+        fn = self._epoch_cache.get(cache_key)
+        if fn is None:
+            fn = self._epoch_fn(local_step, upd, combine, chunks)
+            self._cache_put(cache_key, fn)
+        return fn
+
     def run_epochs(self, stream: Iterator, init_state: Any,
                    local_step: LocalStep, num_epochs: int, *,
                    combine: str = "mean", update: Optional[UpdateFn] = None,
@@ -469,15 +514,9 @@ class DistributedRunner:
         """
         if num_epochs < start_epoch:
             raise ValueError(f"num_epochs {num_epochs} < start_epoch {start_epoch}")
-        upd: UpdateFn = update or _default_update
         chunks = int(chunks_per_epoch)
-        if chunks < 1:
-            raise ValueError(f"chunks_per_epoch must be >= 1, got {chunks}")
-        cache_key = (local_step, upd, combine, chunks)
-        epoch_fn = self._epoch_cache.get(cache_key)
-        if epoch_fn is None:
-            epoch_fn = self._epoch_fn(local_step, upd, combine, chunks)
-            self._cache_put(cache_key, epoch_fn)
+        epoch_fn = self.epoch_fn(local_step, update, combine=combine,
+                                 chunks_per_epoch=chunks)
 
         before = after = ()
         if callbacks:
@@ -485,7 +524,7 @@ class DistributedRunner:
                                              fire_callbacks, split_callbacks)
             before, after = split_callbacks(callbacks)
 
-        state = init_state
+        state = self._canonical_state(init_state)
         if self.donate:
             # donate a private copy, never the caller's buffer
             state = jax.tree.map(jnp.copy, state)
@@ -510,14 +549,20 @@ class DistributedRunner:
                         f"returned {sorted(set(swaps) - {'state'})} (hyper/"
                         f"active swaps need the stacked loop)")
                 if "state" in swaps:
-                    state = swaps["state"]
+                    # swapped states come from host callbacks: re-place them
+                    # so the compiled epoch's input sharding never drifts
+                    state = self._canonical_state(swaps["state"])
                     if self.donate:
                         state = jax.tree.map(jnp.copy, state)
             batch = next(stream)
             window = batch["data"] if isinstance(batch, dict) else batch
             self._check_window(window, chunks)
             rows = int(window.shape[0])
-            rounds = jnp.arange(e * chunks, (e + 1) * chunks, dtype=jnp.int32)
+            # numpy-built + device_put: jnp.arange(start, ...) compiles a
+            # different tiny program for zero vs nonzero starts, so the
+            # first post-resume/rung epoch would trip the retrace sentinel
+            rounds = jnp.asarray(np.arange(e * chunks, (e + 1) * chunks,
+                                           dtype=np.int32))
             state = epoch_fn(state, window, rounds)
             done = e + 1
             if after:
@@ -536,7 +581,9 @@ class DistributedRunner:
                         f"returned {sorted(set(swaps) - {'state'})} (hyper/"
                         f"active swaps need the stacked loop)")
                 if "state" in swaps:
-                    state = swaps["state"]
+                    # swapped states come from host callbacks: re-place them
+                    # so the compiled epoch's input sharding never drifts
+                    state = self._canonical_state(swaps["state"])
                     if self.donate:
                         state = jax.tree.map(jnp.copy, state)
             if checkpoint is not None and done % checkpoint.every_epochs == 0:
@@ -824,8 +871,8 @@ class DistributedRunner:
                 mine = self.partition_apply(
                     window, local_step, broadcast=(state, r), combine="sum")
             else:
-                rounds = jnp.arange(e * chunks, (e + 1) * chunks,
-                                    dtype=jnp.int32)
+                rounds = jnp.asarray(np.arange(e * chunks, (e + 1) * chunks,
+                                               dtype=np.int32))
                 mine = epoch_fn(state, window, rounds)
             mine = jax.tree.map(np.asarray, jax.device_get(mine))
             store.publish(e, mine)

@@ -17,7 +17,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import dataclasses
-import json
 import re
 import time
 from functools import partial
@@ -28,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.checkpoint.store import atomic_write_json
 from repro.configs import ARCH_IDS, SHAPES, InputShape, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import ArchConfig
@@ -450,9 +450,10 @@ def main() -> None:
                   f"bottleneck={res['bottleneck']} "
                   f"(lower {res['lower_s']}s compile {res['compile_s']}s)")
             if args.out:
-                os.makedirs(args.out, exist_ok=True)
-                with open(os.path.join(args.out, tag + ".json"), "w") as f:
-                    json.dump(res, f, indent=1)
+                # atomic publish: a sweep killed mid-write must not leave a
+                # torn result file for the comparison tooling to parse
+                atomic_write_json(os.path.join(args.out, tag + ".json"),
+                                  res, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,10 @@
+"""MUST-FLAG: in-place durable writes (imagine this lives in checkpoint/)."""
+import json
+
+import numpy as np
+
+
+def publish_state(path, arrays, meta):
+    np.savez(path, **arrays)             # flag: torn file on crash
+    with open(path + ".json", "w") as f:  # flag: in-place truncate-write
+        json.dump(meta, f)               # flag: dump into non-temp handle

@@ -1,0 +1,21 @@
+"""MUST-PASS: the tmp -> fsync -> os.replace publish idiom."""
+import json
+import os
+
+import numpy as np
+
+
+def publish_state(path, arrays, meta):
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+    meta_tmp = path + ".json.tmp"
+    with open(meta_tmp, "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(meta_tmp, path + ".json")

@@ -1,0 +1,15 @@
+"""MUST-FLAG: reading a buffer after donating it."""
+import jax
+
+
+def train(state, window, rounds):
+    step = jax.jit(_epoch, donate_argnums=(0,))
+    new_state = step(state, window, rounds)
+    # flag: `state` was donated on the call above — its buffer may be
+    # aliased into new_state; reading it now is use-after-donate
+    drift = new_state - state
+    return new_state, drift
+
+
+def _epoch(state, window, rounds):
+    return state + window.sum() * rounds.size

@@ -1,0 +1,13 @@
+"""MUST-PASS: the donated name is rebound by the call (the carry idiom)."""
+import jax
+
+
+def train(state, window, rounds):
+    step = jax.jit(_epoch, donate_argnums=(0,))
+    for _ in range(3):
+        state = step(state, window, rounds)   # rebind: old buffer gone
+    return state
+
+
+def _epoch(state, window, rounds):
+    return state + window.sum() * rounds.size

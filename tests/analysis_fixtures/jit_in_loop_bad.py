@@ -1,0 +1,10 @@
+"""MUST-FLAG: a fresh jit wrapper built every loop iteration."""
+import jax
+
+
+def serve_waves(waves, params):
+    outs = []
+    for wave in waves:
+        step = jax.jit(lambda p, w: p @ w)   # flag: fresh cache per wave
+        outs.append(step(params, wave))
+    return outs

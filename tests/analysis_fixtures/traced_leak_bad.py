@@ -1,0 +1,21 @@
+"""MUST-FLAG: traced-value leaks inside jitted bodies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def loss_with_float(w, x):
+    scale = float(jnp.mean(x))          # flag: float() on a tracer
+    return w * scale
+
+
+def outer(xs):
+    def body(carry, x):
+        if bool(x > 0):                 # flag: bool() on a tracer
+            carry = carry + x
+        return carry, x.item()          # flag: .item() on a tracer
+    return jax.lax.scan(body, 0.0, xs)
+
+
+step = jax.jit(lambda w: np.asarray(w) + 1)   # flag: host transfer in jit

@@ -1,0 +1,22 @@
+"""MUST-PASS: the same shapes of code, leak-free."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def loss(w, x):
+    scale = jnp.mean(x)                  # stays traced
+    return w * scale
+
+
+def outer(xs):
+    def body(carry, x):
+        carry = jnp.where(x > 0, carry + x, carry)   # traced branch
+        return carry, x
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def host_side(w):
+    # float()/np.asarray OUTSIDE any traced region are fine
+    return float(np.asarray(w).mean())

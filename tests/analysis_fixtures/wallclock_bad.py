@@ -1,0 +1,19 @@
+"""MUST-FLAG: wallclock / host RNG frozen into traced code."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def stamped_step(w):
+    t = time.time()                      # flag: frozen at trace time
+    return w + t
+
+
+@jax.jit
+def noisy_step(w):
+    noise = np.random.normal()           # flag: host RNG sampled once
+    jitter = random.random()             # flag: host RNG sampled once
+    return w + noise + jitter

@@ -1,0 +1,16 @@
+"""MUST-PASS: timing outside traces, jax.random with threaded keys inside."""
+import time
+
+import jax
+
+
+@jax.jit
+def noisy_step(w, key):
+    return w + jax.random.normal(key, w.shape)   # keyed RNG is traced
+
+
+def timed_run(w, key):
+    start = time.perf_counter()          # host timing outside the trace
+    out = noisy_step(w, key)
+    out.block_until_ready()
+    return out, time.perf_counter() - start

@@ -11,6 +11,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.analysis import assert_no_retrace
 from repro.configs import get_smoke
 from repro.models.transformer import init_model
 from repro.serve import (FairQueue, QueueAutoscaler, ReplicaRouter, Request,
@@ -266,17 +267,21 @@ class TestReplicaRouter:
         assert router.report()["finished"] == 12
 
     def test_warmup_precompiles_serving_shapes(self, smoke_lm):
+        """PR-8 contract, asserted: after warmup a fixed fleet serves
+        whole waves without a single jax compile — the retrace sentinel
+        counts backend-compile events directly instead of inferring from
+        the span-step cache keys."""
         cfg, params = smoke_lm
         router = ReplicaRouter(cfg, params, slots_per_replica=2,
                                max_replicas=2, max_seq=64)
-        router.warmup(prompt_lens=[5, 13])
-        before = dict(router._span_step)
-        reqs = [_req(n=n, max_new=3, seed=i, vocab=cfg.vocab_size)
-                for i, n in enumerate((5, 9, 13))]
-        router.run(reqs)
-        assert all(r.done for r in reqs)
-        # the fixed-fleet span was compiled by warmup, not mid-stream
-        assert set(before) == set(router._span_step)
+        router.warmup(prompt_lens=[5, 9, 13])
+        with assert_no_retrace("3-wave fleet serve after warmup"):
+            for wave in range(3):
+                reqs = [_req(n=n, max_new=3, seed=10 * wave + i,
+                             vocab=cfg.vocab_size)
+                        for i, n in enumerate((5, 9, 13))]
+                router.run(reqs)
+                assert all(r.done for r in reqs)
 
     def test_wave_bucket_ladder(self, smoke_lm):
         cfg, params = smoke_lm

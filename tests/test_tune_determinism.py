@@ -70,6 +70,40 @@ for i, cfg in enumerate(CONFIGS):
             max_iter=EPOCHS, schedule="allreduce", **cfg))
     out["solo"][str(i)] = np.asarray(model.weights).tolist()
 
+# the PR-3 compile-once contract, asserted by the retrace sentinel
+# instead of inferred from timings: after the first rung segment warms
+# the stacked epoch, later segments (new start_epoch, flipped active
+# mask, backfilled round offsets) reuse the SAME compiled epoch on the
+# real 8-device mesh — zero jax compiles.
+import jax.numpy as jnp
+from repro.analysis import assert_no_retrace
+from repro.core.optimizer import sgd_trial_round
+from repro.core.runner import DistributedRunner
+
+K = 4
+runner = DistributedRunner(mesh=mesh, schedule="allreduce")
+grad = lambda vec, w, hyper: (jax.nn.sigmoid(vec[1:] @ w) - vec[0]) * vec[1:]
+step = sgd_trial_round(grad, local_batch_size=4)
+hyper = {"lr": jnp.full((K,), 0.1, jnp.float32),
+         "decay": jnp.ones((K,), jnp.float32),
+         "l1": jnp.zeros((K,), jnp.float32)}
+win = jnp.asarray(np.concatenate([y[:, None], X], 1))
+stream = iter(lambda: {"data": win}, None)
+trials = jnp.zeros((K, D), jnp.float32)
+
+# masks/offsets are built (and their tiny host->device converts compiled)
+# before the guard: the contract under test is the EPOCH staying warm
+act2 = jnp.asarray([True, False, True, True])
+act3 = jnp.asarray([True, False, False, True])
+offs = jnp.asarray([0, 0, 0, 2], jnp.int32)
+warm = runner.run_stacked_epochs(stream, trials, hyper, step, 1)
+with assert_no_retrace("stacked rung segments after the first"):
+    seg2 = runner.run_stacked_epochs(stream, warm, hyper, step, 2,
+                                     start_epoch=1, active=act2)
+    runner.run_stacked_epochs(stream, seg2, hyper, step, 3, start_epoch=2,
+                              active=act3, round_offsets=offs)
+out["segment_retraces"] = 0
+
 print("RESULT::" + json.dumps(out))
 """
 
@@ -78,6 +112,9 @@ def test_search_deterministic_across_schedules_and_execution():
     out = result_json(run_devices_subprocess(_PROGRAM))
     runs = out["runs"]
     assert len(runs) == 6
+    # the sentinel inside the subprocess raised (and the run died) if any
+    # post-warmup rung segment recompiled; 0 here means it was reached
+    assert out["segment_retraces"] == 0
 
     ref_key = "allreduce/stacked"
     ref = runs[ref_key]
